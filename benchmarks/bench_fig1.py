@@ -1,0 +1,52 @@
+"""Paper Figure 1: communication cost to reach tau = 0.85 as a function of
+the compression ratio, under the ALIE attack with varying Byzantine counts.
+
+Quick mode (default, used by ``benchmarks.run``): ratios {0.05, 1.0} x
+f in {0, 5}. Full mode (--full): ratios {0.01, 0.05, 0.1, 0.3, 0.5, 1.0} x
+f in {0, 1, 3, 5, 9} — the paper's grid.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import TAU, comm_cost_to_tau, emit
+import time
+
+
+def run(full: bool = False, out: str | None = None):
+    ratios = [0.01, 0.05, 0.1, 0.3, 0.5, 1.0] if full else [0.05, 1.0]
+    fs = [0, 1, 3, 5, 9] if full else [0, 5]
+    rows = []
+    base = {}
+    for f in fs:
+        for ratio in ratios:
+            t0 = time.perf_counter()
+            r = comm_cost_to_tau(ratio=ratio, f=f, attack="alie",
+                                 steps=600 if full else 400)
+            wall = (time.perf_counter() - t0) * 1e6
+            rows.append(r)
+            key = (f,)
+            if ratio == 1.0:
+                base[key] = r["comm_bytes_to_tau"]
+            saving = ""
+            if key in base and base[key] not in (0, float("inf")) \
+                    and r["comm_bytes_to_tau"] != float("inf"):
+                saving = "saving=%.1f%%" % (
+                    100 * (1 - r["comm_bytes_to_tau"] / base[key]))
+            emit(f"fig1/ratio={ratio}/f={f}", wall,
+                 f"bytes_to_tau={r['comm_bytes_to_tau']:.3g} "
+                 f"acc={r['final_acc']:.3f} rounds={r['rounds']} {saving}")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as fh:
+            json.dump(rows, fh, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    run(full="--full" in sys.argv,
+        out="results/fig1_full.json" if "--full" in sys.argv
+        else "results/fig1_quick.json")

@@ -1,0 +1,63 @@
+"""Global vs local sparsification (paper §3.3): convergence distance after T
+rounds as a function of compression ratio, averaged over seeds. Exhibits the
+O(1/T)-vs-O(1/sqrt(T)) separation of Theorems 1 and 2 empirically."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (AlgorithmConfig, AggregatorConfig, AttackConfig,
+                        SparsifierConfig, apply_direction, init_state,
+                        server_round)
+
+D = 64
+
+
+def _dist(ratio, local, steps, seed):
+    n, f = 12, 2
+    tg = jax.random.normal(jax.random.PRNGKey(1), (n, D)) * 0.2 + 1.0
+    cfg = AlgorithmConfig(
+        name="rosdhb", n_workers=n, f=f, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=ratio, local=local),
+        aggregator=AggregatorConfig(name="cwtm", f=f, pre_nnm=True),
+        attack=AttackConfig(name="alie", z=1.5))
+    st = init_state(cfg, D)
+    th = jnp.zeros(D)
+    k = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def one(th, st, k):
+        k, sk = jax.random.split(k)
+        r, st, _ = server_round(cfg, st, th[None, :] - tg, sk)
+        return apply_direction(th, r, cfg.gamma), st, k
+
+    for _ in range(steps):
+        th, st, k = one(th, st, k)
+    return float(jnp.linalg.norm(th - jnp.mean(tg[f:], 0)))
+
+
+def run():
+    out = {}
+    for ratio in (0.05, 0.2):
+        for local in (False, True):
+            t0 = time.perf_counter()
+            ds = [_dist(ratio, local, steps=600, seed=s) for s in range(3)]
+            wall = (time.perf_counter() - t0) * 1e6
+            tag = "local" if local else "global"
+            out[(ratio, tag)] = float(np.mean(ds))
+            emit(f"glob_vs_local/ratio={ratio}/{tag}", wall,
+                 f"dist={np.mean(ds):.4f}+-{np.std(ds):.4f}")
+    for ratio in (0.05, 0.2):
+        g, l = out[(ratio, "global")], out[(ratio, "local")]
+        emit(f"glob_vs_local/ratio={ratio}/advantage", 0.0,
+             f"local/global={l / max(g, 1e-9):.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

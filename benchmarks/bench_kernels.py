@@ -1,0 +1,46 @@
+"""Kernel-path microbenchmarks: XLA oracle timings for the three Pallas
+kernels' reference paths (the TPU kernels themselves are compile-validated in
+interpret mode; wall numbers here track the CPU oracle for regression)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.cwtm import cwtm_ref
+from repro.kernels.flash_attention import attention_ref
+from repro.kernels.randk import block_compress_ref, momentum_scatter_ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    x = jax.random.normal(key, (16, 1_000_000))
+    us = time_fn(jax.jit(lambda a: cwtm_ref(a, 3)), x, iters=5)
+    emit("kernels/cwtm_ref/n16_d1e6", us,
+         f"GB/s={(x.size*4/(us/1e6))/1e9:.2f}")
+
+    d, bs = 1 << 20, 512
+    g = jax.random.normal(key, (d,))
+    idx = jnp.arange(0, d // bs, 16, dtype=jnp.int32)  # 1/16 of blocks
+    us = time_fn(jax.jit(lambda a: block_compress_ref(a, idx, bs, 16.0)), g,
+                 iters=5)
+    emit("kernels/randk_compress_ref/d1M", us, f"k={idx.shape[0]*bs}")
+
+    payload = jax.random.normal(key, (idx.shape[0] * bs,))
+    us = time_fn(jax.jit(
+        lambda a, p: momentum_scatter_ref(a, p, idx, bs, 0.9)), g, payload,
+        iters=5)
+    emit("kernels/momentum_scatter_ref/d1M", us, "")
+
+    q = jax.random.normal(key, (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    us = time_fn(jax.jit(lambda a, b: attention_ref(a, b, b)), q, k, iters=3)
+    flops = 2 * 2 * 1024 * 1024 * 8 * 64
+    emit("kernels/attention_ref/s1024", us,
+         f"GFLOP/s={(flops/(us/1e6))/1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

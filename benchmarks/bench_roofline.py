@@ -1,0 +1,56 @@
+"""Roofline report (deliverable g): reads the dry-run JSON and prints the
+per-(arch x shape x mesh) three-term roofline table for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import emit
+
+DEFAULT = "results/dryrun_final.json"
+
+
+def load(path: str = DEFAULT):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(path: str = DEFAULT, markdown: bool = False):
+    reports = load(path)
+    if reports is None:
+        emit("roofline/missing", 0.0, f"run dryrun --all first ({path})")
+        return None
+    ok = [r for r in reports if r.get("ok")]
+    if markdown:
+        print("| arch | shape | mesh | compute ms | memory ms | collective "
+              "ms | bottleneck | peak GiB/chip | useful FLOPs |")
+        print("|---|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        rf = r["roofline"]
+        peak = (r["memory"]["peak_bytes_per_chip"] / 2**30
+                if r.get("memory") else float("nan"))
+        uf = rf.get("useful_flops_fraction")
+        if markdown:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| {rf['compute_s']*1e3:.3f} | {rf['memory_s']*1e3:.3f} "
+                  f"| {rf['collective_s']*1e3:.3f} | {rf['bottleneck']} "
+                  f"| {peak:.2f} | {uf:.3f} |" if uf is not None else "")
+        else:
+            emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                 rf["compute_s"] * 1e6,
+                 f"mem_us={rf['memory_s']*1e6:.1f} "
+                 f"coll_us={rf['collective_s']*1e6:.1f} "
+                 f"bottleneck={rf['bottleneck']} peakGiB={peak:.2f} "
+                 f"useful={uf if uf is None else round(uf, 3)}")
+    bad = [r for r in reports if not r.get("ok")]
+    for r in bad:
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0, "FAILED")
+    return ok
+
+
+if __name__ == "__main__":
+    run(markdown="--markdown" in sys.argv)

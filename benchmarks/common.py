@@ -1,0 +1,86 @@
+"""Shared benchmark utilities: timing, CSV output, the paper's protocol."""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+TAU = 0.85  # the paper's target accuracy threshold
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV line per measurement: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.2f},{derived}")
+    sys.stdout.flush()
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall microseconds per call (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+# --------------------------------------------------------------------------
+# the paper's Section-4 protocol: train to tau, report communication bytes
+# --------------------------------------------------------------------------
+
+# learning rates tuned per compression ratio under f=0 (the paper's own
+# tuning protocol, Section 4)
+GAMMA_BY_RATIO: Dict[float, float] = {
+    0.01: 0.01, 0.05: 0.05, 0.1: 0.05, 0.3: 0.1, 0.5: 0.1, 1.0: 0.2,
+}
+
+
+def comm_cost_to_tau(*, ratio: float, f: int, attack: str = "alie",
+                     algo: str = "rosdhb", agg: str = "cwtm",
+                     n_honest: int = 10, steps: int = 600,
+                     per_worker: int = 800, batch: int = 60,
+                     gamma: Optional[float] = None, seed: int = 0,
+                     tau: float = TAU) -> Dict:
+    """Run the paper's experiment for one (ratio, f) cell.
+
+    Returns dict with comm bytes to reach tau (or inf), final accuracy,
+    rounds used.
+    """
+    from repro.core import (AlgorithmConfig, AggregatorConfig, AttackConfig,
+                            Simulator, SparsifierConfig)
+    from repro.data import SyntheticMNIST
+    from repro.models import cnn_accuracy, cnn_init, cnn_loss
+
+    n = n_honest + f
+    gamma = gamma if gamma is not None else GAMMA_BY_RATIO.get(ratio, 0.05)
+    ds = SyntheticMNIST(n_workers=n, per_worker=per_worker, seed=seed)
+    cfg = AlgorithmConfig(
+        name=algo, n_workers=n, f=f, gamma=gamma, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=ratio),
+        aggregator=(AggregatorConfig(name="mean") if agg == "mean"
+                    else AggregatorConfig(name=agg, f=max(f, 1))),
+        attack=AttackConfig(name=attack))
+    sim = Simulator(loss_fn=cnn_loss, params0=cnn_init(jax.random.PRNGKey(0)),
+                    cfg=cfg, eval_fn=lambda p, b: {"acc": cnn_accuracy(p, b)})
+    st = sim.init(seed)
+    reached = {}
+
+    def stop(m):
+        if m.get("acc", 0.0) >= tau and not reached:
+            reached["bytes"] = m["comm_bytes"]
+        return bool(reached)
+
+    st, hist = sim.run(st, ds.worker_batches(batch), steps=steps,
+                       eval_every=20, eval_batch=ds.eval_batch, stop_fn=stop)
+    return {
+        "ratio": ratio, "f": f, "gamma": gamma,
+        "comm_bytes_to_tau": reached.get("bytes", float("inf")),
+        "final_acc": hist["acc"][-1] if hist["acc"] else 0.0,
+        "rounds": hist["step"][-1] + 1 if hist["step"] else 0,
+    }

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig1            paper Figure 1: comm cost to tau vs compression ratio (ALIE)
+  table1          paper Table 1: RoSDHB vs Byz-DASHA-PAGE vs corner baselines
+  global_vs_local paper §3.3: coordinated vs uncoordinated sparsification
+  aggregators     (f,kappa)-robust rule microbench
+  kernels         kernel oracle microbench
+  roofline        per-(arch x shape x mesh) roofline from the dry-run JSON
+
+Every measurement prints one CSV line: ``name,us_per_call,derived``.
+``python -m benchmarks.run [--full] [--only NAME]``
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    only = None
+    if "--only" in sys.argv:
+        only = sys.argv[sys.argv.index("--only") + 1]
+
+    from benchmarks import (bench_aggregators, bench_breakdown, bench_fig1,
+                            bench_global_vs_local, bench_kernels,
+                            bench_momentum, bench_roofline, bench_table1)
+    suites = {
+        "aggregators": lambda: bench_aggregators.run(),
+        "kernels": lambda: bench_kernels.run(),
+        "table1": lambda: bench_table1.run(),
+        "momentum": lambda: bench_momentum.run(),
+        "breakdown": lambda: bench_breakdown.run(),
+        "global_vs_local": lambda: bench_global_vs_local.run(),
+        "fig1": lambda: bench_fig1.run(full=full,
+                                       out="results/fig1_quick.json"),
+        "roofline": lambda: bench_roofline.run(),
+    }
+    t0 = time.time()
+    for name, fn in suites.items():
+        if only and name != only:
+            continue
+        print(f"# --- {name} ---")
+        fn()
+    print(f"# total wall: {time.time()-t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver reproducing the paper's Section-4 experiment.
+
+Trains the ~12k-parameter CNN on the (synthetic, offline) MNIST-like dataset
+with 10 honest workers plus f Byzantine workers running ALIE, trimmed-mean
+aggregation, and RandK at a chosen compression ratio; reports accuracy and
+cumulative communication until the tau = 0.85 threshold — the protocol
+behind Figure 1.
+
+    PYTHONPATH=src python examples/paper_mnist.py --ratio 0.05 --f 5
+"""
+
+import argparse
+
+import jax
+
+from repro.core import (AlgorithmConfig, AggregatorConfig, AttackConfig,
+                        Simulator, SparsifierConfig)
+from repro.data import SyntheticMNIST
+from repro.models import cnn_accuracy, cnn_init, cnn_loss
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--ratio", type=float, default=0.05, help="k/d")
+    p.add_argument("--f", type=int, default=5, help="# Byzantine workers")
+    p.add_argument("--attack", default="alie")
+    p.add_argument("--gamma", type=float, default=None)
+    p.add_argument("--steps", type=int, default=400)
+    p.add_argument("--algo", default="rosdhb",
+                   choices=["rosdhb", "dasha", "robust_dgd", "dgd"])
+    p.add_argument("--local-masks", action="store_true",
+                   help="RoSDHB-Local (uncoordinated sparsification)")
+    args = p.parse_args()
+
+    # learning rates tuned per ratio at f=0 (the paper's tuning protocol)
+    gamma_by_ratio = {0.01: 0.01, 0.05: 0.05, 0.1: 0.05, 0.3: 0.1,
+                      0.5: 0.1, 1.0: 0.2}
+    gamma = args.gamma or gamma_by_ratio.get(args.ratio, 0.05)
+    n = 10 + args.f
+
+    ds = SyntheticMNIST(n_workers=n, per_worker=2000, seed=0)
+    cfg = AlgorithmConfig(
+        name=args.algo, n_workers=n, f=args.f, gamma=gamma, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=args.ratio,
+                                    local=args.local_masks),
+        aggregator=AggregatorConfig(name="cwtm", f=max(args.f, 1)),
+        attack=AttackConfig(name=args.attack))
+    sim = Simulator(loss_fn=cnn_loss, params0=cnn_init(jax.random.PRNGKey(0)),
+                    cfg=cfg, eval_fn=lambda p, b: {"acc": cnn_accuracy(p, b)})
+
+    print(f"algo={args.algo} n={n} f={args.f} attack={args.attack} "
+          f"k/d={args.ratio} gamma={gamma} "
+          f"uplink/round={sim.payload_bytes_per_round()/1e3:.1f}KB")
+    st = sim.init()
+    st, hist = sim.run(
+        st, ds.worker_batches(60), steps=args.steps, eval_every=20,
+        eval_batch=ds.eval_batch,
+        stop_fn=lambda m: m.get("acc", 0.0) >= 0.85)
+    for i in range(len(hist["step"])):
+        print(f"round {hist['step'][i]:4d}  loss={hist['loss'][i]:.3f}  "
+              f"acc={hist['acc'][i]:.3f}  comm={hist['comm_bytes'][i]/1e6:.2f}MB")
+    if hist["acc"] and hist["acc"][-1] >= 0.85:
+        print(f"reached tau=0.85 with {hist['comm_bytes'][-1]/1e6:.2f} MB "
+              f"total uplink")
+    else:
+        print("did not reach tau within the step budget")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: RoSDHB in 40 lines.
+
+Ten workers (two Byzantine, running ALIE) minimise heterogeneous quadratics;
+the server sees only 10% of each gradient per round (global RandK), keeps a
+Polyak momentum per worker, and aggregates with NNM+CWTM.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AlgorithmConfig, AggregatorConfig, AttackConfig,
+                        SparsifierConfig, apply_direction, init_state,
+                        server_round)
+
+D, N, F = 64, 10, 2
+
+cfg = AlgorithmConfig(
+    name="rosdhb", n_workers=N, f=F, gamma=0.1, beta=0.9,
+    sparsifier=SparsifierConfig(kind="randk", ratio=0.1),   # send 10% of d
+    aggregator=AggregatorConfig(name="cwtm", f=F, pre_nnm=True),
+    attack=AttackConfig(name="alie", z=1.5),
+)
+
+targets = jax.random.normal(jax.random.PRNGKey(0), (N, D)) * 0.1 + 1.0
+honest_opt = jnp.mean(targets[F:], axis=0)
+
+theta = jnp.zeros(D)
+state = init_state(cfg, D)
+key = jax.random.PRNGKey(1)
+
+for t in range(800):
+    key, sub = jax.random.split(key)
+    grads = theta[None, :] - targets          # worker i's local gradient
+    direction, state, aux = server_round(cfg, state, grads, sub)
+    theta = apply_direction(theta, direction, cfg.gamma)
+    if t % 200 == 0 or t == 799:
+        print(f"round {t:4d}  dist-to-honest-opt="
+              f"{float(jnp.linalg.norm(theta - honest_opt)):.4f}  "
+              f"uplink floats/worker={aux['payload_floats_per_worker']}"
+              f" (of {D})")
+
+assert float(jnp.linalg.norm(theta - honest_opt)) < 0.3
+print("OK: converged to the honest optimum under attack at 10x compression.")

@@ -1,0 +1,60 @@
+"""Pytree checkpointing to .npz + JSON metadata (orbax is not available
+offline; this covers the framework's save/restore contract including the
+RoSDHB server state)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
+    out = {}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: Any, metadata: Optional[Dict] = None,
+         step: Optional[int] = None) -> str:
+    """Save a pytree. Returns the checkpoint file path."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    meta = dict(metadata or {})
+    if step is not None:
+        meta["step"] = step
+    with open(path.replace(".npz", "") + ".meta.json", "w") as f:
+        json.dump(meta, f, indent=2)
+    return path
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    f = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in pth)
+        arr = f[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                       leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def latest_step(path: str) -> Optional[int]:
+    meta = path.replace(".npz", "") + ".meta.json"
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        return json.load(f).get("step")

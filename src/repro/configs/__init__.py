@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    LONG_CONTEXT_WINDOW,
+    ArchSpec,
+    InputShape,
+    get_arch,
+    list_archs,
+    model_for_shape,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "LONG_CONTEXT_WINDOW", "ArchSpec",
+    "InputShape", "get_arch", "list_archs", "model_for_shape",
+]

@@ -1,0 +1,36 @@
+"""Core of the paper's contribution: RoSDHB and its competitors.
+
+See DESIGN.md §1-3. The module split mirrors Algorithm 1:
+  compression  - step 1-4 (masks + unbiased sparsified reconstruction)
+  algorithms   - step 5-7 (momentum bank, robust aggregation, update) for
+                 rosdhb / dasha / robust_dgd / dgd
+  aggregators  - the (f, kappa)-robust rules F
+  attacks      - the Byzantine adversary
+  simulator    - paper-scale single-host training loop
+"""
+
+from repro.core.compression import (
+    SparsifierConfig, make_mask, make_masks, compress, payload_bytes,
+    payload_floats,
+)
+from repro.core.aggregators import AggregatorConfig, make_aggregator
+from repro.core.attacks import AttackConfig, apply_attack
+from repro.core.algorithms import (
+    AlgorithmConfig,
+    ServerState,
+    init_state,
+    server_round,
+    apply_direction,
+    theorem1_hparams,
+)
+from repro.core.simulator import Simulator, SimState
+
+__all__ = [
+    "SparsifierConfig", "make_mask", "make_masks", "compress",
+    "payload_bytes", "payload_floats",
+    "AggregatorConfig", "make_aggregator",
+    "AttackConfig", "apply_attack",
+    "AlgorithmConfig", "ServerState", "init_state", "server_round",
+    "apply_direction", "theorem1_hparams",
+    "Simulator", "SimState",
+]

@@ -1,0 +1,255 @@
+"""Server-side distributed learning algorithms on flat gradient banks.
+
+Everything here operates on flat stacked vectors ``[n_workers, D]`` — the
+launcher (``repro/launch``) is responsible for producing per-worker gradients
+from the sharded model and for resharding; these functions are pure math and
+are shared between the paper-scale simulator and the LLM-scale pjit path.
+
+Algorithms:
+  * ``rosdhb``       — the paper's Algorithm 1 (global or local sparsification
+                       chosen by the sparsifier config).
+  * ``dasha``        — Byz-DASHA-PAGE [29] with p=1 (full-gradient PAGE
+                       branch): per-worker MVR momentum + compressed-difference
+                       server mirrors + robust aggregation.
+  * ``robust_dgd``   — robust DGD, no compression (SOTA-without-compression
+                       corner, [3]).
+  * ``dgd``          — plain compressed DGD, non-robust (SOTA-without-
+                       robustness corner, [1]).
+
+The Byzantine adversary is simulated *on the wire quantity* each algorithm
+actually transmits: compressed gradients for rosdhb/dgd, raw gradients for
+robust_dgd, compressed differences (applied at the mirror level) for dasha.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attacks as A
+from repro.core import aggregators as G
+from repro.core import compression as C
+
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmConfig:
+    """Full specification of a Byzantine-robust compressed training run.
+
+    Attributes:
+      name: ``rosdhb`` | ``dasha`` | ``robust_dgd`` | ``dgd``.
+      n_workers: total workers n.
+      f: number of Byzantine workers (the first ``f`` indices).
+      gamma: learning rate.
+      beta: momentum coefficient; ``None`` -> Theorem 1 schedule
+        ``sqrt(1 - 24 gamma L)`` using ``smoothness_L``.
+      smoothness_L: Lipschitz constant estimate used by the beta schedule.
+      mvr_a: DASHA's MVR coefficient ``a`` (only for ``dasha``).
+      sparsifier: compression config.
+      aggregator: robust-aggregation config.
+      attack: Byzantine strategy.
+      momentum_dtype: dtype of the server momentum bank (f32 default;
+        bf16/fp8 are beyond-paper memory optimizations, see DESIGN §3).
+      server_compute_dtype: dtype the server does its momentum/aggregation
+        math in (f32 default; bf16 halves the per-round transient at LLM
+        scale — a beyond-paper optimization ablated in EXPERIMENTS §Perf).
+    """
+
+    name: str = "rosdhb"
+    n_workers: int = 10
+    f: int = 0
+    gamma: float = 0.05
+    beta: Optional[float] = 0.9
+    smoothness_L: float = 1.0
+    mvr_a: Optional[float] = None
+    sparsifier: C.SparsifierConfig = dataclasses.field(
+        default_factory=C.SparsifierConfig)
+    aggregator: G.AggregatorConfig = dataclasses.field(
+        default_factory=G.AggregatorConfig)
+    attack: A.AttackConfig = dataclasses.field(
+        default_factory=lambda: A.AttackConfig(name="none"))
+    momentum_dtype: str = "float32"
+    server_compute_dtype: str = "float32"
+    clip_norm: Optional[float] = None  # per-worker L2 clip before compression
+
+    @property
+    def honest(self) -> int:
+        return self.n_workers - self.f
+
+    def resolved_beta(self) -> float:
+        if self.beta is not None:
+            return self.beta
+        # Theorem 1: beta = sqrt(1 - 24 gamma L), requires gamma <= 1/(24 L).
+        val = 1.0 - 24.0 * self.gamma * self.smoothness_L
+        if val <= 0.0:
+            raise ValueError(
+                f"gamma={self.gamma} too large for Theorem-1 beta schedule "
+                f"(needs gamma <= 1/(24 L) = {1.0 / (24 * self.smoothness_L)})")
+        return math.sqrt(val)
+
+
+def theorem1_hparams(L: float, ratio: float,
+                     c: float = 23200.0) -> Tuple[float, float]:
+    """Theorem 1's (gamma, beta): gamma = (k/d)/(cL), beta = sqrt(1-24 gamma L).
+
+    The constant c = 23200 is the paper's (very conservative) analysis
+    constant; practical runs (the paper's own Section 4 included) use far
+    larger gamma with beta = 0.9.
+    """
+    gamma = ratio / (c * L)
+    beta = math.sqrt(1.0 - 24.0 * gamma * L)
+    return gamma, beta
+
+
+# --------------------------------------------------------------------------
+# State
+# --------------------------------------------------------------------------
+
+
+class ServerState(NamedTuple):
+    """Server-side algorithm state.
+
+    ``momentum``: RoSDHB per-worker momentum bank ``[n, D]`` (Algorithm 1,
+      step 5) — also reused as DASHA's MVR momentum.
+    ``mirror``: DASHA's server-side gradient mirrors ``h_i`` ``[n, D]``
+      (zeros-shaped [1, 1] placeholder for other algorithms).
+    ``prev_grad``: previous-round per-worker gradients for DASHA's MVR
+      correction (placeholder otherwise).
+    ``step``: iteration counter t.
+    """
+
+    momentum: jnp.ndarray
+    mirror: jnp.ndarray
+    prev_grad: jnp.ndarray
+    step: jnp.ndarray
+
+
+def init_state(cfg: AlgorithmConfig, d: int) -> ServerState:
+    n = cfg.n_workers
+    mdt = jnp.dtype(cfg.momentum_dtype)
+    zeros = jnp.zeros((n, d), mdt)
+    if cfg.name == "dasha":
+        return ServerState(zeros, zeros, jnp.zeros((n, d), jnp.float32),
+                           jnp.zeros((), jnp.int32))
+    ph = jnp.zeros((1, 1), mdt)
+    return ServerState(zeros, ph, ph, jnp.zeros((), jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# One server round
+# --------------------------------------------------------------------------
+
+
+def _byzantine_overwrite(cfg: AlgorithmConfig, wire: jnp.ndarray,
+                         key: jax.Array) -> jnp.ndarray:
+    """Replace rows [0, f) of the wire payload with the attack vectors
+    computed from the honest rows [f, n)."""
+    if cfg.f == 0 or cfg.attack.name == "none":
+        return wire
+    honest = wire[cfg.f:]
+    byz = A.apply_attack(cfg.attack, honest, cfg.f, key=key)
+    return jnp.concatenate([byz.astype(wire.dtype), honest], axis=0)
+
+
+def server_round(cfg: AlgorithmConfig, state: ServerState,
+                 grads: jnp.ndarray, key: jax.Array
+                 ) -> Tuple[jnp.ndarray, ServerState, dict]:
+    """Execute one server round.
+
+    Args:
+      cfg: algorithm configuration.
+      state: current server state.
+      grads: honest-computed per-worker gradients ``[n, D]`` (f32). Rows of
+        Byzantine workers are ignored and replaced by the attack.
+      key: PRNG key for this round (mask sampling + stochastic attacks).
+
+    Returns:
+      (direction R [D] to descend, next state, aux dict).
+    """
+    n, d = grads.shape
+    assert n == cfg.n_workers, (n, cfg.n_workers)
+    if cfg.clip_norm is not None:
+        norms = jnp.linalg.norm(grads.astype(jnp.float32), axis=1,
+                                keepdims=True)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norms, 1e-12))
+        grads = (grads * scale.astype(grads.dtype))
+    mask_key, atk_key = jax.random.split(key)
+    agg = G.make_aggregator(cfg.aggregator)
+    sp = cfg.sparsifier
+    mdt = jnp.dtype(cfg.momentum_dtype)
+    aux = {"payload_floats_per_worker": C.payload_floats(d, sp)}
+
+    if cfg.name == "rosdhb":
+        # Steps 1-4: masks (global or local) + unbiased reconstruction.
+        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype)
+        g_tilde = C.compress(grads, masks, sp)
+        g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key)
+        # Step 5: per-worker server momentum (math dtype configurable —
+        # bf16 halves the per-round transient at LLM scale, EXPERIMENTS
+        # section Perf).
+        beta = cfg.resolved_beta()
+        cdt = jnp.dtype(cfg.server_compute_dtype)
+        m = (beta * state.momentum.astype(cdt)
+             + (1.0 - beta) * g_tilde.astype(cdt))
+        # Step 6: robust aggregation of momenta.
+        r = agg(m)
+        new = state._replace(momentum=m.astype(mdt), step=state.step + 1)
+        return r, new, aux
+
+    if cfg.name == "dgd":
+        # Compressed DGD, non-robust: plain mean of unbiased estimates.
+        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype)
+        g_tilde = C.compress(grads, masks, sp)
+        g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key)
+        r = jnp.mean(g_tilde, axis=0)
+        return r, state._replace(step=state.step + 1), aux
+
+    if cfg.name == "robust_dgd":
+        # Robust DGD without compression: aggregate raw gradients.
+        g = _byzantine_overwrite(cfg, grads, atk_key)
+        aux["payload_floats_per_worker"] = d
+        r = agg(g)
+        return r, state._replace(step=state.step + 1), aux
+
+    if cfg.name == "dasha":
+        # Byz-DASHA-PAGE, p=1 branch.
+        #   MVR momentum: m_i^t = g_i^t + (1-a)(m_i^{t-1} - g_i^{t-1})
+        #   wire:         c_i^t = C((m_i^t - m_i^{t-1})
+        #                          + b (m_i^{t-1} - h_i^{t-1}))
+        #                 — compressed momentum difference plus DASHA's
+        #                 mirror-drift correction with b = 1/(2 alpha), which
+        #                 contracts E[h - m] at rate b while keeping the
+        #                 alpha-scaled compression variance bounded.
+        #   mirror:       h_i^t = h_i^{t-1} + c_i^t
+        #   direction:    R^t = F(h_1^t ... h_n^t)
+        a = cfg.mvr_a if cfg.mvr_a is not None else (1.0 - (cfg.beta or 0.9))
+        first = state.step == 0
+        m_prev = state.momentum.astype(jnp.float32)
+        h_prev = state.mirror.astype(jnp.float32)
+        m = jnp.where(first, grads,
+                      grads + (1.0 - a) * (m_prev - state.prev_grad))
+        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype)
+        b = 1.0 / (2.0 * sp.alpha)
+        diff = C.compress((m - m_prev) + b * (m_prev - h_prev), masks, sp)
+        h = h_prev + diff
+        h = _byzantine_overwrite(cfg, h, atk_key)
+        r = agg(h)
+        new = ServerState(momentum=m.astype(mdt), mirror=h.astype(mdt),
+                          prev_grad=grads, step=state.step + 1)
+        return r, new, aux
+
+    raise ValueError(f"unknown algorithm: {cfg.name!r}")
+
+
+def apply_direction(params_flat: jnp.ndarray, r: jnp.ndarray,
+                    gamma: float) -> jnp.ndarray:
+    """Step 7: theta^t = theta^{t-1} - gamma R^t."""
+    return params_flat - gamma * r

@@ -1,0 +1,116 @@
+"""Byzantine attack strategies.
+
+Attacks see the honest workers' (compressed) momenta/gradients — the paper's
+threat model is the worst case: colluding, omniscient Byzantine workers that
+observe all honest messages. Every attack maps the stacked honest vectors
+``honest: [h, d]`` to ``f`` Byzantine vectors ``[f, d]``.
+
+``alie`` (A Little Is Enough, Baruch et al. [4]) is the attack used in the
+paper's empirical evaluation (Fig. 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import statistics
+
+import jax
+import jax.numpy as jnp
+
+
+def _alie_z(n: int, f: int) -> float:
+    """z-score threshold of ALIE: z = Phi^-1((n - f - s)/(n - f)) with
+    s = floor(n/2 + 1) - f supporters needed to shift the median."""
+    h = n - f
+    s = math.floor(n / 2 + 1) - f
+    frac = max(min((h - s) / h, 1.0 - 1e-6), 1e-6)
+    return float(statistics.NormalDist().inv_cdf(frac))
+
+
+def alie(honest: jnp.ndarray, f: int, z: float | None = None) -> jnp.ndarray:
+    """A Little Is Enough: send mean - z * std, coordinate-wise."""
+    h = honest.shape[0]
+    n = h + f
+    if z is None:
+        z = _alie_z(n, f)
+    mu = jnp.mean(honest, axis=0)
+    sd = jnp.std(honest, axis=0)
+    byz = mu - z * sd
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def sign_flip(honest: jnp.ndarray, f: int, scale: float = 1.0) -> jnp.ndarray:
+    """Send the negated honest mean (scaled)."""
+    byz = -scale * jnp.mean(honest, axis=0)
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def ipm(honest: jnp.ndarray, f: int, eps: float = 0.5) -> jnp.ndarray:
+    """Inner-Product Manipulation (Xie et al.): -eps * honest mean; with small
+    eps it keeps a negative inner product with the true gradient while staying
+    inside typical filtering radii."""
+    return sign_flip(honest, f, scale=eps)
+
+
+def foe(honest: jnp.ndarray, f: int, scale: float = 10.0) -> jnp.ndarray:
+    """Fall of Empires: large-magnitude negated mean."""
+    return sign_flip(honest, f, scale=scale)
+
+
+def mimic(honest: jnp.ndarray, f: int, target: int = 0) -> jnp.ndarray:
+    """All Byzantine workers copy one honest worker, skewing the empirical
+    distribution under heterogeneity."""
+    byz = honest[target]
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def gauss(honest: jnp.ndarray, f: int, key: jax.Array,
+          std: float = 1.0) -> jnp.ndarray:
+    """Random Gaussian noise (weak baseline attack)."""
+    mu = jnp.mean(honest, axis=0)
+    return mu + std * jax.random.normal(key, (f,) + mu.shape, honest.dtype)
+
+
+def zero(honest: jnp.ndarray, f: int) -> jnp.ndarray:
+    return jnp.zeros((f,) + honest.shape[1:], honest.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    """Named attack.
+
+    Attributes:
+      name: ``none`` | ``alie`` | ``signflip`` | ``ipm`` | ``foe`` |
+        ``mimic`` | ``gauss`` | ``zero``.
+      scale: magnitude parameter (signflip/foe/ipm/gauss).
+      z: optional override of the ALIE z-score.
+    """
+
+    name: str = "alie"
+    scale: float | None = None
+    z: float | None = None
+
+
+def apply_attack(cfg: AttackConfig, honest: jnp.ndarray, f: int,
+                 key: jax.Array | None = None) -> jnp.ndarray:
+    """Produce the ``[f, d]`` Byzantine payload from honest ``[h, d]``."""
+    if f == 0 or cfg.name == "none":
+        return jnp.zeros((f,) + honest.shape[1:], honest.dtype)
+    if cfg.name == "alie":
+        return alie(honest, f, z=cfg.z)
+    if cfg.name == "signflip":
+        return sign_flip(honest, f, scale=cfg.scale or 1.0)
+    if cfg.name == "ipm":
+        return ipm(honest, f, eps=cfg.scale or 0.5)
+    if cfg.name == "foe":
+        return foe(honest, f, scale=cfg.scale or 10.0)
+    if cfg.name == "mimic":
+        return mimic(honest, f)
+    if cfg.name == "gauss":
+        assert key is not None, "gauss attack needs a PRNG key"
+        return gauss(honest, f, key, std=cfg.scale or 1.0)
+    if cfg.name == "zero":
+        return zero(honest, f)
+    raise ValueError(f"unknown attack: {cfg.name!r}")

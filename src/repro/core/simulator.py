@@ -1,0 +1,122 @@
+"""Paper-scale distributed-learning simulator.
+
+Simulates a server + n workers on a single host (the paper's own evaluation
+setup, §4): every round, honest workers compute (mini-batch) gradients on
+their local shard, the chosen algorithm compresses/attacks/aggregates, and
+the server updates the model. One jitted function per round.
+
+This is the engine behind the MNIST-like reproduction (benchmarks/bench_fig1)
+and the convergence-comparison benchmarks; the LLM-scale path lives in
+``repro/launch`` and shares the same ``core.algorithms`` math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import algorithms as alg
+from repro.core import compression as C
+from repro.utils import tree as T
+
+
+class SimState(NamedTuple):
+    params_flat: jnp.ndarray
+    server: alg.ServerState
+    key: jax.Array
+
+
+@dataclasses.dataclass
+class Simulator:
+    """Single-host simulator of Byzantine-robust compressed training.
+
+    Args:
+      loss_fn: ``loss_fn(params, batch) -> scalar`` — per-worker local loss.
+      params0: initial parameter pytree.
+      cfg: algorithm configuration (n_workers, f, attack, compression, ...).
+      eval_fn: optional ``eval_fn(params, eval_batch) -> metrics dict``.
+    """
+
+    loss_fn: Callable[[Any, Any], jnp.ndarray]
+    params0: Any
+    cfg: alg.AlgorithmConfig
+    eval_fn: Optional[Callable[[Any, Any], Dict[str, jnp.ndarray]]] = None
+
+    def __post_init__(self):
+        self.spec = T.make_flat_spec(self.params0)
+        self.d = self.spec.size
+
+        def _round(state: SimState, worker_batches) -> Tuple[SimState, dict]:
+            key, mask_key = jax.random.split(state.key)
+            params = T.tree_unravel(state.params_flat, self.spec)
+
+            def worker_grad(batch):
+                l, g = jax.value_and_grad(self.loss_fn)(params, batch)
+                return l, T.tree_ravel(g, self.spec)
+
+            losses, grads = jax.vmap(worker_grad)(worker_batches)
+            r, server, aux = alg.server_round(self.cfg, state.server, grads,
+                                              mask_key)
+            new_flat = alg.apply_direction(state.params_flat, r,
+                                           self.cfg.gamma)
+            metrics = {
+                "loss": jnp.mean(losses[self.cfg.f:]),  # honest mean loss
+                "grad_norm": jnp.linalg.norm(jnp.mean(grads[self.cfg.f:],
+                                                      axis=0)),
+                "dir_norm": jnp.linalg.norm(r),
+            }
+            return SimState(new_flat, server, key), metrics
+
+        self._round = jax.jit(_round)
+
+    def init(self, seed: int = 0) -> SimState:
+        return SimState(
+            params_flat=T.tree_ravel(self.params0, self.spec),
+            server=alg.init_state(self.cfg, self.spec.padded_size),
+            key=jax.random.PRNGKey(seed),
+        )
+
+    def params(self, state: SimState) -> Any:
+        return T.tree_unravel(state.params_flat, self.spec)
+
+    def payload_bytes_per_round(self) -> int:
+        """Total honest uplink bytes per round (the paper's comm-cost metric).
+
+        The paper counts communication of all n workers (the server cannot
+        know who is honest); we follow that convention."""
+        per = C.payload_bytes(self.d, self.cfg.sparsifier, bytes_per_value=4,
+                              with_mask_indices=True)
+        return per * self.cfg.n_workers
+
+    def run(self, state: SimState, batch_fn: Callable[[int], Any],
+            steps: int, eval_every: int = 0, eval_batch: Any = None,
+            stop_fn: Optional[Callable[[Dict[str, float]], bool]] = None,
+            ) -> Tuple[SimState, Dict[str, list]]:
+        """Run ``steps`` rounds.
+
+        ``batch_fn(t)`` must return stacked per-worker batches with leading
+        dim ``n_workers``. ``stop_fn(metrics)`` can end training early (used
+        by the communication-cost-to-threshold benchmark).
+        """
+        history: Dict[str, list] = {"step": [], "loss": [], "comm_bytes": []}
+        per_round = self.payload_bytes_per_round()
+        for t in range(steps):
+            state, m = self._round(state, batch_fn(t))
+            if eval_every and (t % eval_every == 0 or t == steps - 1):
+                rec = {k: float(v) for k, v in m.items()}
+                rec["comm_bytes"] = per_round * (t + 1)
+                if self.eval_fn is not None and eval_batch is not None:
+                    emet = self.eval_fn(self.params(state), eval_batch)
+                    rec.update({k: float(v) for k, v in emet.items()})
+                history["step"].append(t)
+                history["loss"].append(rec["loss"])
+                history["comm_bytes"].append(rec["comm_bytes"])
+                for k, v in rec.items():
+                    if k not in ("loss", "comm_bytes"):
+                        history.setdefault(k, []).append(v)
+                if stop_fn is not None and stop_fn(rec):
+                    break
+        return state, history

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticMNIST, BatchFn, synthetic_token_batch
+
+__all__ = ["SyntheticMNIST", "BatchFn", "synthetic_token_batch"]

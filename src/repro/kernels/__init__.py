@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute of the virtual server
+(cwtm, randk) and the attention hot loop (flash_attention).
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper with TPU/XLA backend selection) and ref.py (pure-jnp oracle used by
+the interpret-mode test sweeps).
+"""

@@ -1,0 +1,5 @@
+from repro.kernels.cwtm.cwtm import cwtm_pallas
+from repro.kernels.cwtm.ops import cwtm
+from repro.kernels.cwtm.ref import cwtm_ref
+
+__all__ = ["cwtm_pallas", "cwtm", "cwtm_ref"]

@@ -1,0 +1,31 @@
+"""Jitted wrapper for the CWTM kernel with automatic backend selection."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cwtm.cwtm import cwtm_pallas
+from repro.kernels.cwtm.ref import cwtm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("f", "use_pallas", "interpret"))
+def cwtm(x: jnp.ndarray, f: int, *, use_pallas: bool | None = None,
+         interpret: bool = False) -> jnp.ndarray:
+    """Coordinate-wise trimmed mean over axis 0.
+
+    use_pallas=None -> Pallas on TPU, XLA reference elsewhere (the dry-run
+    and CPU tests take the XLA path; kernel correctness is covered by the
+    interpret-mode sweeps in tests/test_kernels.py).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return cwtm_pallas(x, f, interpret=interpret)
+    return cwtm_ref(x, f)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the coordinate-wise trimmed mean kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cwtm_ref(x: jnp.ndarray, f: int) -> jnp.ndarray:
+    """x: [n, d] -> [d]: drop the f largest / f smallest per coordinate,
+    average the middle n - 2f."""
+    n = x.shape[0]
+    assert n > 2 * f, (n, f)
+    xs = jnp.sort(x, axis=0)
+    return jnp.mean(xs[f:n - f].astype(jnp.float32), axis=0).astype(x.dtype)

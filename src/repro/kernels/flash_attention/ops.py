@@ -1,0 +1,30 @@
+"""Jitted wrapper for flash attention with backend selection."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "use_pallas", "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0, use_pallas: bool | None = None,
+              interpret: bool = False):
+    """Causal (optionally sliding-window) GQA attention.
+
+    use_pallas=None -> Pallas kernel on TPU, XLA reference elsewhere.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, interpret=interpret)
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)

@@ -1,0 +1,17 @@
+from repro.kernels.randk.ops import compress, decompress, momentum_update
+from repro.kernels.randk.randk import (
+    block_compress,
+    block_decompress,
+    momentum_scatter,
+)
+from repro.kernels.randk.ref import (
+    block_compress_ref,
+    block_decompress_ref,
+    momentum_scatter_ref,
+)
+
+__all__ = [
+    "compress", "decompress", "momentum_update",
+    "block_compress", "block_decompress", "momentum_scatter",
+    "block_compress_ref", "block_decompress_ref", "momentum_scatter_ref",
+]

@@ -1,0 +1,49 @@
+"""Jitted wrappers for the Block-RandK kernels with backend selection."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.randk import randk as K
+from repro.kernels.randk import ref as R
+
+
+def _pallas(use_pallas):
+    return jax.default_backend() == "tpu" if use_pallas is None else use_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "alpha", "use_pallas",
+                                    "interpret"))
+def compress(g, block_idx, *, block_size: int, alpha: float,
+             use_pallas=None, interpret: bool = False):
+    if _pallas(use_pallas):
+        return K.block_compress(g, block_idx, block_size, alpha,
+                                interpret=interpret)
+    return R.block_compress_ref(g, block_idx, block_size, alpha)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "d", "use_pallas",
+                                    "interpret"))
+def decompress(payload, block_idx, *, block_size: int, d: int,
+               use_pallas=None, interpret: bool = False):
+    if _pallas(use_pallas):
+        return K.block_decompress(payload, block_idx, block_size, d,
+                                  interpret=interpret)
+    return R.block_decompress_ref(payload, block_idx, block_size, d)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "beta", "use_pallas",
+                                    "interpret"))
+def momentum_update(bank_row, payload, block_idx, *, block_size: int,
+                    beta: float, use_pallas=None, interpret: bool = False):
+    if _pallas(use_pallas):
+        return K.momentum_scatter(bank_row, payload, block_idx, block_size,
+                                  beta, interpret=interpret)
+    return R.momentum_scatter_ref(bank_row, payload, block_idx, block_size,
+                                  beta)

@@ -1,0 +1,150 @@
+"""Pallas TPU kernels for Block-RandK compression (DESIGN §3).
+
+Three kernels around the wire format ``payload = alpha * g[selected blocks]``:
+
+  * ``block_compress``   — gather + scale: one grid step per selected block;
+    the block id is prefetched (scalar prefetch) and drives the input
+    BlockSpec index_map, so the gather is a pure DMA pattern — no VMEM
+    shuffle, each selected block streams HBM->VMEM->HBM once.
+  * ``block_decompress`` — inverse scatter into a zeroed dense vector.
+  * ``momentum_scatter`` — the fused RoSDHB step-5 update: decay the whole
+    momentum row by beta while adding (1-beta)*payload into the selected
+    blocks; one pass over the bank row, which is the server's dominant
+    HBM-bandwidth term (see EXPERIMENTS §Perf).
+
+Block size is a multiple of the 128-lane register width; payloads are
+2-D ``[kb, block_size]`` so every DMA is lane-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------
+# compress: payload[j] = alpha * g_blocks[idx[j]]
+# --------------------------------------------------------------------------
+
+
+def _compress_kernel(idx_ref, g_ref, o_ref, *, alpha: float):
+    # g_ref is the block selected by the index_map (scalar prefetch)
+    o_ref[...] = (g_ref[...].astype(jnp.float32) * alpha).astype(o_ref.dtype)
+
+
+def block_compress(g: jnp.ndarray, block_idx: jnp.ndarray, block_size: int,
+                   alpha: float, *, interpret: bool = False) -> jnp.ndarray:
+    """g: [d] (d % block_size == 0); block_idx: [kb] -> payload [kb*bs]."""
+    d = g.shape[0]
+    nb = d // block_size
+    kb = block_idx.shape[0]
+    gb = g.reshape(nb, block_size)
+    grid = (kb,)
+    out = pl.pallas_call(
+        functools.partial(_compress_kernel, alpha=alpha),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, block_size),
+                                   lambda j, idx: (idx[j], 0))],
+            out_specs=pl.BlockSpec((1, block_size), lambda j, idx: (j, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((kb, block_size), g.dtype),
+        interpret=interpret,
+    )(block_idx, gb)
+    return out.reshape(kb * block_size)
+
+
+# --------------------------------------------------------------------------
+# decompress: dense[idx[j]] = payload[j]; zeros elsewhere
+# --------------------------------------------------------------------------
+
+
+def _decompress_kernel(sel_ref, p_ref, o_ref):
+    # grid over ALL destination blocks i; sel_ref[i] holds the payload slot
+    # for block i (or -1 if unselected).
+    slot = sel_ref[pl.program_id(0)]
+
+    @pl.when(slot >= 0)
+    def _write():
+        o_ref[...] = p_ref[...]
+
+    @pl.when(slot < 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def block_decompress(payload: jnp.ndarray, block_idx: jnp.ndarray,
+                     block_size: int, d: int, *,
+                     interpret: bool = False) -> jnp.ndarray:
+    """payload [kb*bs] + block ids -> dense [d]."""
+    nb = d // block_size
+    kb = block_idx.shape[0]
+    pb = payload.reshape(kb, block_size)
+    # slot map: destination block -> payload row (-1 = not selected)
+    slot = jnp.full((nb,), -1, jnp.int32)
+    slot = slot.at[block_idx].set(jnp.arange(kb, dtype=jnp.int32))
+    out = pl.pallas_call(
+        _decompress_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb,),
+            in_specs=[pl.BlockSpec((1, block_size),
+                                   lambda i, sel: (jnp.maximum(sel[i], 0), 0))],
+            out_specs=pl.BlockSpec((1, block_size), lambda i, sel: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, block_size), payload.dtype),
+        interpret=interpret,
+    )(slot, pb)
+    return out.reshape(d)
+
+
+# --------------------------------------------------------------------------
+# fused momentum update: m = beta*m; m[sel] += (1-beta)*payload
+# --------------------------------------------------------------------------
+
+
+def _momentum_kernel(sel_ref, m_ref, p_ref, o_ref, *, beta: float):
+    i = pl.program_id(0)
+    slot = sel_ref[i]
+    m = m_ref[...].astype(jnp.float32) * beta
+
+    @pl.when(slot >= 0)
+    def _upd():
+        o_ref[...] = (m + (1.0 - beta) * p_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+    @pl.when(slot < 0)
+    def _decay():
+        o_ref[...] = m.astype(o_ref.dtype)
+
+
+def momentum_scatter(bank_row: jnp.ndarray, payload: jnp.ndarray,
+                     block_idx: jnp.ndarray, block_size: int, beta: float,
+                     *, interpret: bool = False) -> jnp.ndarray:
+    """Fused Algorithm-1 step 5 over one worker's momentum row [d]."""
+    d = bank_row.shape[0]
+    nb = d // block_size
+    kb = block_idx.shape[0]
+    slot = jnp.full((nb,), -1, jnp.int32)
+    slot = slot.at[block_idx].set(jnp.arange(kb, dtype=jnp.int32))
+    out = pl.pallas_call(
+        functools.partial(_momentum_kernel, beta=beta),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((1, block_size), lambda i, sel: (i, 0)),
+                pl.BlockSpec((1, block_size),
+                             lambda i, sel: (jnp.maximum(sel[i], 0), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_size), lambda i, sel: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, block_size), bank_row.dtype),
+        interpret=interpret,
+    )(slot, bank_row.reshape(nb, block_size), payload.reshape(kb, block_size))
+    return out.reshape(d)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Block-RandK compress/decompress kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_compress_ref(g: jnp.ndarray, block_idx: jnp.ndarray,
+                       block_size: int, alpha: float) -> jnp.ndarray:
+    """Gather the selected blocks of ``g`` scaled by alpha.
+
+    g: [d] with d % block_size == 0; block_idx: [kb] int32 block ids.
+    Returns [kb * block_size] — the wire payload.
+    """
+    gb = g.reshape(-1, block_size)
+    return (alpha * gb[block_idx]).reshape(-1).astype(g.dtype)
+
+
+def block_decompress_ref(payload: jnp.ndarray, block_idx: jnp.ndarray,
+                         block_size: int, d: int) -> jnp.ndarray:
+    """Scatter the payload back to a dense [d] vector (zeros elsewhere)."""
+    nb = d // block_size
+    out = jnp.zeros((nb, block_size), payload.dtype)
+    out = out.at[block_idx].set(payload.reshape(-1, block_size))
+    return out.reshape(d)
+
+
+def momentum_scatter_ref(bank_row: jnp.ndarray, payload: jnp.ndarray,
+                         block_idx: jnp.ndarray, block_size: int,
+                         beta: float) -> jnp.ndarray:
+    """Fused RoSDHB momentum update (Algorithm 1, step 5):
+       m <- beta * m              (all blocks)
+       m[sel] += (1 - beta) * payload   (selected blocks)
+    """
+    nb = bank_row.shape[0] // block_size
+    m = (beta * bank_row.astype(jnp.float32)).reshape(nb, block_size)
+    upd = (1.0 - beta) * payload.astype(jnp.float32).reshape(-1, block_size)
+    m = m.at[block_idx].add(upd)
+    return m.reshape(-1).astype(bank_row.dtype)

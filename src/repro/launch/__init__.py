@@ -1,0 +1,5 @@
+# NOTE: do NOT import repro.launch.dryrun here — it sets XLA_FLAGS and must
+# be the process entry point. Import submodules explicitly.
+from repro.launch.mesh import make_production_mesh, make_host_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

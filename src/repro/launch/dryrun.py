@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles the train/serve step for every (architecture x input
+shape) on the single-pod (16,16) mesh and the 2-pod (2,16,16) mesh, records
+``memory_analysis()`` / ``cost_analysis()``, parses collective bytes from the
+optimized HLO, and derives the three §Roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral_large_123b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+  python -m repro.launch.dryrun --all --multi-pod-only
+Options:
+  --algo rosdhb|dasha|robust_dgd|dgd   (train shapes; default rosdhb)
+  --momentum-dtype bfloat16|float32|float8_e4m3fn
+  --ratio 0.05                         (RoSDHB k/d)
+"""  # noqa: E402
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_arch, model_for_shape
+from repro.core import compression as comp_lib
+from repro.launch import steps as steps_lib
+from repro.launch.hlo import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, model_flops, count_params
+
+
+def run_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+            algo: str = "rosdhb", momentum_dtype: str = "bfloat16",
+            server_compute_dtype: str = "float32",
+            ratio: Optional[float] = None, verbose: bool = True) -> Dict:
+    """Lower+compile one (arch, shape, mesh) combination; return the report."""
+    spec = get_arch(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    overrides: Dict = {"name": algo, "momentum_dtype": momentum_dtype,
+                       "server_compute_dtype": server_compute_dtype}
+    if ratio is not None:
+        overrides["sparsifier"] = comp_lib.SparsifierConfig(
+            kind="block", ratio=ratio, block_size=512)
+
+    with mesh:
+        if shape.kind == "train":
+            plan = steps_lib.make_train_plan(spec, shape, mesh, overrides)
+            step = steps_lib.build_train_step(plan, mesh)
+            args = steps_lib.train_input_specs(plan, mesh)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(*args)
+        else:
+            step = steps_lib.build_serve_step(spec, shape, mesh)
+            args = steps_lib.serve_input_specs(spec, shape, mesh)
+            # caches are donated (updated in place), as in a real server
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text(), default_group=n_chips)
+
+    cfg = model_for_shape(spec, shape)
+    n_params = count_params(cfg)
+    n_active = count_params(cfg, active_only=True)
+    mf = model_flops(cfg, shape)
+
+    rf = Roofline(
+        flops_per_chip=float(ca.get("flops", 0.0)),
+        hbm_bytes_per_chip=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes_per_chip=colls.wire_bytes,
+        model_flops_total=mf,
+        n_chips=n_chips,
+    )
+
+    report = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "algo": algo if shape.kind == "train" else None,
+        "ok": True,
+        "n_params": n_params,
+        "n_params_active": n_active,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_chip": ma.argument_size_in_bytes,
+            "output_bytes_per_chip": ma.output_size_in_bytes,
+            "temp_bytes_per_chip": ma.temp_size_in_bytes,
+            "alias_bytes_per_chip": ma.alias_size_in_bytes,
+            "peak_bytes_per_chip": (ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+        } if ma else None,
+        "collectives": {"counts": colls.ops, "result_bytes": colls.result_bytes,
+                        "wire_bytes_per_chip": colls.wire_bytes},
+        "roofline": rf.as_dict(),
+    }
+    if verbose:
+        mem = report["memory"]["peak_bytes_per_chip"] / 2**30 \
+            if report["memory"] else float("nan")
+        print(f"[dryrun] {arch_id:22s} {shape_name:12s} "
+              f"{report['mesh']:7s} OK  peak={mem:7.2f}GiB/chip "
+              f"compute={rf.compute_s*1e3:9.3f}ms mem={rf.memory_s*1e3:9.3f}ms "
+              f"coll={rf.collective_s*1e3:9.3f}ms -> {rf.bottleneck}"
+              f"  (compile {t_compile:.1f}s)")
+    return report
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true",
+                   help="also run the 2-pod mesh")
+    p.add_argument("--multi-pod-only", action="store_true")
+    p.add_argument("--algo", default="rosdhb",
+                   choices=["rosdhb", "dasha", "robust_dgd", "dgd"])
+    p.add_argument("--momentum-dtype", default="bfloat16")
+    p.add_argument("--server-compute-dtype", default="float32")
+    p.add_argument("--ratio", type=float, default=None)
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if args.multi_pod or args.multi_pod_only:
+        meshes.append(True)
+
+    reports = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    reports.append(run_one(
+                        arch, shape, multi_pod=mp, algo=args.algo,
+                        momentum_dtype=args.momentum_dtype,
+                        server_compute_dtype=args.server_compute_dtype,
+                        ratio=args.ratio))
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    print(f"[dryrun] {arch} {shape} "
+                          f"{'2x16x16' if mp else '16x16'} FAILED: {e}")
+                    traceback.print_exc()
+                    reports.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "ok": False, "error": str(e)})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(reports, f, indent=2)
+        print(f"[dryrun] wrote {len(reports)} reports to {args.out}")
+    print(f"[dryrun] {len(reports) - failures}/{len(reports)} OK")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Post-optimization HLO inspection: collective operand/result bytes.
+
+``compiled.cost_analysis()`` does not break out collective traffic, so we
+parse the optimized HLO text. For every collective op we record the result
+bytes (per participating device) and convert to estimated ICI wire bytes per
+chip with the standard ring-algorithm factors:
+
+    all-gather        (N-1)/N * result
+    reduce-scatter    (N-1)/N * operand  ~= (N-1) * result
+    all-reduce        2 (N-1)/N * result      (reduce-scatter + all-gather)
+    all-to-all        (N-1)/N * result
+    collective-permute        result
+
+``N`` is taken from the op's replica_groups when present, else the full mesh.
+This is an estimate of per-chip traffic for the §Roofline collective term; raw
+per-op sums are preserved in the report for re-derivation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum the byte size of all array shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / n,
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1),       # operand = n * result
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Aggregated collective statistics from one compiled executable."""
+
+    ops: Dict[str, int]              # op kind -> count
+    result_bytes: Dict[str, int]     # op kind -> summed per-device result B
+    wire_bytes: float                # estimated per-chip ICI bytes
+    lines: List[str]                 # raw matched op signatures (debugging)
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    ops: Dict[str, int] = {}
+    rbytes: Dict[str, int] = {}
+    wire = 0.0
+    lines: List[str] = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                     r"([a-z\-]+)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if kind == c or kind.startswith(c + "-"):  # e.g. all-reduce-start
+                base = c
+                break
+        if base is None or kind.endswith("-done"):
+            continue
+        size = _shape_bytes(m.group(1))
+        gm = _GROUPS_RE.search(s)
+        if gm:
+            group = max(1, gm.group(1).count(",") + 1)
+        else:
+            gm2 = _GROUPS_ALT_RE.search(s)
+            group = int(gm2.group(2)) if gm2 else default_group
+        ops[base] = ops.get(base, 0) + 1
+        rbytes[base] = rbytes.get(base, 0) + size
+        wire += _WIRE_FACTOR[base](max(group, 2)) * size
+        lines.append(s.split(",")[0][:160])
+    return CollectiveStats(ops, rbytes, wire, lines)

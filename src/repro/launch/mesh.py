@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+NOTE: these are FUNCTIONS, not module-level constants — importing this module
+never touches jax device state (the dry-run must set XLA_FLAGS before any
+device initialisation).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """TPU v5e production mesh: one pod = (16, 16) = ("data", "model")
+    (256 chips); two pods = (2, 16, 16) = ("pod", "data", "model").
+
+    The RoSDHB workers are the data-parallel groups: 16 single-pod,
+    32 (= pod x data) multi-pod.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate mesh over however many devices are actually present
+    (CPU tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,142 @@
+"""Three-term roofline from the compiled dry-run artifact (see §Roofline).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. ``cost_analysis()`` FLOPs/bytes are per-device (post-SPMD
+partitioning), so the terms below are already per-chip seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link (1 link assumed per transfer)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    model_flops_total: float  # 6*N*D (dense) / 6*N_active*D (MoE), all chips
+
+    n_chips: int = 256
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is 'useful'
+        (catches remat/redundancy waste). >1 means HLO under-counts (e.g.
+        fused ops); <1 means recompute/overhead."""
+        hlo_total = self.flops_per_chip * self.n_chips
+        if hlo_total <= 0:
+            return None
+        return self.model_flops_total / hlo_total
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_fraction": self.useful_flops_fraction,
+        }
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS = 6 * N * D (dense) / 6 * N_active * D (MoE); decode/prefill
+# use 2 * N * D per generated/consumed token.
+# --------------------------------------------------------------------------
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Analytic parameter count of the assigned config (embeddings included
+    once; MoE counts all experts unless active_only)."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    n = 0
+    # embeddings + head
+    if cfg.input_kind == "tokens":
+        n += cfg.vocab_size * d
+    if not cfg.tie_embeddings or cfg.input_kind != "tokens":
+        n += d * cfg.vocab_size
+
+    def attn_params() -> int:
+        if cfg.use_mla:
+            qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            return (d * cfg.n_heads * qd
+                    + d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+                    + cfg.kv_lora_rank * cfg.n_heads
+                    * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+                    + cfg.n_heads * cfg.v_head_dim * d)
+        return (d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd
+                + cfg.n_heads * hd * d)
+
+    def mlp_params(ff: int) -> int:
+        mult = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        return mult * d * ff
+
+    def ssm_params() -> int:
+        di = cfg.ssm_d_inner
+        gn = cfg.ssm_n_groups * cfg.ssm_state
+        h = cfg.ssm_n_heads
+        return (d * (2 * di + 2 * gn + h) + cfg.ssm_conv_width * (di + 2 * gn)
+                + di * d + 3 * h + di)
+
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        n += L * (attn_params() + mlp_params(cfg.d_ff))
+    elif fam == "moe":
+        fk = cfg.first_k_dense
+        n += fk * (attn_params() + mlp_params(cfg.d_ff))
+        e = cfg.top_k if active_only else cfg.n_experts
+        per_layer = attn_params() + e * mlp_params(cfg.d_ff) \
+            + cfg.n_shared_experts * mlp_params(cfg.d_ff) + d * cfg.n_experts
+        n += (L - fk) * per_layer
+    elif fam == "ssm":
+        n += L * ssm_params()
+    elif fam == "hybrid":
+        n += L * ssm_params()
+        n += attn_params() + mlp_params(cfg.d_ff)  # ONE shared block
+    elif fam == "vlm":
+        g = L // cfg.cross_attn_every
+        n_self = L - g
+        n += n_self * (attn_params() + mlp_params(cfg.d_ff))
+        n += g * (attn_params() + mlp_params(cfg.d_ff))  # cross layers
+    return n
+
+
+def model_flops(cfg, shape, active_only_params: Optional[int] = None) -> float:
+    """6*N*D for training; 2*N*tokens for inference steps."""
+    n_active = active_only_params if active_only_params is not None \
+        else count_params(cfg, active_only=(cfg.family == "moe"))
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,79 @@
+"""Serving launcher: batched prefill + decode with the dry-run's serve step.
+
+On TPU: production mesh + full config; on CPU: reduced config + host mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2_1_3b --tokens 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import ArchSpec
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import cache_init, forward, logits_fn, model_init
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--tokens", type=int, default=8)
+    args = p.parse_args()
+
+    spec = get_arch(args.arch)
+    if jax.default_backend() == "tpu":
+        mesh = make_production_mesh()
+        cfg = spec.model
+    else:
+        print("[serve] CPU backend: reduced config + host mesh")
+        mesh = make_host_mesh()
+        cfg = spec.model.reduced(n_layers=2, d_model=256).with_overrides(
+            vocab_size=512, dtype="float32")
+
+    b, s = args.batch, args.prompt_len
+    max_len = s + args.tokens
+    rng = np.random.default_rng(0)
+    with mesh:
+        params = model_init(jax.random.PRNGKey(0), cfg)
+        batch = {}
+        if cfg.input_kind == "tokens":
+            batch["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        else:
+            batch["embeddings"] = jnp.asarray(
+                rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+        if cfg.family == "vlm":
+            batch["image_embeddings"] = jnp.asarray(
+                rng.normal(size=(b, cfg.n_image_tokens, cfg.d_model)),
+                jnp.float32)
+        caches = cache_init(cfg, b, max_len)
+        t0 = time.time()
+        hidden, caches, _ = forward(params, cfg, batch, mode="prefill",
+                                    pos=0, caches=caches)
+        tok = jnp.argmax(logits_fn(params, cfg, hidden[:, -1:]), -1)
+        print(f"[serve] prefill [{b}x{s}] {time.time()-t0:.2f}s")
+
+        t0 = time.time()
+        for i in range(args.tokens - 1):
+            db = ({"tokens": tok} if cfg.input_kind == "tokens" else
+                  {"embeddings": jax.nn.one_hot(tok, cfg.d_model,
+                                                dtype=jnp.float32)})
+            if cfg.family == "vlm":
+                db["image_embeddings"] = batch["image_embeddings"]
+            h, caches, _ = forward(params, cfg, db, mode="decode",
+                                   pos=s + i, caches=caches)
+            tok = jnp.argmax(logits_fn(params, cfg, h), -1)
+        n = (args.tokens - 1) * b
+        print(f"[serve] decoded {n} tokens in {time.time()-t0:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    model_init,
+    forward,
+    cache_init,
+    lm_loss,
+    logits_fn,
+    chunked_xent,
+)
+from repro.models.cnn import cnn_init, cnn_apply, cnn_loss, cnn_accuracy
+
+__all__ = [
+    "ModelConfig", "model_init", "forward", "cache_init", "lm_loss",
+    "logits_fn", "chunked_xent",
+    "cnn_init", "cnn_apply", "cnn_loss", "cnn_accuracy",
+]

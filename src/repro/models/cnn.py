@@ -1,0 +1,68 @@
+"""The paper's Section-4 model: a small CNN (~11.8k parameters) for 10-class
+28x28 grayscale image classification (MNIST-scale)."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def cnn_init(key, n_classes: int = 10) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def conv(k, h, w, cin, cout):
+        scale = 1.0 / math.sqrt(h * w * cin)
+        return {"w": jax.random.normal(k, (h, w, cin, cout), jnp.float32) * scale,
+                "b": jnp.zeros((cout,), jnp.float32)}
+
+    def fc(k, din, dout):
+        scale = 1.0 / math.sqrt(din)
+        return {"w": jax.random.normal(k, (din, dout), jnp.float32) * scale,
+                "b": jnp.zeros((dout,), jnp.float32)}
+
+    return {
+        "conv1": conv(k1, 3, 3, 1, 8),
+        "conv2": conv(k2, 3, 3, 8, 8),
+        "fc1": fc(k3, 8 * 7 * 7, 28),
+        "fc2": fc(k4, 28, n_classes),
+    }
+
+
+def _conv2d(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def cnn_apply(params: Dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images: [B, 28, 28, 1] -> logits [B, 10]."""
+    x = jax.nn.relu(_conv2d(params["conv1"], images))
+    x = _maxpool2(x)
+    x = jax.nn.relu(_conv2d(params["conv2"], x))
+    x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(params: Dict, batch) -> jnp.ndarray:
+    """batch: {'images': [B,28,28,1], 'labels': [B]} -> mean CE loss."""
+    logits = cnn_apply(params, batch["images"])
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(ll, batch["labels"][:, None],
+                                         axis=-1))
+
+
+def cnn_accuracy(params: Dict, batch) -> jnp.ndarray:
+    logits = cnn_apply(params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                     ).astype(jnp.float32))

@@ -1,0 +1,331 @@
+"""Shared neural-net layers (pure-function style, params as nested dicts).
+
+Conventions:
+  * activations flow in ``cfg.dtype`` (bf16 by default); params are stored in
+    f32 ("master" copies — the RoSDHB server state is separate) and cast on
+    use; norms/softmax/rope run in f32.
+  * attention layouts: q ``[B, S, H, Dh]``, k/v ``[B, S, KV, Dh]``.
+  * decode caches are dicts of arrays; positions are absolute; sliding-window
+    caches are ring buffers of length ``window``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None,
+               bias: bool = False) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_apply(p: Params, x: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    dtype = dtype or x.dtype
+    y = x @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def norm_init(d: int, kind: str = "rmsnorm") -> Params:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p: Params, x: jnp.ndarray, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [B, S, H, Dh]; positions: [B, S] or [S] absolute positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., ::2], xf[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention core (XLA path; the Pallas flash kernel mirrors this math)
+# --------------------------------------------------------------------------
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, dh)
+                            ).reshape(b, s, kv * n_rep, dh)
+
+
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     q_offset,
+                     window: Optional[int] = None,
+                     kv_len: Optional[jnp.ndarray] = None,
+                     chunk: int = 1024) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention, query-chunked so that
+    logits never materialise beyond ``[B, H, chunk, Sk]`` (the XLA analogue
+    of the flash kernel; the ``repro.kernels.flash_attention`` oracle calls
+    this with ``chunk >= S``).
+
+    Args:
+      q: [B, Sq, H, Dh]; k/v: [B, Sk, KV, Dh] (already roped).
+      q_offset: absolute position of q[0] (int or scalar array).
+      window: sliding-window size (None = full causal).
+      kv_len: optional valid kv length (for decode with partially filled
+        caches); defaults to Sk.
+    Returns [B, Sq, H, Dh].
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    kv_len = sk if kv_len is None else kv_len
+    kpos = jnp.arange(sk)
+
+    def attend(q_chunk: jnp.ndarray, qpos: jnp.ndarray) -> jnp.ndarray:
+        # q_chunk: [B, C, H, Dh]; qpos: [C] absolute positions.
+        # Grouped-head formulation: never materialise the rep-expanded K/V
+        # (perf iteration 1, EXPERIMENTS §Perf) — q is reshaped to
+        # [B, C, KV, rep, Dh] and contracted against the raw K/V.
+        c = q_chunk.shape[1]
+        qg = q_chunk.reshape(b, c, kv, rep, dh)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = kpos[None, :] <= qpos[:, None]
+        mask &= kpos[None, :] < kv_len
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgrqk,bkge->bqgre", probs.astype(q.dtype), v)
+        return out.reshape(b, c, h, v.shape[-1])
+
+    if sq <= chunk:
+        return attend(q, q_offset + jnp.arange(sq))
+
+    n_chunks = sq // chunk
+    assert sq % chunk == 0, (sq, chunk)
+    qs = q.reshape(b, n_chunks, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(i, qc):
+        return attend(qc, q_offset + i * chunk + jnp.arange(chunk))
+
+    out = jax.lax.map(lambda args: body(*args),
+                      (jnp.arange(n_chunks), qs))
+    dv = v.shape[-1]  # may differ from dh (MLA: v_head_dim != qk head dim)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
+
+
+def prefill_cache_write(cache: jnp.ndarray, fresh: jnp.ndarray,
+                        window: Optional[int]) -> jnp.ndarray:
+    """Write a full prefilled sequence of k or v ([B, S, KV, Dh]) into a
+    preallocated cache ([B, W, KV, Dh]).
+
+    Full cache (window None, W >= S): plain write at [0, S).
+    Ring cache (W == window): keep the last W entries, rolled so that the
+    entry with absolute position p sits at slot p % W.
+    """
+    s = fresh.shape[1]
+    w = cache.shape[1]
+    if window is None or s <= w:
+        if s == w:
+            return fresh.astype(cache.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, fresh.astype(cache.dtype), 0, axis=1)
+    last = fresh[:, -w:]
+    shift = (s - w) % w
+    return jnp.roll(last, shift, axis=1).astype(cache.dtype)
+
+
+def ring_cache_update(cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                      k: jnp.ndarray, v: jnp.ndarray, pos) -> Tuple:
+    """Write one decode step's k/v ([B, 1, KV, Dh]) into a ring buffer of
+    length W at slot ``pos % W``."""
+    w = cache_k.shape[1]
+    slot = jnp.mod(pos, w)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    return ck, cv
+
+
+def decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, pos,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, Dh]; cache_k/v: [B, W, KV, Dh]. ``pos`` is the absolute
+    position of the new token. For ring-buffer (sliding window) caches the
+    validity mask accounts for wrap-around; for full caches W >= pos+1.
+    """
+    b, w, kv, dh = cache_k.shape
+    sq, h = q.shape[1], q.shape[2]
+    rep = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    # grouped-head contraction: no rep-expanded K/V materialisation
+    # (perf iteration 1, EXPERIMENTS §Perf)
+    qg = q.reshape(b, sq, kv, rep, dh)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, cache_k,
+                        preferred_element_type=jnp.float32) * scale
+    slots = jnp.arange(w)
+    if window is None:
+        valid = slots <= pos
+    else:
+        # ring buffer: slot s holds absolute position p with p % W == s and
+        # p in (pos - W, pos]; valid iff that p exists, i.e. the buffer has
+        # been written there already.
+        newest_slot = jnp.mod(pos, w)
+        age = jnp.mod(newest_slot - slots, w)  # 0 = newest
+        valid = age <= jnp.minimum(pos, w - 1)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkge->bqgre", probs.astype(q.dtype), cache_v)
+    return out.reshape(b, sq, h, cache_v.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# GQA/MQA attention block
+# --------------------------------------------------------------------------
+
+
+def attn_init(key, cfg) -> Params:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd,
+                         bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd,
+                         bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd,
+                         bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def attn_apply(p: Params, cfg, x: jnp.ndarray, *, mode: str = "train",
+               pos=0, cache: Optional[Dict] = None,
+               kv_x: Optional[jnp.ndarray] = None,
+               causal: bool = True) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """GQA attention. ``kv_x`` switches to cross-attention (no causal mask,
+    no rope on kv side beyond positions 0..Skv).
+
+    mode: "train" (no cache), "prefill" (returns filled cache),
+    "decode" (x is [B,1,D], cache consumed/updated).
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    cross = kv_x is not None
+    src = kv_x if cross else x
+    q = dense_apply(p["wq"], x).reshape(b, s, h, hd)
+    k = dense_apply(p["wk"], src).reshape(b, src.shape[1], kvh, hd)
+    v = dense_apply(p["wv"], src).reshape(b, src.shape[1], kvh, hd)
+
+    if not cross:
+        qpos = pos + jnp.arange(s)
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+
+    new_cache = None
+    if cross:
+        # cross-attention: full (non-causal) attention over image/audio keys
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, _repeat_kv(k, h // kvh),
+                            preferred_element_type=jnp.float32)
+        logits = logits / math.sqrt(hd)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype),
+                         _repeat_kv(v, h // kvh))
+    elif mode == "decode":
+        assert cache is not None
+        ck, cv = ring_cache_update(cache["k"], cache["v"], k, v, pos)
+        out = decode_attention(q, ck, cv, pos, window=cfg.sliding_window)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out = causal_attention(q, k, v, q_offset=pos,
+                               window=cfg.sliding_window)
+        if mode == "prefill":
+            assert cache is not None, "prefill requires a preallocated cache"
+            new_cache = {
+                "k": prefill_cache_write(cache["k"], k, cfg.sliding_window),
+                "v": prefill_cache_write(cache["v"], v, cfg.sliding_window),
+            }
+    y = dense_apply(p["wo"], out.reshape(b, s, h * hd))
+    return y, new_cache
+
+
+def attn_cache_init(cfg, batch: int, max_len: int, dtype) -> Dict:
+    hd = cfg.resolved_head_dim
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, w, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wi": dense_init(ks[0], d_model, d_ff),
+                "wg": dense_init(ks[1], d_model, d_ff),
+                "wo": dense_init(ks[2], d_ff, d_model)}
+    return {"wi": dense_init(ks[0], d_model, d_ff),
+            "wo": dense_init(ks[2], d_ff, d_model)}
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
+    if kind == "swiglu":
+        a = jax.nn.silu(dense_apply(p["wg"], x))
+        return dense_apply(p["wo"], a * dense_apply(p["wi"], x))
+    if kind == "geglu":
+        a = jax.nn.gelu(dense_apply(p["wg"], x), approximate=True)
+        return dense_apply(p["wo"], a * dense_apply(p["wi"], x))
+    return dense_apply(p["wo"],
+                       jax.nn.gelu(dense_apply(p["wi"], x), approximate=True))

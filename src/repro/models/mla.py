@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a per-token latent ``c_kv`` of rank ``kv_lora_rank``
+plus a small shared rope key; the decode cache stores only
+``[B, S, kv_lora_rank + qk_rope_head_dim]`` — the family's headline memory
+win, which is why the deepseek decode shapes are cache-cheap.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def mla_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    r = cfg.kv_lora_rank
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": L.dense_init(ks[0], d, h * qd),
+        "wdkv": L.dense_init(ks[1], d, r + cfg.qk_rope_head_dim),
+        "kv_norm": L.norm_init(r),
+        "wukv": L.dense_init(ks[2], r,
+                             h * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+        "wo": L.dense_init(ks[3], h * cfg.v_head_dim, d),
+    }
+
+
+def _expand_kv(p: Dict, cfg, ckv: jnp.ndarray, k_rope: jnp.ndarray,
+               dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ckv [B,S,r] (already normed), k_rope [B,S,rope] (already roped)
+    -> k [B,S,H,qd], v [B,S,H,vd]."""
+    b, s, _ = ckv.shape
+    h = cfg.n_heads
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    kv = L.dense_apply(p["wukv"], ckv, dtype=dtype).reshape(b, s, h, nope + vd)
+    k_nope, v = jnp.split(kv, [nope], axis=-1)
+    k_r = jnp.broadcast_to(k_rope[:, :, None, :],
+                           (b, s, h, cfg.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_r], axis=-1)
+    return k, v
+
+
+def mla_apply(p: Dict, cfg, x: jnp.ndarray, *, mode: str = "train",
+              pos=0, cache: Optional[Dict] = None
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    qd = nope + rope
+
+    q = L.dense_apply(p["wq"], x).reshape(b, s, h, qd)
+    q_nope, q_rope = jnp.split(q, [nope], axis=-1)
+    qpos = pos + jnp.arange(s)
+    q_rope = L.apply_rope(q_rope, qpos, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    dkv = L.dense_apply(p["wdkv"], x)
+    ckv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    ckv = L.norm_apply(p["kv_norm"], ckv)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], qpos, cfg.rope_theta)[:, :, 0]
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and s == 1
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), pos, axis=1)
+        # Absorbed decode (§Perf iter 11): instead of re-expanding every
+        # cached latent through W_ukv each step ([B,S,H,nope+vd] transient,
+        # S*r*H*(nope+vd) FLOPs), fold W_uk into the query and W_uv into
+        # the output — attention runs entirely in the rank-r latent space.
+        r = cfg.kv_lora_rank
+        wukv = p["wukv"]["w"].astype(x.dtype).reshape(
+            r, h, nope + cfg.v_head_dim)
+        wuk = wukv[:, :, :nope]            # [r, H, nope]
+        wuv = wukv[:, :, nope:]            # [r, H, vd]
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wuk)
+        ck = ckv_all.astype(x.dtype)
+        kr = kr_all.astype(x.dtype)
+        logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ck,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhp,bsp->bhqs", q_rope, kr,
+                               preferred_element_type=jnp.float32))
+        logits = logits / math.sqrt(qd)
+        valid = jnp.arange(ck.shape[1]) <= pos
+        logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        lat = jnp.einsum("bhqs,bsr->bqhr", probs.astype(x.dtype), ck)
+        out = jnp.einsum("bqhr,rhv->bqhv", lat, wuv)
+        new_cache = {"ckv": ckv_all, "krope": kr_all}
+    else:
+        k, v = _expand_kv(p, cfg, ckv, k_rope, x.dtype)
+        out = L.causal_attention(q, k, v, q_offset=pos,
+                                 window=cfg.sliding_window)
+        if mode == "prefill":
+            assert cache is not None, "prefill requires a preallocated cache"
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1),
+                "krope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["krope"], k_rope.astype(cache["krope"].dtype), 0,
+                    axis=1),
+            }
+    # v_head_dim may differ from qk dim; out is [B,S,H,v_head_dim]
+    y = L.dense_apply(p["wo"], out.reshape(b, s, h * cfg.v_head_dim))
+    return y, new_cache
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, dtype) -> Dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }

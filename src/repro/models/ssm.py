@@ -1,0 +1,218 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+TPU adaptation: we use the *chunked matmul* formulation of SSD — within-chunk
+attention-like quadratic term + cross-chunk recurrence over chunk states —
+which maps onto the MXU (all contractions are matmuls), instead of the
+GPU-style selective-scan kernel. Decode keeps an O(heads * head_dim * state)
+recurrent state, which is what makes ``long_500k`` natural for this family.
+
+Layout: x [B, S, D]; inner projection produces
+  z (gate)        [B, S, d_inner]
+  xh (ssm input)  [B, S, H, P]     (d_inner = H * P)
+  B, C            [B, S, G, N]     (G groups, N = ssm_state)
+  dt              [B, S, H]
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def ssm_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_n_heads
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 5)
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 init)
+    u = jax.random.uniform(ks[3], (h,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * di + 2 * g * n + h),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                    jnp.float32) / math.sqrt(cfg.ssm_conv_width),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias,
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": L.norm_init(di),
+        "out_proj": L.dense_init(ks[4], di, d),
+    }
+
+
+def _split_proj(cfg, proj: jnp.ndarray):
+    di = cfg.ssm_d_inner
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    h = cfg.ssm_n_heads
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * g * n], axis=-1)
+    return z, xbc, dt  # dt: [..., H]
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d. xbc [B, S, C]; w [W, C]. Returns (y, new_state)
+    where state is the trailing W-1 inputs for decode continuation."""
+    bsz, s, c = xbc.shape
+    wlen = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, wlen - 1, c), xbc.dtype)
+    ext = jnp.concatenate([state, xbc], axis=1)
+    idx = jnp.arange(s)[:, None] + jnp.arange(wlen)[None, :]  # [S, W]
+    windows = ext[:, idx]  # [B, S, W, C]
+    y = jnp.einsum("bswc,wc->bsc", windows, w.astype(xbc.dtype))
+    y = jax.nn.silu(y + b.astype(xbc.dtype))
+    new_state = ext[:, -(wlen - 1):] if wlen > 1 else state
+    return y, new_state
+
+
+def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    Args:
+      xh: [B, S, H, P] inputs; dt: [B, S, H] (post-softplus, >0);
+      A:  [H] (negative); Bm/Cm: [B, S, G, N].
+      init_state: [B, H, P, N] or None.
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    bsz, s, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+    f32 = jnp.float32
+
+    # reshape into chunks
+    xc = xh.reshape(bsz, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(f32)
+    Bc = jnp.repeat(Bm.reshape(bsz, nc, chunk, g, n), rep, axis=3).astype(f32)
+    Cc = jnp.repeat(Cm.reshape(bsz, nc, chunk, g, n), rep, axis=3).astype(f32)
+
+    da = dtc * A[None, None, None, :]          # [B, NC, L, H] (negative)
+    cum = jnp.cumsum(da, axis=2)               # within-chunk cumulative decay
+
+    # ---- intra-chunk (quadratic, attention-like) term ----
+    # decay(i<-j) = exp(cum_i - cum_j) for j <= i
+    li = cum[:, :, :, None, :]                 # i
+    lj = cum[:, :, None, :, :]                 # j
+    seg = jnp.exp(li - lj)                     # [B, NC, L, L, H]
+    iidx = jnp.arange(chunk)
+    causal = (iidx[:, None] >= iidx[None, :])[None, None, :, :, None]
+    seg = jnp.where(causal, seg, 0.0)
+    cb = jnp.einsum("bclhn,bcshn->bclsh", Cc, Bc)        # [B,NC,L,L,H]
+    y_diag = jnp.einsum("bclsh,bclsh,bcsh,bcshp->bclhp",
+                        cb, seg, dtc, xc)
+
+    # ---- chunk states ----
+    # state contribution of chunk c: sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # [B,NC,L,H]
+    states = jnp.einsum("bclh,bclh,bclhn,bclhp->bchpn",
+                        decay_to_end, dtc, Bc, xc)        # [B,NC,H,P,N]
+
+    # ---- inter-chunk recurrence over chunk states ----
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))            # [B,NC,H]
+    s0 = (jnp.zeros((bsz, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # st [B,H,P,N], dec [B,H]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)        # [NC,B,H,P,N]
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)    # [NC,B,H]
+    final, prev_states = jax.lax.scan(scan_fn, s0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,NC,H,P,N]
+
+    # ---- contribution of the incoming state to each position ----
+    state_decay = jnp.exp(cum)                   # decay from chunk start to i
+    y_off = jnp.einsum("bclhn,bclh,bchpn->bclhp",
+                       Cc, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y.astype(xh.dtype), final
+
+
+def ssm_apply(p: Dict, cfg, x: jnp.ndarray, *, mode: str = "train",
+              cache: Optional[Dict] = None
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Mamba2 block. mode 'train'/'prefill' run the chunked SSD over the full
+    sequence; 'decode' advances the recurrence by one token."""
+    bsz, s, _ = x.shape
+    h, pdim = cfg.ssm_n_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    di = cfg.ssm_d_inner
+    proj = L.dense_apply(p["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    conv_state = cache.get("conv") if cache else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xh, Bm, Cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xh = xh.reshape(bsz, s, h, pdim)
+    Bm = Bm.reshape(bsz, s, g, n)
+    Cm = Cm.reshape(bsz, s, g, n)
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        st = cache["state"].astype(jnp.float32)  # [B,H,P,N]
+        dtv = dt[:, 0]                            # [B,H]
+        dec = jnp.exp(dtv * A[None, :])           # [B,H]
+        Bv = jnp.repeat(Bm[:, 0], h // g, axis=1).astype(jnp.float32)  # [B,H,N]
+        Cv = jnp.repeat(Cm[:, 0], h // g, axis=1).astype(jnp.float32)
+        xv = xh[:, 0].astype(jnp.float32)         # [B,H,P]
+        new_state = (st * dec[:, :, None, None]
+                     + jnp.einsum("bh,bhn,bhp->bhpn", dtv, Bv, xv))
+        y = jnp.einsum("bhn,bhpn->bhp", Cv, new_state)
+        y = y[:, None]  # [B,1,H,P]
+        new_cache = {"state": new_state.astype(cache["state"].dtype),
+                     "conv": new_conv}
+    else:
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            # zero-pad the tail; padded steps have dt=0 => decay 1, no input,
+            # so the final state is unaffected and padded outputs are dropped.
+            zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +  # noqa: E731
+                                   [(0, 0)] * (a.ndim - 2))
+            xh_p, dt_p, Bm_p, Cm_p = zf(xh), zf(dt), zf(Bm), zf(Cm)
+            y, final = ssd_chunked(xh_p, dt_p, A, Bm_p, Cm_p, chunk)
+            y = y[:, :s]
+        else:
+            y, final = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+        y = y.astype(x.dtype)
+        new_cache = None
+        if mode == "prefill":
+            assert cache is not None, "prefill requires a preallocated cache"
+            new_cache = {"state": final.astype(cache["state"].dtype),
+                         "conv": new_conv.astype(cache["conv"].dtype)}
+
+    y = y + p["D"][None, None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)  # gated
+    y = L.norm_apply(p["norm"], y)
+    out = L.dense_apply(p["out_proj"], y)
+    return out, new_cache
+
+
+def ssm_cache_init(cfg, batch: int, dtype) -> Dict:
+    h, pdim, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, h, pdim, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }

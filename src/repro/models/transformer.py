@@ -1,0 +1,436 @@
+"""Generic decoder stack covering all six assigned families.
+
+Layer patterns (see DESIGN §4):
+  dense / audio : L x (attn + mlp)
+  moe           : first_k_dense x (attn + mlp) then (L-F) x (attn|mla + moe)
+  ssm           : L x mamba2
+  hybrid        : G x (attn_every x mamba2 + ONE weight-shared attn block)
+                  + (L mod attn_every) trailing mamba2 layers   (Zamba2)
+  vlm           : G x ((cross_attn_every-1) x self + 1 x cross-attn layer)
+
+All homogeneous runs of layers are ``lax.scan`` over stacked parameters so
+the compiled HLO contains each distinct block body once — essential for the
+40x2 dry-run matrix (88-layer 123B models compile in seconds). Every scan
+body is rematerialised (``jax.checkpoint``) in train mode.
+
+Caches are pytrees stacked exactly like the parameters that own them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.sharding.partitioning import constrain_activation
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# single blocks
+# --------------------------------------------------------------------------
+
+
+def _attn_block_init(key, cfg, use_moe: bool = False) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": L.norm_init(cfg.d_model, cfg.norm),
+         "norm2": L.norm_init(cfg.d_model, cfg.norm)}
+    if cfg.use_mla:
+        p["attn"] = MLA.mla_init(k1, cfg)
+    else:
+        p["attn"] = L.attn_init(k1, cfg)
+    if use_moe:
+        p["moe"] = MOE.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp)
+    return p
+
+
+def _attn_block_apply(p: Params, cfg, x, *, mode, pos, cache,
+                      ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    h = L.norm_apply(p["norm1"], x, cfg.norm)
+    if cfg.use_mla:
+        a, new_cache = MLA.mla_apply(p["attn"], cfg, h, mode=mode, pos=pos,
+                                     cache=cache)
+    else:
+        a, new_cache = L.attn_apply(p["attn"], cfg, h, mode=mode, pos=pos,
+                                    cache=cache)
+    x = x + a
+    h = L.norm_apply(p["norm2"], x, cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        m, aux = MOE.moe_apply(p["moe"], cfg, h)
+    else:
+        m = L.mlp_apply(p["mlp"], h, cfg.mlp)
+    return x + m, new_cache, aux
+
+
+def _cross_block_init(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": L.norm_init(cfg.d_model, cfg.norm),
+            "norm2": L.norm_init(cfg.d_model, cfg.norm),
+            "attn": L.attn_init(k1, cfg),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp),
+            "gate": jnp.zeros((), jnp.float32)}  # tanh-gated, llama-3.2 style
+
+
+def _cross_block_apply(p: Params, cfg, x, kv_x) -> jnp.ndarray:
+    h = L.norm_apply(p["norm1"], x, cfg.norm)
+    a, _ = L.attn_apply(p["attn"], cfg, h, mode="train", kv_x=kv_x)
+    x = x + jnp.tanh(p["gate"]).astype(x.dtype) * a
+    h = L.norm_apply(p["norm2"], x, cfg.norm)
+    return x + L.mlp_apply(p["mlp"], h, cfg.mlp)
+
+
+def _ssm_block_init(key, cfg) -> Params:
+    return {"norm": L.norm_init(cfg.d_model, cfg.norm),
+            "ssm": SSM.ssm_init(key, cfg)}
+
+
+def _ssm_block_apply(p: Params, cfg, x, *, mode, cache):
+    h = L.norm_apply(p["norm"], x, cfg.norm)
+    y, new_cache = SSM.ssm_apply(p["ssm"], cfg, h, mode=mode, cache=cache)
+    return x + y, new_cache, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# stacked init
+# --------------------------------------------------------------------------
+
+
+def _stacked(init_fn, key, n: int) -> Params:
+    if n == 0:
+        return None
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def model_init(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    if cfg.input_kind == "tokens":
+        p["embed"] = jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+    p["final_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings or cfg.input_kind != "tokens":
+        p["lm_head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32) * 0.02
+
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        p["blocks"] = _stacked(lambda k: _attn_block_init(k, cfg), keys[2],
+                               cfg.n_layers)
+    elif fam == "moe":
+        fk = cfg.first_k_dense
+        p["dense_blocks"] = _stacked(lambda k: _attn_block_init(k, cfg),
+                                     keys[2], fk)
+        p["blocks"] = _stacked(
+            lambda k: _attn_block_init(k, cfg, use_moe=True), keys[3],
+            cfg.n_layers - fk)
+    elif fam == "ssm":
+        p["blocks"] = _stacked(lambda k: _ssm_block_init(k, cfg), keys[2],
+                               cfg.n_layers)
+    elif fam == "hybrid":
+        ae = cfg.attn_every
+        g = cfg.n_layers // ae
+        rem = cfg.n_layers - g * ae
+        grouped = _stacked(lambda k: _ssm_block_init(k, cfg), keys[2], g * ae)
+        p["blocks"] = jax.tree_util.tree_map(
+            lambda a: a.reshape((g, ae) + a.shape[1:]), grouped)
+        p["tail_blocks"] = _stacked(lambda k: _ssm_block_init(k, cfg),
+                                    keys[3], rem)
+        p["shared_attn"] = _attn_block_init(keys[4], cfg)
+    elif fam == "vlm":
+        cae = cfg.cross_attn_every
+        g = cfg.n_layers // cae
+        per = cae - 1
+        rem = cfg.n_layers - g * cae
+        grouped = _stacked(lambda k: _attn_block_init(k, cfg), keys[2],
+                           g * per)
+        p["blocks"] = jax.tree_util.tree_map(
+            lambda a: a.reshape((g, per) + a.shape[1:]), grouped)
+        p["cross_blocks"] = _stacked(lambda k: _cross_block_init(k, cfg),
+                                     keys[3], g)
+        p["tail_blocks"] = _stacked(lambda k: _attn_block_init(k, cfg),
+                                    keys[4], rem)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return p
+
+
+# --------------------------------------------------------------------------
+# cache init
+# --------------------------------------------------------------------------
+
+
+def _block_cache_init(cfg, batch: int, max_len: int, dtype, kind: str):
+    if kind == "ssm":
+        return SSM.ssm_cache_init(cfg, batch, dtype)
+    if cfg.use_mla and kind == "attn":
+        return MLA.mla_cache_init(cfg, batch, max_len, dtype)
+    return L.attn_cache_init(cfg, batch, max_len, dtype)
+
+
+def _stack_caches(make_one, n: int):
+    if n == 0:
+        return None
+    one = make_one()
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy()
+        if hasattr(a, "shape") else a, one)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Dict:
+    """Build the full stacked cache pytree for decode."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    c: Dict[str, Any] = {}
+    if fam in ("dense", "audio", "vlm"):
+        attn_c = lambda: _block_cache_init(cfg, batch, max_len, dtype, "attn")  # noqa: E731
+        if fam == "vlm":
+            cae = cfg.cross_attn_every
+            g = cfg.n_layers // cae
+            per = cae - 1
+            rem = cfg.n_layers - g * cae
+            grouped = _stack_caches(attn_c, g * per)
+            c["blocks"] = jax.tree_util.tree_map(
+                lambda a: a.reshape((g, per) + a.shape[1:]), grouped)
+            c["tail_blocks"] = _stack_caches(attn_c, rem)
+        else:
+            c["blocks"] = _stack_caches(attn_c, cfg.n_layers)
+    elif fam == "moe":
+        attn_c = lambda: _block_cache_init(cfg, batch, max_len, dtype, "attn")  # noqa: E731
+        c["dense_blocks"] = _stack_caches(attn_c, cfg.first_k_dense)
+        c["blocks"] = _stack_caches(attn_c, cfg.n_layers - cfg.first_k_dense)
+    elif fam == "ssm":
+        ssm_c = lambda: _block_cache_init(cfg, batch, max_len, dtype, "ssm")  # noqa: E731
+        c["blocks"] = _stack_caches(ssm_c, cfg.n_layers)
+    elif fam == "hybrid":
+        ae = cfg.attn_every
+        g = cfg.n_layers // ae
+        rem = cfg.n_layers - g * ae
+        ssm_c = lambda: _block_cache_init(cfg, batch, max_len, dtype, "ssm")  # noqa: E731
+        attn_c = lambda: L.attn_cache_init(cfg, batch, max_len, dtype)  # noqa: E731
+        grouped = _stack_caches(ssm_c, g * ae)
+        c["blocks"] = jax.tree_util.tree_map(
+            lambda a: a.reshape((g, ae) + a.shape[1:]), grouped)
+        c["shared_attn"] = _stack_caches(attn_c, g)
+        c["tail_blocks"] = _stack_caches(ssm_c, rem)
+    return c
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _scan_layers(apply_one, stacked_params, x, caches, *, remat: bool):
+    """Scan ``apply_one(p, x, cache) -> (x, new_cache, aux)`` over layer dim 0
+    of ``stacked_params`` (and ``caches`` if given)."""
+    if stacked_params is None:
+        return x, caches, jnp.zeros((), jnp.float32)
+
+    has_cache = caches is not None
+
+    def body(carry, inp):
+        xx = carry
+        if has_cache:
+            pp, cc = inp
+        else:
+            pp, cc = inp, None
+        y, new_c, aux = apply_one(pp, xx, cc)
+        y = constrain_activation(y)
+        return y, (new_c, aux) if has_cache else aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (stacked_params, caches) if has_cache else stacked_params
+    x, out = jax.lax.scan(body, x, xs)
+    if has_cache:
+        new_caches, auxs = out
+    else:
+        new_caches, auxs = None, out
+    return x, new_caches, jnp.sum(auxs)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, mode: str = "train", pos=0, caches: Optional[Dict] = None,
+            remat: Optional[bool] = None) -> Tuple[jnp.ndarray, Any, Any]:
+    """Run the decoder stack.
+
+    batch: {"tokens": [B,S] int32} or {"embeddings": [B,S,D]}; VLMs add
+    {"image_embeddings": [B,T_img,D]}.
+
+    Returns (hidden [B,S,D], new_caches, aux dict with 'moe_loss').
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    remat = (mode == "train") if remat is None else remat
+    if mode in ("prefill", "decode"):
+        assert caches is not None, f"{mode} requires preallocated caches"
+    if cfg.input_kind == "tokens":
+        x = params["embed"].astype(dtype)[batch["tokens"]]
+        if cfg.family == "dense" and cfg.tie_embeddings:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(dtype)
+    else:
+        x = batch["embeddings"].astype(dtype)
+    x = constrain_activation(x)
+    kv_img = batch.get("image_embeddings")
+    if kv_img is not None:
+        kv_img = kv_img.astype(dtype)
+
+    fam = cfg.family
+    moe_loss = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+    cc = caches or {}
+
+    if fam in ("dense", "audio", "moe"):
+        def one(p, xx, c, use_moe=False):
+            return _attn_block_apply(p, cfg, xx, mode=mode, pos=pos, cache=c)
+        if fam == "moe" and params.get("dense_blocks") is not None:
+            x, nc, a = _scan_layers(one, params["dense_blocks"], x,
+                                    cc.get("dense_blocks"), remat=remat)
+            new_caches["dense_blocks"] = nc
+            moe_loss += a
+        x, nc, a = _scan_layers(one, params["blocks"], x, cc.get("blocks"),
+                                remat=remat)
+        new_caches["blocks"] = nc
+        moe_loss += a
+
+    elif fam == "ssm":
+        def one(p, xx, c):
+            return _ssm_block_apply(p, cfg, xx, mode=mode, cache=c)
+        x, nc, _ = _scan_layers(one, params["blocks"], x, cc.get("blocks"),
+                                remat=remat)
+        new_caches["blocks"] = nc
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def ssm_one(p, xx, c):
+            return _ssm_block_apply(p, cfg, xx, mode=mode, cache=c)
+
+        def group(carry, inp):
+            xx = carry
+            if cc:
+                gp, gcache, scache = inp
+            else:
+                gp, gcache, scache = inp, None, None
+            xx, ncache, _ = _scan_layers(ssm_one, gp, xx, gcache, remat=remat)
+            xx, nshared, _ = _attn_block_apply(shared, cfg, xx, mode=mode,
+                                               pos=pos, cache=scache)
+            out = (ncache, nshared) if cc else None
+            return xx, out
+
+        gbody = jax.checkpoint(group) if remat else group
+        xs = ((params["blocks"], cc["blocks"], cc["shared_attn"])
+              if cc else params["blocks"])
+        x, gout = jax.lax.scan(gbody, x, xs)
+        if cc:
+            new_caches["blocks"], new_caches["shared_attn"] = gout
+        x, nc, _ = _scan_layers(ssm_one, params.get("tail_blocks"), x,
+                                cc.get("tail_blocks"), remat=remat)
+        new_caches["tail_blocks"] = nc
+
+    elif fam == "vlm":
+        def self_one(p, xx, c):
+            return _attn_block_apply(p, cfg, xx, mode=mode, pos=pos, cache=c)
+
+        def group(carry, inp):
+            xx = carry
+            if cc:
+                sp, xp, scache = inp
+            else:
+                (sp, xp), scache = inp, None
+            xx, ncache, _ = _scan_layers(self_one, sp, xx, scache,
+                                         remat=remat)
+            xx = _cross_block_apply(xp, cfg, xx, kv_img)
+            return xx, ncache
+
+        gbody = jax.checkpoint(group) if remat else group
+        xs = ((params["blocks"], params["cross_blocks"], cc["blocks"])
+              if cc else (params["blocks"], params["cross_blocks"]))
+        x, gout = jax.lax.scan(gbody, x, xs)
+        if cc:
+            new_caches["blocks"] = gout
+        x, nc, _ = _scan_layers(self_one, params.get("tail_blocks"), x,
+                                cc.get("tail_blocks"), remat=remat)
+        new_caches["tail_blocks"] = nc
+
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    return x, (new_caches if caches is not None else None), \
+        {"moe_loss": moe_loss}
+
+
+# --------------------------------------------------------------------------
+# heads & losses
+# --------------------------------------------------------------------------
+
+
+def logits_fn(params: Params, cfg: ModelConfig,
+              hidden: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings and "embed" in params:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    return hidden @ w.astype(hidden.dtype)
+
+
+def chunked_xent(params: Params, cfg: ModelConfig, hidden: jnp.ndarray,
+                 targets: jnp.ndarray, loss_mask: Optional[jnp.ndarray] = None,
+                 chunk: int = 512) -> jnp.ndarray:
+    """Next-token cross entropy with the LM head applied per sequence chunk,
+    so [B, S, V] logits never materialise at 150k-256k vocabularies."""
+    b, s, d = hidden.shape
+    if loss_mask is None:
+        loss_mask = jnp.ones((b, s), jnp.float32)
+    if s <= chunk:
+        logits = logits_fn(params, cfg, hidden).astype(jnp.float32)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, targets[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        loss_mask = jnp.pad(loss_mask, ((0, 0), (0, pad)))
+        s += pad
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = loss_mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def per_chunk(args):
+        h, t, m = args
+        logits = logits_fn(params, cfg, h).astype(jnp.float32)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, t[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * m)
+
+    tot = jnp.sum(jax.lax.map(per_chunk, (hs, ts, ms)))
+    return tot / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            moe_loss_weight: float = 0.01) -> jnp.ndarray:
+    """Standard causal-LM training loss over ``batch['tokens']`` (shifted),
+    or over provided ``batch['targets']`` for embedding-input models."""
+    hidden, _, aux = forward(params, cfg, batch, mode="train")
+    if "targets" in batch:
+        targets = batch["targets"]
+        mask = batch.get("loss_mask")
+        hidden_in = hidden
+    else:
+        targets = batch["tokens"][:, 1:]
+        hidden_in = hidden[:, :-1]
+        mask = None
+    loss = chunked_xent(params, cfg, hidden_in, targets, mask)
+    return loss + moe_loss_weight * aux["moe_loss"]

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import sgd, heavy_ball, adamw, apply_updates, cosine_schedule, Optimizer
+
+__all__ = ["sgd", "heavy_ball", "adamw", "apply_updates", "cosine_schedule", "Optimizer"]

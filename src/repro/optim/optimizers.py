@@ -1,0 +1,95 @@
+"""Minimal pytree optimizers (no optax offline).
+
+The RoSDHB *server* update is part of ``repro.core``; these optimizers serve
+the substrate roles: reference non-robust training, the examples' inner
+loops, and the serve-side fine-tuning demos. API mirrors optax:
+``init(params) -> state``, ``update(grads, state, params) -> (updates, state)``
+with updates to be *added* to params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Tree], Tree]
+    update: Callable[[Tree, Tree, Tree], Tuple[Tree, Tree]]
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def heavy_ball(lr: float, beta: float = 0.9) -> Optimizer:
+    """Polyak momentum in the paper's normalisation:
+    m_t = beta m_{t-1} + (1-beta) g_t;  theta -= lr * m_t."""
+
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, m, params):
+        m = jax.tree_util.tree_map(
+            lambda mm, g: beta * mm + (1.0 - beta) * g, m, grads)
+        return jax.tree_util.tree_map(lambda mm: -lr * mm, m), m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Tree
+    nu: Tree
+    count: jnp.ndarray
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return AdamState(z, z, jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            return -lr * (step + weight_decay * p)
+
+        return (jax.tree_util.tree_map(upd, mu, nu, params),
+                AdamState(mu, nu, count))
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: Tree, updates: Tree) -> Tree:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

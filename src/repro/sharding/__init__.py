@@ -1,0 +1,18 @@
+from repro.sharding.partitioning import (
+    param_specs,
+    param_shardings,
+    batch_spec,
+    bank_spec,
+    server_axes,
+    constrain_activation,
+    cache_spec,
+    cache_shardings,
+    dp_axes,
+    all_axes,
+    n_workers,
+)
+
+__all__ = [
+    "param_specs", "param_shardings", "batch_spec", "bank_spec", "server_axes", "constrain_activation",
+    "cache_spec", "cache_shardings", "dp_axes", "all_axes", "n_workers",
+]

@@ -1,0 +1,220 @@
+"""PartitionSpec rules for the production mesh.
+
+Axis semantics (DESIGN §3):
+  pod   — pods in the multi-pod mesh (data-parallel across pods)
+  data  — data parallelism; its groups ARE the RoSDHB workers
+  model — tensor / expert parallelism
+
+Rules are matched on the flattened parameter path. Every sharding decision is
+guarded by divisibility: if a dim does not divide evenly over the requested
+axis, the axis is dropped (GSPMD would handle uneven shards, but even shards
+keep the collective schedule predictable — and the dry-run honest).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh else ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_workers(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0 and dim >= size
+
+
+def _spec(mesh: Mesh, shape: Sequence[int], *axes) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide their dim."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        out.append(ax if (ax is not None and _fits(dim, mesh, ax)) else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: Sequence[int], mesh: Mesh,
+               fsdp: bool) -> P:
+    """PartitionSpec for one parameter leaf (trailing dims = logical shape;
+    extra leading dims are stacked layer/group dims, replicated)."""
+    fs = "data" if fsdp else None
+    nd = len(shape)
+
+    def with_lead(rule_ndim: int, *axes) -> P:
+        lead = nd - rule_ndim
+        spec = _spec(mesh, shape[lead:], *axes)
+        return P(*([None] * lead + list(spec)))
+
+    name = path.split("/")[-1]  # 'w' | 'b' | 'scale' | tensor name
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    # --- embeddings / head ---
+    if name == "embed":
+        return with_lead(2, "model", fs)
+    if name == "lm_head":
+        return with_lead(2, fs, "model")
+
+    # --- MoE expert banks [E, din, dout] ---
+    if parent and path.split("/")[-3:-1] and "moe" in path.split("/"):
+        if name in ("wi", "wg"):
+            return with_lead(3, "model", fs, None)
+        if name == "wo":
+            return with_lead(3, "model", None, fs)
+
+    # --- dense-style projections {w, b} ---
+    if name == "w":
+        if parent in ("wq", "wk", "wv", "wi", "wg", "wukv"):
+            return with_lead(2, fs, "model")
+        if parent == "wo":
+            return with_lead(2, "model", fs)
+        if parent in ("wdkv", "router"):
+            return with_lead(2, fs, None)
+        if parent in ("in_proj",):
+            return with_lead(2, fs, "model")
+        if parent == "out_proj":
+            return with_lead(2, "model", fs)
+        if parent in ("fc1", "fc2", "conv1", "conv2"):
+            return P(*([None] * nd))  # paper CNN: replicated
+        return P(*([None] * nd))
+    if name == "b":
+        return P(*([None] * nd))
+
+    # --- SSM tensors ---
+    if name == "conv_w":
+        return with_lead(2, None, "model")
+    if name in ("conv_b", "A_log", "dt_bias", "D"):
+        return P(*([None] * nd))
+
+    # --- norms, gates, everything else: replicated ---
+    return P(*([None] * nd))
+
+
+def param_specs(abstract_params: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """Pytree of PartitionSpecs matching ``abstract_params``."""
+    def leaf(path, x):
+        return param_spec(_path_str(path), x.shape, mesh, fsdp)
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+def param_shardings(abstract_params: Any, mesh: Mesh,
+                    fsdp: bool = False) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(abstract_params, mesh, fsdp),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# activations / batches / caches / server state
+# --------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, shape: Sequence[int],
+               worker_dim: bool = False) -> P:
+    """Spec for a batch array: leading dim(s) over data-parallel axes.
+
+    worker_dim=True: dim0 is the stacked worker axis [n_workers, ...]
+    (train step); else dim0 is the plain batch dim (serve steps).
+    """
+    dp = dp_axes(mesh)
+    lead = dp if _fits(shape[0], mesh, dp) else None
+    return P(lead, *([None] * (len(shape) - 1)))
+
+
+def server_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axis order for the server's coordinate dim: MODEL-MAJOR.
+
+    The producer layout of the flattened gradients is [n(data), D(model)].
+    With a model-major coordinate tiling, the reshard to the bank layout is
+    a pure all-to-all over the data axis (each chip keeps its model column);
+    with data-major tiling GSPMD has no efficient path and replicates whole
+    [1, D] rows ("involuntary full rematerialization") — ~456 GiB/chip at
+    123B params. See EXPERIMENTS §Perf iteration 4.
+    """
+    return ("model",) + dp_axes(mesh)
+
+
+def bank_spec(mesh: Mesh) -> P:
+    """RoSDHB momentum bank [n_workers, D]: workers replicated, coordinates
+    sharded over the whole mesh (the coordinate-sharded virtual server),
+    model-major (see server_axes)."""
+    return P(None, server_axes(mesh))
+
+
+def cache_spec(mesh: Mesh, shape: Sequence[int],
+               batch: Optional[int] = None) -> P:
+    """KV/SSM cache specs for decode.
+
+    Caches may carry a leading stacked-layer dim, so dims are identified by
+    value: the batch dim (== ``batch``) is sharded over dp; the model axis
+    goes on a trailing head/state-like dim (iterating from the last dim
+    backwards, skipping seq-like dims >= 4096). The seq dim is NEVER
+    sharded: decode writes a dynamic-update-slice at a runtime position and
+    GSPMD replicates DUS on a sharded dim (§Perf iter 9 — 355 GiB/chip on
+    mistral decode_32k).
+    """
+    dp = dp_axes(mesh)
+    spec: list = [None] * len(shape)
+    batch_dim = None
+    for i, dim in enumerate(shape):
+        if batch is not None and dim == batch and _fits(dim, mesh, dp):
+            batch_dim = i
+            spec[i] = dp
+            break
+    start = (batch_dim + 1) if batch_dim is not None else 1
+    for i in range(len(shape) - 1, start - 1, -1):
+        if shape[i] < 4096 and _fits(shape[i], mesh, "model"):
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def cache_shardings(abstract_caches: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, cache_spec(mesh, x.shape)),
+        abstract_caches)
+
+
+def constrain_activation(x):
+    """Mesh-aware activation constraint: shard the trailing (d_model) dim
+    over 'model' when divisible. A no-op outside a mesh context, so model
+    code can call it unconditionally. Inside ``vmap(..., spmd_axis_name=dp)``
+    the constraint is lifted with the worker dim pinned to the data axes —
+    this is what keeps the scan's saved residuals worker-sharded
+    (EXPERIMENTS §Perf iter 5)."""
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty or "model" not in mesh.axis_names:
+        return x
+    last = "model" if x.shape[-1] % mesh.shape["model"] == 0 else None
+    spec = P(*([None] * (x.ndim - 1) + [last]))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

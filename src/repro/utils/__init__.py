@@ -1,0 +1,21 @@
+from repro.utils.logging import MetricsLogger
+from repro.utils.tree import (
+    tree_size,
+    tree_ravel,
+    tree_unravel,
+    stacked_ravel,
+    stacked_unravel,
+    FlatSpec,
+    make_flat_spec,
+)
+
+__all__ = [
+    "MetricsLogger",
+    "tree_size",
+    "tree_ravel",
+    "tree_unravel",
+    "stacked_ravel",
+    "stacked_unravel",
+    "FlatSpec",
+    "make_flat_spec",
+]

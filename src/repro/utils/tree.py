@@ -1,0 +1,132 @@
+"""Pytree <-> flat-vector utilities.
+
+The RoSDHB server operates on flattened parameter/gradient vectors: the
+momentum bank is a dense ``[n_workers, D]`` array and the robust aggregators
+are defined coordinate-wise over ``D``. These helpers convert between model
+pytrees (possibly with a leading stacked worker axis) and flat vectors, with
+optional padding so ``D`` divides the number of mesh devices evenly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of scalar elements across all leaves."""
+    return int(sum(np.prod(l.shape, dtype=np.int64) if hasattr(l, "shape") else 1
+                   for l in jax.tree_util.tree_leaves(tree)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static description of a pytree's flattened layout.
+
+    Attributes:
+      treedef: the pytree structure.
+      shapes: per-leaf shapes, in ``tree_leaves`` order.
+      dtypes: per-leaf dtypes.
+      sizes: per-leaf element counts.
+      offsets: per-leaf start offsets into the flat vector.
+      size: total unpadded size ``D``.
+      padded_size: ``D`` rounded up to a multiple of ``pad_to``.
+    """
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple
+    offsets: tuple
+    size: int
+    padded_size: int
+
+    @property
+    def pad(self) -> int:
+        return self.padded_size - self.size
+
+
+def make_flat_spec(tree: Any, pad_to: int = 1) -> FlatSpec:
+    """Build a :class:`FlatSpec` for ``tree`` (works on ShapeDtypeStructs too)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    size = int(sum(sizes))
+    padded = int(-(-size // pad_to) * pad_to)
+    return FlatSpec(treedef, shapes, dtypes, sizes, offsets, size, padded)
+
+
+def tree_ravel(tree: Any, spec: FlatSpec | None = None,
+               dtype: Any = jnp.float32) -> jnp.ndarray:
+    """Flatten ``tree`` into a single 1-D vector of ``spec.padded_size``."""
+    if spec is None:
+        spec = make_flat_spec(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    parts = [jnp.reshape(l, (-1,)).astype(dtype) for l in leaves]
+    if spec.pad:
+        parts.append(jnp.zeros((spec.pad,), dtype=dtype))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def tree_unravel(flat: jnp.ndarray, spec: FlatSpec) -> Any:
+    """Inverse of :func:`tree_ravel` (drops padding, restores leaf dtypes)."""
+    leaves = []
+    for shape, dtype, size, off in zip(spec.shapes, spec.dtypes, spec.sizes,
+                                       spec.offsets):
+        leaves.append(jax.lax.slice_in_dim(flat, off, off + size)
+                      .reshape(shape).astype(dtype))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def stacked_ravel(tree: Any, spec: FlatSpec | None = None,
+                  dtype: Any = jnp.float32) -> jnp.ndarray:
+    """Flatten a pytree whose every leaf has a leading stacked axis ``n``.
+
+    Returns a ``[n, padded_size]`` array. ``spec`` must describe the
+    *unstacked* tree (i.e. leaf shapes without the leading axis).
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    if spec is None:
+        unstacked = jax.tree_util.tree_map(lambda l: l[0], tree)
+        spec = make_flat_spec(unstacked)
+    parts = [jnp.reshape(l, (n, -1)).astype(dtype) for l in leaves]
+    if spec.pad:
+        parts.append(jnp.zeros((n, spec.pad), dtype=dtype))
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def stacked_unravel(flat: jnp.ndarray, spec: FlatSpec) -> Any:
+    """Inverse of :func:`stacked_ravel`: ``[n, padded]`` -> stacked pytree."""
+    n = flat.shape[0]
+    leaves = []
+    for shape, dtype, size, off in zip(spec.shapes, spec.dtypes, spec.sizes,
+                                       spec.offsets):
+        leaves.append(
+            jax.lax.slice_in_dim(flat, off, off + size, axis=1)
+            .reshape((n,) + shape).astype(dtype))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def tree_cast(tree: Any, dtype: Any) -> Any:
+    return jax.tree_util.tree_map(lambda l: l.astype(dtype), tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(a: Any, s) -> Any:
+    return jax.tree_util.tree_map(lambda l: l * s, a)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,105 @@
+"""(f, kappa)-robustness property tests (Definition 2.2 of the paper).
+
+The defining inequality — for EVERY subset S of size n - f:
+    ||F(x) - mean_S||^2 <= (kappa/|S|) * sum_{i in S} ||x_i - mean_S||^2
+is checked with hypothesis-generated inputs against each rule's published
+kappa bound.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregators as G
+
+
+def _check_resilience(agg, kappa: float, x: np.ndarray, f: int) -> bool:
+    n = x.shape[0]
+    out = np.asarray(agg(jnp.asarray(x)))
+    for s in itertools.combinations(range(n), n - f):
+        xs = x[list(s)]
+        mu = xs.mean(0)
+        lhs = float(((out - mu) ** 2).sum())
+        rhs = kappa / len(s) * float(((xs - mu) ** 2).sum(1).sum())
+        if lhs > rhs + 1e-6:
+            return False
+    return True
+
+
+@pytest.mark.parametrize("name", ["cwtm", "median", "geomed", "krum"])
+@pytest.mark.parametrize("pre_nnm", [False, True])
+def test_robustness_inequality(name, pre_nnm):
+    n, f, d = 7, 2, 5
+    cfg = G.AggregatorConfig(name=name, f=f, pre_nnm=pre_nnm,
+                             geomed_iters=64)
+    agg = G.make_aggregator(cfg)
+    kappa = cfg.kappa_bound(n)
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        # adversarial rows: blow up the first f
+        x[:f] *= rng.uniform(5, 50)
+        assert _check_resilience(agg, kappa, x, f), (name, pre_nnm, trial)
+
+
+@given(st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_cwtm_between_min_max(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(9, 12)).astype(np.float32)
+    out = np.asarray(G.trimmed_mean(jnp.asarray(x), f=2))
+    assert np.all(out <= x.max(0) + 1e-6)
+    assert np.all(out >= x.min(0) - 1e-6)
+
+
+def test_cwtm_ignores_f_outliers():
+    x = np.zeros((10, 4), np.float32)
+    x[:3] = 1e9  # 3 Byzantine rows
+    out = np.asarray(G.trimmed_mean(jnp.asarray(x), f=3))
+    assert np.all(np.abs(out) < 1e-3)
+
+
+def test_geomed_resists_outliers():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(11, 6)).astype(np.float32)
+    x[:2] = 1e6
+    out = np.asarray(G.geometric_median(jnp.asarray(x), iters=128))
+    assert np.linalg.norm(out) < 10.0
+
+
+def test_krum_selects_inlier():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(8, 5)).astype(np.float32)
+    x[0] = 100.0
+    out = np.asarray(G.krum(jnp.asarray(x), f=1))
+    assert np.linalg.norm(out) < 10.0
+
+
+def test_nnm_shape_and_mixing():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(6, 4)).astype(np.float32)
+    mixed = np.asarray(G.nnm(jnp.asarray(x), f=2))
+    assert mixed.shape == x.shape
+    # mixing contracts the spread
+    assert mixed.std(0).mean() <= x.std(0).mean() + 1e-6
+
+
+def test_mean_equals_numpy():
+    x = np.arange(12, dtype=np.float32).reshape(4, 3)
+    assert np.allclose(np.asarray(G.mean(jnp.asarray(x))), x.mean(0))
+
+
+def test_kappa_bounds_finite_and_ordered():
+    for n, f in [(10, 2), (19, 9), (16, 2)]:
+        for name in ["cwtm", "median", "geomed", "krum"]:
+            k = G.AggregatorConfig(name=name, f=f).kappa_bound(n)
+            assert np.isfinite(k) if n > 2 * f else True
+    # mean is never robust
+    assert G.AggregatorConfig(name="mean", f=1).kappa_bound(10) == float("inf")
+    # cwtm + nnm should satisfy Theorem 1's precondition for the paper's setup
+    cfg = G.AggregatorConfig(name="cwtm", f=2, pre_nnm=True)
+    assert cfg.kappa_bound(16) < 2.0

@@ -1,0 +1,118 @@
+"""Server-round algorithm tests on quadratic losses: convergence of each
+algorithm, Byzantine resilience, the global-vs-local sparsification gap, and
+Theorem-1 hyperparameter schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AlgorithmConfig, AggregatorConfig, AttackConfig, SparsifierConfig,
+    apply_direction, init_state, server_round, theorem1_hparams,
+)
+
+D = 48
+
+
+def _targets(n, key=0, spread=0.1):
+    k = jax.random.PRNGKey(key)
+    return jax.random.normal(k, (n, D)) * spread + jnp.ones(D)
+
+
+def _run(cfg, steps=600, seed=2, targets=None):
+    tg = _targets(cfg.n_workers) if targets is None else targets
+    st = init_state(cfg, D)
+    th = jnp.zeros(D)
+    k = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def one(th, st, k):
+        k, sk = jax.random.split(k)
+        r, st, _ = server_round(cfg, st, th[None, :] - tg, sk)
+        return apply_direction(th, r, cfg.gamma), st, k
+
+    for _ in range(steps):
+        th, st, k = one(th, st, k)
+    honest_opt = jnp.mean(tg[cfg.f:], axis=0)
+    return float(jnp.linalg.norm(th - honest_opt))
+
+
+@pytest.mark.parametrize("name,ratio,gamma", [
+    ("rosdhb", 0.2, 0.1),
+    ("dasha", 0.2, 0.1),
+    ("robust_dgd", 1.0, 0.1),
+    ("dgd", 0.2, 0.1),
+])
+def test_convergence_no_attack(name, ratio, gamma):
+    cfg = AlgorithmConfig(
+        name=name, n_workers=10, f=0, gamma=gamma, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=ratio),
+        aggregator=AggregatorConfig(name="cwtm", f=1),
+        attack=AttackConfig(name="none"))
+    assert _run(cfg) < 0.25
+
+
+@pytest.mark.parametrize("attack", ["alie", "signflip", "foe", "ipm",
+                                    "mimic", "zero"])
+def test_rosdhb_resists_attacks(attack):
+    f = 3
+    cfg = AlgorithmConfig(
+        name="rosdhb", n_workers=10, f=f, gamma=0.1, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=0.2),
+        aggregator=AggregatorConfig(name="cwtm", f=f, pre_nnm=True),
+        attack=AttackConfig(name=attack, z=1.5 if attack == "alie" else None))
+    assert _run(cfg) < 0.5
+
+
+def test_naive_dgd_breaks_under_foe():
+    f = 3
+    cfg = AlgorithmConfig(
+        name="dgd", n_workers=10, f=f, gamma=0.1, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=0.2),
+        aggregator=AggregatorConfig(name="mean"),
+        attack=AttackConfig(name="foe", scale=10.0))
+    d = _run(cfg, steps=300)
+    assert not np.isfinite(d) or d > 2.0
+
+
+def test_global_beats_local_sparsification():
+    """Theorem 1 vs Theorem 2: coordinated masks should converge closer at
+    equal budget (averaged over seeds)."""
+    def dist(local, seed):
+        cfg = AlgorithmConfig(
+            name="rosdhb", n_workers=10, f=2, gamma=0.08, beta=0.9,
+            sparsifier=SparsifierConfig(kind="randk", ratio=0.1, local=local),
+            aggregator=AggregatorConfig(name="cwtm", f=2, pre_nnm=True),
+            attack=AttackConfig(name="alie", z=1.5))
+        return _run(cfg, steps=500, seed=seed)
+
+    g = np.mean([dist(False, s) for s in range(3)])
+    l = np.mean([dist(True, s) for s in range(3)])
+    assert g < l
+
+
+def test_theorem1_hparams():
+    gamma, beta = theorem1_hparams(L=2.0, ratio=0.1)
+    assert gamma == pytest.approx(0.1 / (23200 * 2.0))
+    assert beta == pytest.approx(np.sqrt(1 - 24 * gamma * 2.0))
+    # resolved_beta matches the schedule
+    cfg = AlgorithmConfig(gamma=gamma, beta=None, smoothness_L=2.0)
+    assert cfg.resolved_beta() == pytest.approx(beta)
+
+
+def test_momentum_dtype_bank():
+    cfg = AlgorithmConfig(name="rosdhb", n_workers=4, momentum_dtype="bfloat16")
+    st = init_state(cfg, 16)
+    assert st.momentum.dtype == jnp.bfloat16
+    r, st2, _ = server_round(cfg, st, jnp.ones((4, 16)), jax.random.PRNGKey(0))
+    assert st2.momentum.dtype == jnp.bfloat16
+    assert r.shape == (16,)
+
+
+def test_server_state_counts_steps():
+    cfg = AlgorithmConfig(name="rosdhb", n_workers=4)
+    st = init_state(cfg, 8)
+    _, st, _ = server_round(cfg, st, jnp.ones((4, 8)), jax.random.PRNGKey(0))
+    _, st, _ = server_round(cfg, st, jnp.ones((4, 8)), jax.random.PRNGKey(1))
+    assert int(st.step) == 2

@@ -1,0 +1,103 @@
+"""Deliverable (f): per assigned architecture, instantiate a REDUCED variant
+of the same family (<= 2 layers, d_model <= 512, <= 4 experts) and run one
+forward + one train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (launch/dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import forward, lm_loss, model_init
+from repro.utils.tree import global_norm, tree_size
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _reduced(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.model.reduced(n_layers=2, d_model=256)
+    return cfg.with_overrides(dtype="float32")
+
+
+def _batch(cfg, b=2, s=16):
+    batch = {}
+    if cfg.input_kind == "tokens":
+        batch["tokens"] = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    else:
+        batch["embeddings"] = jax.random.normal(KEY, (b, s, cfg.d_model))
+        batch["targets"] = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["image_embeddings"] = jax.random.normal(
+            KEY, (b, cfg.n_image_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_reduced_constraints(arch_id):
+    cfg = _reduced(arch_id)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    # family preserved
+    assert cfg.family == get_arch(arch_id).model.family
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward(arch_id):
+    cfg = _reduced(arch_id)
+    params = model_init(KEY, cfg)
+    assert tree_size(params) > 0
+    batch = _batch(cfg)
+    hidden, _, _ = forward(params, cfg, batch, mode="train")
+    assert hidden.shape == (2, 16, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(hidden)))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step(arch_id):
+    """One full train step: loss + grads + SGD update, all finite."""
+    cfg = _reduced(arch_id)
+    params = model_init(KEY, cfg)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(lm_loss)(params, cfg, batch)
+    assert np.isfinite(float(loss)), arch_id
+    gn = float(global_norm(grads))
+    assert np.isfinite(gn) and gn > 0, arch_id
+    new_params = jax.tree_util.tree_map(lambda p, g: p - 1e-2 * g,
+                                        params, grads)
+    loss2 = float(lm_loss(new_params, cfg, batch))
+    assert np.isfinite(loss2), arch_id
+
+
+def test_full_configs_match_assignment():
+    expect = {
+        "stablelm_3b": (32, 2560, 32, 32, 6912, 50304),
+        "mamba2_1_3b": (48, 2048, None, None, 0, 50280),
+        "deepseek_v2_lite_16b": (27, 2048, 16, 16, 1408, 102400),
+        "musicgen_medium": (48, 1536, 24, 24, 6144, 2048),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "mistral_large_123b": (88, 12288, 96, 8, 28672, 32768),
+        "llama32_vision_11b": (40, 4096, 32, 8, 14336, 128256),
+        "qwen25_3b": (36, 2048, 16, 2, 11008, 151936),
+        "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+    }
+    for arch_id, (L, d, h, kv, ff, v) in expect.items():
+        m = get_arch(arch_id).model
+        assert m.n_layers == L and m.d_model == d and m.d_ff == ff \
+            and m.vocab_size == v, arch_id
+        if h is not None:
+            assert m.n_heads == h and m.n_kv_heads == kv, arch_id
+    # family-specific details
+    ds = get_arch("deepseek_v2_lite_16b").model
+    assert ds.use_mla and ds.kv_lora_rank == 512 and ds.n_experts == 64 \
+        and ds.top_k == 6
+    assert get_arch("dbrx_132b").model.n_experts == 16
+    assert get_arch("dbrx_132b").model.top_k == 4
+    assert get_arch("gemma_2b").model.resolved_head_dim == 256
+    assert get_arch("mamba2_1_3b").model.ssm_state == 128
+    assert get_arch("zamba2_7b").model.ssm_state == 64
+    assert get_arch("zamba2_7b").model.attn_every == 6
+    assert get_arch("qwen25_3b").model.qkv_bias

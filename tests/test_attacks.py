@@ -1,0 +1,60 @@
+"""Byzantine attack behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks as A
+
+
+def _honest(h=8, d=6, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (h, d)) + 2.0
+
+
+def test_alie_is_mean_minus_z_std():
+    x = _honest()
+    byz = A.alie(x, f=3, z=1.5)
+    expected = jnp.mean(x, 0) - 1.5 * jnp.std(x, 0)
+    assert byz.shape == (3, 6)
+    np.testing.assert_allclose(np.asarray(byz[0]), np.asarray(expected),
+                               rtol=1e-5)
+
+
+def test_alie_z_formula():
+    # n=19, f=9 (the paper's extreme case): s = floor(19/2+1)-9 = 1
+    z = A._alie_z(19, 9)
+    assert z > 0.5  # strong shift available near half Byzantine
+    # small f => little room to shift the median
+    assert A._alie_z(10, 2) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_signflip_foe_direction():
+    x = _honest()
+    mu = jnp.mean(x, 0)
+    assert jnp.allclose(A.sign_flip(x, 1)[0], -mu)
+    assert jnp.allclose(A.foe(x, 1, scale=10.0)[0], -10.0 * mu)
+    assert jnp.allclose(A.ipm(x, 1, eps=0.5)[0], -0.5 * mu)
+
+
+def test_mimic_copies_target():
+    x = _honest()
+    assert jnp.allclose(A.mimic(x, 2, target=3)[1], x[3])
+
+
+def test_apply_attack_dispatch_and_f0():
+    x = _honest()
+    for name in ["alie", "signflip", "ipm", "foe", "mimic", "zero"]:
+        out = A.apply_attack(A.AttackConfig(name=name), x, 2,
+                             key=jax.random.PRNGKey(0))
+        assert out.shape == (2, 6)
+    out = A.apply_attack(A.AttackConfig(name="alie"), x, 0)
+    assert out.shape == (0, 6)
+
+
+def test_gauss_needs_key():
+    x = _honest()
+    out = A.apply_attack(A.AttackConfig(name="gauss", scale=0.1), x, 2,
+                         key=jax.random.PRNGKey(1))
+    assert out.shape == (2, 6)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,137 @@
+"""Sparsifier properties: unbiasedness, variance envelope, payload, masks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+@pytest.mark.parametrize("kind", ["randk", "bernoulli", "block", "block_hash"])
+def test_mask_shape_and_dtype(kind):
+    cfg = C.SparsifierConfig(kind=kind, ratio=0.25, block_size=8)
+    m = C.make_mask(jax.random.PRNGKey(0), 64, cfg)
+    assert m.shape == (64,)
+    assert set(np.unique(np.asarray(m))) <= {0.0, 1.0}
+
+
+def test_randk_exact_k():
+    cfg = C.SparsifierConfig(kind="randk", ratio=0.25)
+    m = C.make_mask(jax.random.PRNGKey(1), 100, cfg)
+    assert int(np.asarray(m).sum()) == 25
+
+
+def test_block_mask_is_blockwise():
+    cfg = C.SparsifierConfig(kind="block", ratio=0.25, block_size=16)
+    m = np.asarray(C.make_mask(jax.random.PRNGKey(2), 128, cfg))
+    blocks = m.reshape(-1, 16)
+    # every block entirely 0 or entirely 1
+    assert np.all((blocks.sum(1) == 0) | (blocks.sum(1) == 16))
+    assert blocks.sum() == 32  # 2 of 8 blocks
+
+
+def test_global_masks_identical_local_differ():
+    g = C.SparsifierConfig(kind="randk", ratio=0.2, local=False)
+    l = C.SparsifierConfig(kind="randk", ratio=0.2, local=True)
+    mg = np.asarray(C.make_masks(jax.random.PRNGKey(3), 6, 50, g))
+    ml = np.asarray(C.make_masks(jax.random.PRNGKey(3), 6, 50, l))
+    assert np.all(mg == mg[0])
+    assert not np.all(ml == ml[0])
+
+
+@pytest.mark.parametrize("kind", ["randk", "bernoulli", "block", "block_hash"])
+def test_unbiasedness(kind):
+    """E[(d/k)(g o mask)] = g over mask randomness (paper, Section 2)."""
+    d = 64
+    cfg = C.SparsifierConfig(kind=kind, ratio=0.25, block_size=8)
+    g = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    keys = jax.random.split(jax.random.PRNGKey(42), 4000)
+    est = jax.vmap(
+        lambda k: C.compress(g, C.make_mask(k, d, cfg), cfg))(keys)
+    mean = jnp.mean(est, axis=0)
+    assert float(jnp.max(jnp.abs(mean - g))) < 0.15 * float(
+        jnp.max(jnp.abs(g)) + 0.3)
+
+
+def test_randk_variance_envelope():
+    """E||g_tilde - g||^2 <= (alpha - 1)||g||^2 for exact RandK."""
+    d = 60
+    cfg = C.SparsifierConfig(kind="randk", ratio=0.2)
+    g = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    keys = jax.random.split(jax.random.PRNGKey(7), 3000)
+    est = jax.vmap(
+        lambda k: C.compress(g, C.make_mask(k, d, cfg), cfg))(keys)
+    var = float(jnp.mean(jnp.sum(jnp.square(est - g[None]), axis=1)))
+    bound = (cfg.alpha - 1.0) * float(jnp.sum(jnp.square(g)))
+    assert var <= 1.1 * bound
+
+
+@given(d=st.integers(8, 300), ratio=st.floats(0.05, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_payload_counts(d, ratio):
+    cfg = C.SparsifierConfig(kind="randk", ratio=ratio)
+    k = C.payload_floats(d, cfg)
+    assert 1 <= k <= d
+    # global sparsification sends no index bits (shared PRNG)
+    assert C.payload_bytes(d, cfg, with_mask_indices=True) == 4 * k
+    loc = C.SparsifierConfig(kind="randk", ratio=ratio, local=True)
+    expected = 8 * k if ratio < 1.0 else 4 * k
+    assert C.payload_bytes(d, loc, with_mask_indices=True) == expected
+
+
+def test_compress_none_identity():
+    cfg = C.SparsifierConfig(kind="none")
+    g = jnp.arange(10.0)
+    assert jnp.all(C.compress(g, jnp.ones(10), cfg) == g)
+
+
+def test_block_hash_deterministic_and_blockwise():
+    """The TPU-scale coordinated mask: same key -> identical mask on every
+    worker (0-byte broadcast), different round keys -> different masks,
+    decisions constant within blocks."""
+    cfg = C.SparsifierConfig(kind="block_hash", ratio=0.3, block_size=8)
+    m1 = np.asarray(C.make_mask(jax.random.PRNGKey(5), 256, cfg))
+    m2 = np.asarray(C.make_mask(jax.random.PRNGKey(5), 256, cfg))
+    m3 = np.asarray(C.make_mask(jax.random.PRNGKey(6), 256, cfg))
+    assert np.array_equal(m1, m2)
+    assert not np.array_equal(m1, m3)
+    blocks = m1.reshape(-1, 8)
+    assert np.all((blocks.sum(1) == 0) | (blocks.sum(1) == 8))
+
+
+def test_natural_compression_unbiased_and_bounded():
+    """Appendix C: stochastic power-of-two rounding is an unbiased
+    compressor with E||C(x)||^2 <= (9/8)||x||^2."""
+    cfg = C.SparsifierConfig(kind="natural")
+    g = jnp.asarray([0.75, -1.3, 3.0, 0.0, 1e-4, -2.0, 5.5, 0.001])
+    keys = jax.random.split(jax.random.PRNGKey(0), 6000)
+    est = jax.vmap(
+        lambda k: C.compress(g, C.make_mask(k, g.shape[0], cfg), cfg))(keys)
+    mean = jnp.mean(est, axis=0)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(g), rtol=0.05,
+                               atol=1e-6)
+    # all outputs are signed powers of two (or zero)
+    nz = np.asarray(est)[np.asarray(est) != 0]
+    exps = np.log2(np.abs(nz))
+    np.testing.assert_allclose(exps, np.round(exps), atol=1e-5)
+    second = float(jnp.mean(jnp.sum(jnp.square(est), axis=1)))
+    assert second <= 9 / 8 * float(jnp.sum(jnp.square(g))) * 1.05
+    # wire cost ~9 bits/coordinate
+    assert C.payload_bytes(1024, cfg) < 1024 * 4 / 3
+
+
+def test_clip_norm_bounds_worker_rows():
+    from repro.core import (AlgorithmConfig, AggregatorConfig, AttackConfig,
+                            init_state, server_round)
+    cfg = AlgorithmConfig(name="rosdhb", n_workers=4, f=0, beta=0.0,
+                          clip_norm=1.0,
+                          sparsifier=C.SparsifierConfig(kind="none"),
+                          aggregator=AggregatorConfig(name="mean"),
+                          attack=AttackConfig(name="none"))
+    st = init_state(cfg, 8)
+    g = jnp.ones((4, 8)) * 100.0
+    r, _, _ = server_round(cfg, st, g, jax.random.PRNGKey(0))
+    # each row clipped to norm 1 -> mean direction has norm <= 1
+    assert float(jnp.linalg.norm(r)) <= 1.0 + 1e-5

@@ -1,0 +1,153 @@
+"""Per-kernel interpret-mode sweeps against the pure-jnp oracles
+(shape x dtype grids per the deliverable-c requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cwtm import cwtm_pallas, cwtm_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.randk import (
+    block_compress, block_compress_ref, block_decompress,
+    block_decompress_ref, momentum_scatter, momentum_scatter_ref,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# cwtm
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,f", [(4, 1), (10, 2), (16, 3), (19, 9), (32, 7)])
+@pytest.mark.parametrize("d", [128, 300, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cwtm_sweep(n, f, d, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(n * d + f), (n, d)) * 3
+         ).astype(dtype)
+    got = cwtm_pallas(x, f, block_d=256, interpret=True)
+    want = cwtm_ref(x, f)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_cwtm_handles_outliers_like_ref():
+    x = jax.random.normal(KEY, (10, 512))
+    x = x.at[:3].set(1e9)
+    got = cwtm_pallas(x, 3, block_d=256, interpret=True)
+    assert float(jnp.max(jnp.abs(got))) < 10.0
+
+
+# --------------------------------------------------------------------------
+# randk (block compress / decompress / fused momentum)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,bs,kb", [(2048, 128, 4), (4096, 256, 7),
+                                     (8192, 512, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_randk_roundtrip_sweep(d, bs, kb, dtype):
+    nb = d // bs
+    g = jax.random.normal(KEY, (d,)).astype(dtype)
+    idx = jnp.sort(jax.random.permutation(jax.random.PRNGKey(d), nb)[:kb])
+    alpha = float(nb) / kb
+    p = block_compress(g, idx, bs, alpha, interpret=True)
+    p_ref = block_compress_ref(g, idx, bs, alpha)
+    np.testing.assert_allclose(np.asarray(p, np.float32),
+                               np.asarray(p_ref, np.float32), rtol=2e-2)
+    dn = block_decompress(p, idx, bs, d, interpret=True)
+    dn_ref = block_decompress_ref(p_ref, idx, bs, d)
+    np.testing.assert_allclose(np.asarray(dn, np.float32),
+                               np.asarray(dn_ref, np.float32), rtol=2e-2)
+
+
+@pytest.mark.parametrize("beta", [0.0, 0.9, 0.99])
+def test_momentum_scatter_sweep(beta):
+    d, bs, kb = 4096, 256, 5
+    nb = d // bs
+    row = jax.random.normal(KEY, (d,))
+    idx = jnp.sort(jax.random.permutation(jax.random.PRNGKey(1), nb)[:kb])
+    payload = jax.random.normal(jax.random.PRNGKey(2), (kb * bs,))
+    got = momentum_scatter(row, payload, idx, bs, beta, interpret=True)
+    want = momentum_scatter_ref(row, payload, idx, bs, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_compress_unbiased_with_decompress():
+    """decompress(compress(g)) is the paper's unbiased estimate (d/k scaled
+    selected blocks, zeros elsewhere)."""
+    d, bs = 1024, 128
+    nb = d // bs
+    g = jax.random.normal(KEY, (d,))
+    idx = jnp.array([0, 3], jnp.int32)
+    alpha = nb / 2
+    est = block_decompress(block_compress(g, idx, bs, alpha, interpret=True),
+                           idx, bs, d, interpret=True)
+    dense = np.zeros(d, np.float32)
+    dense[:bs] = np.asarray(g[:bs]) * alpha
+    dense[3 * bs:4 * bs] = np.asarray(g[3 * bs:4 * bs]) * alpha
+    np.testing.assert_allclose(np.asarray(est), dense, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sq,sk,h,kv,d", [
+    (128, 128, 4, 2, 64),
+    (256, 256, 4, 1, 128),
+    (64, 192, 4, 4, 64),
+    (96, 96, 2, 2, 64),     # non-multiple of block -> padding path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_sweep(sq, sk, h, kv, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, sq, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, sk, kv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, sk, kv, d)).astype(dtype)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = attention_ref(q, k, v)
+    tol = 2e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 96])
+def test_flash_sliding_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    got = flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+def test_flash_q_offset_decode_chunk():
+    """Continuation chunk: q at positions [128, 192) against 192 keys."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 64))
+    k = jax.random.normal(ks[1], (2, 192, 4, 64))
+    v = jax.random.normal(ks[2], (2, 192, 4, 64))
+    got = flash_attention(q, k, v, q_offset=128, block_q=64, block_k=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, q_offset=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+def test_flash_matches_model_attention_path():
+    """The XLA attention used by the models equals the kernel's math."""
+    from repro.models.layers import causal_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = causal_attention(q, k, v, q_offset=0, chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)

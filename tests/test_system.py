@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests: the paper's full pipeline at test scale.
+
+Reproduces the qualitative claims of Section 4 in miniature:
+  * RoSDHB trains the CNN to the paper's accuracy threshold under heavy
+    compression with Byzantine workers present;
+  * naive compressed DGD fails under the same attack;
+  * compression delivers a communication saving at equal target accuracy;
+  * checkpoint round-trip preserves the training state.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AlgorithmConfig, AggregatorConfig, AttackConfig, Simulator,
+    SparsifierConfig,
+)
+from repro.data import SyntheticMNIST
+from repro.models import cnn_accuracy, cnn_init, cnn_loss
+
+N_HONEST = 10
+
+
+def _sim(f=0, attack="none", ratio=1.0, gamma=0.1, agg="cwtm", ds=None,
+         algo="rosdhb"):
+    n = N_HONEST + f
+    ds = ds or SyntheticMNIST(n_workers=n, per_worker=800, seed=0)
+    cfg = AlgorithmConfig(
+        name=algo, n_workers=n, f=f, gamma=gamma, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=ratio),
+        aggregator=(AggregatorConfig(name="mean") if agg == "mean" else
+                    AggregatorConfig(name=agg, f=max(f, 1))),
+        attack=AttackConfig(name=attack))
+    sim = Simulator(loss_fn=cnn_loss, params0=cnn_init(jax.random.PRNGKey(0)),
+                    cfg=cfg, eval_fn=lambda p, b: {"acc": cnn_accuracy(p, b)})
+    return sim, ds
+
+
+@pytest.mark.slow
+def test_rosdhb_reaches_threshold_under_attack_and_compression():
+    f = 5
+    ds = SyntheticMNIST(n_workers=N_HONEST + f, per_worker=800, seed=0)
+    sim, _ = _sim(f=f, attack="alie", ratio=0.1, gamma=0.03, ds=ds)
+    st = sim.init()
+    st, hist = sim.run(st, ds.worker_batches(60), steps=400, eval_every=25,
+                       eval_batch=ds.eval_batch,
+                       stop_fn=lambda m: m.get("acc", 0) >= 0.85)
+    # the paper's metric is communication-to-tau (first crossing); at
+    # aggressive gamma the post-tau trajectory can oscillate (EXPERIMENTS
+    # section Paper, stability note), so we assert the crossing itself.
+    assert max(hist["acc"]) >= 0.85
+
+
+@pytest.mark.slow
+def test_naive_dgd_fails_under_foe():
+    f = 5
+    ds = SyntheticMNIST(n_workers=N_HONEST + f, per_worker=800, seed=0)
+    sim, _ = _sim(f=f, attack="foe", ratio=0.1, gamma=0.05, agg="mean",
+                  algo="dgd", ds=ds)
+    st = sim.init()
+    st, hist = sim.run(st, ds.worker_batches(60), steps=150, eval_every=50,
+                       eval_batch=ds.eval_batch)
+    assert hist["acc"][-1] < 0.85
+
+
+@pytest.mark.slow
+def test_compression_saves_communication_to_threshold():
+    """The paper's headline: bytes-to-tau is much smaller at k/d << 1."""
+    def bytes_to_tau(ratio, gamma):
+        ds = SyntheticMNIST(n_workers=N_HONEST, per_worker=800, seed=0)
+        sim, _ = _sim(f=0, ratio=ratio, gamma=gamma, ds=ds)
+        st = sim.init()
+        st, hist = sim.run(st, ds.worker_batches(60), steps=500,
+                           eval_every=25, eval_batch=ds.eval_batch,
+                           stop_fn=lambda m: m.get("acc", 0) >= 0.85)
+        assert hist["acc"][-1] >= 0.85, f"ratio={ratio} never reached tau"
+        return hist["comm_bytes"][-1]
+
+    full = bytes_to_tau(1.0, 0.2)
+    comp = bytes_to_tau(0.05, 0.05)
+    assert comp < full
+
+
+def test_simulator_state_checkpoint_roundtrip(tmp_path):
+    from repro import checkpoint as ckpt
+    sim, ds = _sim(f=2, attack="alie", ratio=0.2)
+    st = sim.init()
+    st, _ = sim.run(st, ds.worker_batches(16), steps=3)
+    path = str(tmp_path / "state.npz")
+    ckpt.save(path, st._asdict(), step=3)
+    restored = ckpt.restore(path, st._asdict())
+    np.testing.assert_allclose(np.asarray(st.params_flat),
+                               restored["params_flat"])
+    np.testing.assert_allclose(np.asarray(st.server.momentum),
+                               restored["server"].momentum)
+    assert ckpt.latest_step(path) == 3

@@ -1,0 +1,187 @@
+"""Tree-flattening property tests (hypothesis), optimizers, data pipeline,
+and sharding-rule unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.utils import tree as T
+
+
+# --------------------------------------------------------------------------
+# tree ravel/unravel
+# --------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(1, 7), min_size=1, max_size=5),
+       st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_ravel_roundtrip(sizes, pad_to):
+    tree = {f"p{i}": jnp.arange(s, dtype=jnp.float32) * (i + 1)
+            for i, s in enumerate(sizes)}
+    spec = T.make_flat_spec(tree, pad_to=pad_to)
+    flat = T.tree_ravel(tree, spec)
+    assert flat.shape == (spec.padded_size,)
+    assert spec.padded_size % pad_to == 0
+    back = T.tree_unravel(flat, spec)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+@given(st.integers(1, 5), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_stacked_ravel_roundtrip(n, leaves):
+    tree = {f"w{i}": jax.random.normal(jax.random.PRNGKey(i),
+                                       (n, 2 + i, 3)) for i in range(leaves)}
+    unstacked = jax.tree_util.tree_map(lambda l: l[0], tree)
+    spec = T.make_flat_spec(unstacked, pad_to=8)
+    flat = T.stacked_ravel(tree, spec)
+    assert flat.shape == (n, spec.padded_size)
+    back = T.stacked_unravel(flat, spec)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(back[k]), np.asarray(tree[k]),
+                                   rtol=1e-6)
+
+
+def test_flat_spec_on_shape_structs():
+    tree = {"a": jax.ShapeDtypeStruct((3, 4), jnp.float32),
+            "b": jax.ShapeDtypeStruct((5,), jnp.bfloat16)}
+    spec = T.make_flat_spec(tree, pad_to=16)
+    assert spec.size == 17 and spec.padded_size == 32
+
+
+# --------------------------------------------------------------------------
+# optimizers
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make", ["sgd", "heavy_ball", "adamw"])
+def test_optimizers_minimise_quadratic(make):
+    from repro import optim
+    opt = {"sgd": optim.sgd(0.1), "heavy_ball": optim.heavy_ball(0.1),
+           "adamw": optim.adamw(0.05)}[make]
+    params = {"x": jnp.ones(4) * 5.0}
+    state = opt.init(params)
+    for _ in range(300):
+        grads = {"x": 2 * params["x"]}
+        upd, state = opt.update(grads, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 1e-2
+
+
+def test_cosine_schedule():
+    from repro.optim import cosine_schedule
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0, abs=1e-5)
+    assert float(lr(100)) == pytest.approx(0.0, abs=1e-5)
+
+
+# --------------------------------------------------------------------------
+# data
+# --------------------------------------------------------------------------
+
+
+def test_synthetic_mnist_shapes_and_heterogeneity():
+    from repro.data import SyntheticMNIST
+    homo = SyntheticMNIST(n_workers=4, per_worker=500, alpha_het=1e6, seed=0)
+    het = SyntheticMNIST(n_workers=4, per_worker=500, alpha_het=0.3, seed=0)
+    assert homo.images.shape == (4, 500, 28, 28, 1)
+
+    def label_skew(ds):
+        props = np.stack([np.bincount(ds.labels[w], minlength=10) / 500
+                          for w in range(4)])
+        return float(props.std(0).mean())
+
+    assert label_skew(het) > 2 * label_skew(homo)
+
+
+def test_batch_fn_stacking():
+    from repro.data import SyntheticMNIST
+    ds = SyntheticMNIST(n_workers=3, per_worker=100, seed=1)
+    b = ds.worker_batches(8)(0)
+    assert b["images"].shape == (3, 8, 28, 28, 1)
+    assert b["labels"].shape == (3, 8)
+
+
+# --------------------------------------------------------------------------
+# sharding rules (AbstractMesh — no devices needed)
+# --------------------------------------------------------------------------
+
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_param_spec_rules():
+    from repro.sharding.partitioning import param_spec
+    # attention projection: TP on output dim
+    assert param_spec("blocks/attn/wq/w", (64, 2048, 4096), MESH,
+                      fsdp=False) == P(None, None, "model")
+    # fsdp adds data on the input dim
+    assert param_spec("blocks/attn/wq/w", (64, 2048, 4096), MESH,
+                      fsdp=True) == P(None, "data", "model")
+    # wo transposed
+    assert param_spec("blocks/attn/wo/w", (64, 4096, 2048), MESH,
+                      fsdp=False) == P(None, "model", None)
+    # moe expert banks: experts over model
+    assert param_spec("blocks/moe/wi", (26, 64, 2048, 1408), MESH,
+                      fsdp=False) == P(None, "model", None, None)
+    # norms replicated
+    assert param_spec("blocks/norm1/scale", (64, 2048), MESH,
+                      fsdp=False) == P(None, None)
+    # indivisible dims are dropped, not mis-sharded
+    assert param_spec("blocks/attn/wk/w", (2, 100, 30), MESH,
+                      fsdp=True) == P(None, None, None)
+
+
+def test_embed_and_head_specs():
+    from repro.sharding.partitioning import param_spec
+    assert param_spec("embed", (256000, 2048), MESH, fsdp=False) == \
+        P("model", None)
+    # mamba vocab 50280 % 16 != 0 -> vocab axis dropped
+    assert param_spec("embed", (50280, 2048), MESH, fsdp=False) == \
+        P(None, None)
+    assert param_spec("lm_head", (2048, 151936), MESH, fsdp=False) == \
+        P(None, "model")
+
+
+def test_batch_and_bank_specs():
+    from repro.sharding.partitioning import bank_spec, batch_spec, dp_axes
+    assert dp_axes(MESH3) == ("pod", "data")
+    assert batch_spec(MESH, (256, 4096)) == P(("data",), None)
+    assert batch_spec(MESH3, (32, 8, 4096), worker_dim=True) == \
+        P(("pod", "data"), None, None)
+    assert batch_spec(MESH, (1, 8192)) == P(None, None)  # indivisible
+    # bank coordinate tiling is MODEL-MAJOR (see partitioning.server_axes)
+    assert bank_spec(MESH3) == P(None, ("model", "pod", "data"))
+
+
+def test_cache_spec_avoids_seq_dim():
+    from repro.sharding.partitioning import cache_spec
+    # [B, S, KV, hd]: model on the trailing head_dim, batch over dp
+    assert cache_spec(MESH, (128, 32768, 32, 128), batch=128) == \
+        P(("data",), None, None, "model")
+    # stacked layer dim first: batch identified by value; seq NEVER sharded
+    assert cache_spec(MESH, (88, 128, 32768, 8, 128), batch=128) == \
+        P(None, ("data",), None, None, "model")
+    # nothing divisible (batch 4 < 16, heads/hd indivisible) -> fully
+    # replicated; the seq dim is never chosen despite being divisible
+    assert cache_spec(MESH, (4, 32768, 3, 100), batch=4) == \
+        P(None, None, None, None)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro import checkpoint as ckpt
+    tree = {"layer": {"w": np.arange(6.0).reshape(2, 3),
+                      "b": np.zeros(3)},
+            "step_arr": np.asarray(7)}
+    p = str(tmp_path / "t.npz")
+    ckpt.save(p, tree, metadata={"note": "x"}, step=11)
+    back = ckpt.restore(p, tree)
+    np.testing.assert_array_equal(back["layer"]["w"], tree["layer"]["w"])
+    assert ckpt.latest_step(p) == 11
