@@ -1,0 +1,126 @@
+"""Batched-engine speedup: the grid sweep vs sequential Simulator runs.
+
+The engine PR's acceptance gate: a 4-seed x 3-attack grid through
+``repro.core.sweep`` must be >= 5x faster wall-clock than sequential
+``Simulator.run`` calls on CPU. Both paths execute the paper's
+comm-bytes-to-threshold protocol on the quadratic testbed and must produce
+IDENTICAL per-cell bytes-to-tau tables (asserted below) — the comparison is
+end-to-end, compilation included, because per-cell construct + compile +
+run is exactly what sequential sweeping pays (see
+``benchmarks.common.comm_cost_to_tau``).
+
+Paths, slowest to fastest:
+  * sequential ``Simulator.run`` per cell — the acceptance baseline: eval
+    every 20 rounds with a stop_fn, fresh Simulator per cell;
+  * sequential legacy ``Simulator.run_per_round`` per cell — the pre-engine
+    loop (one compile per cell, one dispatch per round);
+  * the fused engine: ONE compiled program for all 12 cells — linear-family
+    attack coefficients as a traced vmap axis (``fused_attack_rollout``),
+    seeds as a vmap axis, rounds as a lax.scan, threshold crossings
+    post-hoc from the stacked on-device loss trajectory.
+
+The engine is timed FIRST (coldest JAX state), so any in-process warmup
+favours the baselines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (AttackConfig, Simulator, grid_scenarios,
+                        quadratic_testbed, stack_batches)
+from repro.core.sweep import fused_attack_rollout
+
+D = 64
+STEPS = 300
+EVAL_EVERY = 20
+TAU_LOSS = 0.5  # honest-mean-loss threshold standing in for the paper's tau
+SEEDS = (0, 1, 2, 3)
+ATTACKS = ("alie", "foe", "signflip")
+
+
+def run():
+    f = 3
+    n = 10 + f
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(n, D, seed=0)
+    scenarios = grid_scenarios(["rosdhb"], ATTACKS, ["cwtm"], n_honest=10,
+                               f=f, ratio=0.1, gamma=0.05)
+    batches = stack_batches(batch_fn, STEPS)
+    cells = len(scenarios) * len(SEEDS)
+    eval_rounds = np.asarray([t for t in range(STEPS)
+                              if t % EVAL_EVERY == 0 or t == STEPS - 1])
+    jnp.zeros(1).block_until_ready()  # backend init outside all timings
+
+    # -- the engine: one compiled program for the whole grid, post-hoc stop
+    t0 = time.perf_counter()
+    lin = dataclasses.replace(scenarios[0].cfg,
+                              attack=AttackConfig(name="linear"))
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=lin)
+    per_round_bytes = sim.payload_bytes_per_round()
+    _, metrics = fused_attack_rollout(
+        sim, [sc.cfg.attack for sc in scenarios], SEEDS, batches)
+    loss_at_evals = np.asarray(metrics["loss"])[:, :, eval_rounds]
+    hit = loss_at_evals <= TAU_LOSS
+    first = np.where(hit.any(-1), hit.argmax(-1), 0)
+    sweep_bytes = np.where(hit.any(-1),
+                           (eval_rounds[first] + 1.0) * per_round_bytes,
+                           np.inf)
+    t_sweep = time.perf_counter() - t0
+
+    # -- sequential baselines: same protocol, one cell at a time
+    def sequential(method):
+        out = np.full((len(scenarios), len(SEEDS)), np.inf)
+        t0 = time.perf_counter()
+        for a, sc in enumerate(scenarios):
+            for i, s in enumerate(SEEDS):
+                cell_sim = Simulator(loss_fn=loss_fn, params0=params0,
+                                     cfg=sc.cfg)
+                reached = {}
+
+                def stop(m):
+                    if m["loss"] <= TAU_LOSS and not reached:
+                        reached["bytes"] = m["comm_bytes"]
+                    return bool(reached)
+
+                getattr(cell_sim, method)(cell_sim.init(s), batch_fn, STEPS,
+                                          eval_every=EVAL_EVERY, stop_fn=stop)
+                out[a, i] = reached.get("bytes", np.inf)
+        return time.perf_counter() - t0, out
+
+    t_run, run_bytes = sequential("run")
+    t_legacy, legacy_bytes = sequential("run_per_round")
+
+    # Output parity: the three engines must find the same crossings. The
+    # paths are separately compiled XLA programs, so a cell whose eval loss
+    # grazes TAU_LOSS within float rounding may legitimately cross one eval
+    # round apart — tolerate a mismatch only there.
+    def assert_same_crossings(other):
+        diff = sweep_bytes != other
+        grazes = np.min(np.abs(loss_at_evals - TAU_LOSS), axis=-1) < 1e-4
+        assert np.all(~diff | grazes), (sweep_bytes, other)
+
+    assert_same_crossings(run_bytes)
+    assert_same_crossings(legacy_bytes)
+
+    emit("sweep/sequential_run_cells", t_run * 1e6 / cells,
+         f"total={t_run:.2f}s (acceptance baseline)")
+    emit("sweep/sequential_per_round_cells", t_legacy * 1e6 / cells,
+         f"total={t_legacy:.2f}s")
+    emit("sweep/fused_engine", t_sweep * 1e6 / cells,
+         f"total={t_sweep:.2f}s speedup_vs_run={t_run / t_sweep:.1f}x "
+         f"speedup_vs_per_round={t_legacy / t_sweep:.1f}x")
+    speedup = t_run / t_sweep
+    assert speedup >= 5.0, (
+        f"fused sweep only {speedup:.1f}x faster than sequential "
+        f"Simulator.run calls (acceptance gate is 5x)")
+    return {"run_s": t_run, "per_round_s": t_legacy, "sweep_s": t_sweep,
+            "speedup": speedup}
+
+
+if __name__ == "__main__":
+    run()

@@ -2,51 +2,34 @@
 corner baselines (robust-DGD without compression, compressed DGD without
 robustness), on the controlled quadratic testbed where the honest optimum is
 known exactly. Reports E||grad||^2-style distance after T rounds under ALIE.
+
+Runs on the batched engine: each cell is ONE jitted lax.scan trajectory
+(``rollout_over_seeds``) instead of 800 per-round dispatches; the math and
+PRNG stream are identical to the legacy loop (tests/test_engine.py).
 """
 
 from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core import (AlgorithmConfig, AggregatorConfig, AttackConfig,
-                        SparsifierConfig, apply_direction, init_state,
-                        server_round)
+                        Simulator, SparsifierConfig, quadratic_testbed,
+                        rollout_over_seeds)
 
 D = 64
-
-
-def _distance(name, ratio, f, gamma, steps=800, seed=3, attack="alie"):
-    n = 10 + f
-    tg = jax.random.normal(jax.random.PRNGKey(0), (n, D)) * 0.1 + 1.0
-    cfg = AlgorithmConfig(
-        name=name, n_workers=n, f=f, gamma=gamma, beta=0.9,
-        sparsifier=SparsifierConfig(kind="randk", ratio=ratio),
-        aggregator=(AggregatorConfig(name="mean") if name == "dgd"
-                    else AggregatorConfig(name="cwtm", f=max(f, 1),
-                                          pre_nnm=True)),
-        attack=AttackConfig(name=attack, z=1.5 if attack == "alie" else None))
-    st = init_state(cfg, D)
-    th = jnp.zeros(D)
-    k = jax.random.PRNGKey(seed)
-
-    @jax.jit
-    def one(th, st, k):
-        k, sk = jax.random.split(k)
-        r, st, _ = server_round(cfg, st, th[None, :] - tg, sk)
-        return apply_direction(th, r, cfg.gamma), st, k
-
-    for _ in range(steps):
-        th, st, k = one(th, st, k)
-    grad_sq = float(jnp.sum(jnp.square(th - jnp.mean(tg[f:], 0))))
-    return grad_sq
+STEPS = 800
+SEED = 3
 
 
 def run():
     f = 3
+    n = 10 + f
+    loss_fn, params0, batch_fn, tg = quadratic_testbed(n, D, spread=0.1,
+                                                       seed=0)
+    honest_opt = jnp.mean(tg[f:], axis=0)
     cells = [
         ("rosdhb", 0.1, 0.05),
         ("rosdhb-local", 0.1, 0.05),
@@ -59,8 +42,6 @@ def run():
         algo = "rosdhb" if name.startswith("rosdhb") else name
         local = name.endswith("local")
         t0 = time.perf_counter()
-        n = 10 + f
-        tg = jax.random.normal(jax.random.PRNGKey(0), (n, D)) * 0.1 + 1.0
         cfg = AlgorithmConfig(
             name=algo, n_workers=n, f=f, gamma=gamma, beta=0.9,
             sparsifier=SparsifierConfig(kind="randk", ratio=ratio,
@@ -69,19 +50,10 @@ def run():
                         else AggregatorConfig(name="cwtm", f=f,
                                               pre_nnm=True)),
             attack=AttackConfig(name="alie", z=1.5))
-        st = init_state(cfg, D)
-        th = jnp.zeros(D)
-        k = jax.random.PRNGKey(3)
-
-        @jax.jit
-        def one(th, st, k, cfg=cfg, tg=tg):
-            k, sk = jax.random.split(k)
-            r, st, _ = server_round(cfg, st, th[None, :] - tg, sk)
-            return apply_direction(th, r, cfg.gamma), st, k
-
-        for _ in range(800):
-            th, st, k = one(th, st, k)
-        grad_sq = float(jnp.sum(jnp.square(th - jnp.mean(tg[f:], 0))))
+        sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=cfg)
+        states, _ = rollout_over_seeds(sim, [SEED], batch_fn, steps=STEPS)
+        th = states.params_flat[0, :D]
+        grad_sq = float(jnp.sum(jnp.square(th - honest_opt)))
         wall = (time.perf_counter() - t0) * 1e6
         results[name] = grad_sq
         emit(f"table1/{name}/alie_f{f}", wall, f"dist_sq={grad_sq:.4g}")

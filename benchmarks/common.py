@@ -49,6 +49,12 @@ def comm_cost_to_tau(*, ratio: float, f: int, attack: str = "alie",
                      tau: float = TAU) -> Dict:
     """Run the paper's experiment for one (ratio, f) cell.
 
+    Runs on the batched engine: ``Simulator.run`` executes the trajectory as
+    lax.scan chunks between eval rounds (see core/simulator.py), so one cell
+    pays host dispatch per eval instead of per round. Multi-cell grids are
+    cheaper still through ``repro.core.sweep`` (vmapped seeds + fused attack
+    axis; see benchmarks/bench_sweep.py).
+
     Returns dict with comm bytes to reach tau (or inf), final accuracy,
     rounds used.
     """

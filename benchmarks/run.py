@@ -3,6 +3,7 @@
   fig1            paper Figure 1: comm cost to tau vs compression ratio (ALIE)
   table1          paper Table 1: RoSDHB vs Byz-DASHA-PAGE vs corner baselines
   global_vs_local paper §3.3: coordinated vs uncoordinated sparsification
+  sweep           batched grid engine vs sequential Simulator runs (5x gate)
   aggregators     (f,kappa)-robust rule microbench
   kernels         kernel oracle microbench
   roofline        per-(arch x shape x mesh) roofline from the dry-run JSON
@@ -23,12 +24,14 @@ def main() -> None:
 
     from benchmarks import (bench_aggregators, bench_breakdown, bench_fig1,
                             bench_global_vs_local, bench_kernels,
-                            bench_momentum, bench_roofline, bench_table1)
+                            bench_momentum, bench_roofline, bench_sweep,
+                            bench_table1)
     suites = {
         "aggregators": lambda: bench_aggregators.run(),
         "kernels": lambda: bench_kernels.run(),
         "table1": lambda: bench_table1.run(),
         "momentum": lambda: bench_momentum.run(),
+        "sweep": lambda: bench_sweep.run(),
         "breakdown": lambda: bench_breakdown.run(),
         "global_vs_local": lambda: bench_global_vs_local.run(),
         "fig1": lambda: bench_fig1.run(full=full,

@@ -6,7 +6,9 @@ See DESIGN.md §1-3. The module split mirrors Algorithm 1:
                  rosdhb / dasha / robust_dgd / dgd
   aggregators  - the (f, kappa)-robust rules F
   attacks      - the Byzantine adversary
-  simulator    - paper-scale single-host training loop
+  simulator    - paper-scale single-host training loop (lax.scan engine)
+  sweep        - attack x aggregator x algorithm x seed grid runner
+                 (vmapped scan, one XLA program per scenario)
 """
 
 from repro.core.compression import (
@@ -23,7 +25,11 @@ from repro.core.algorithms import (
     apply_direction,
     theorem1_hparams,
 )
-from repro.core.simulator import Simulator, SimState
+from repro.core.simulator import Simulator, SimState, stack_batches
+from repro.core.sweep import (
+    Scenario, grid_scenarios, rollout_over_seeds, fused_attack_rollout,
+    run_scenarios, bytes_to_threshold, quadratic_testbed,
+)
 
 __all__ = [
     "SparsifierConfig", "make_mask", "make_masks", "compress",
@@ -32,5 +38,8 @@ __all__ = [
     "AttackConfig", "apply_attack",
     "AlgorithmConfig", "ServerState", "init_state", "server_round",
     "apply_direction", "theorem1_hparams",
-    "Simulator", "SimState",
+    "Simulator", "SimState", "stack_batches",
+    "Scenario", "grid_scenarios", "rollout_over_seeds",
+    "fused_attack_rollout", "run_scenarios",
+    "bytes_to_threshold", "quadratic_testbed",
 ]

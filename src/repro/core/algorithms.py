@@ -149,18 +149,22 @@ def init_state(cfg: AlgorithmConfig, d: int) -> ServerState:
 
 
 def _byzantine_overwrite(cfg: AlgorithmConfig, wire: jnp.ndarray,
-                         key: jax.Array) -> jnp.ndarray:
+                         key: jax.Array,
+                         attack_params: Optional[jnp.ndarray] = None
+                         ) -> jnp.ndarray:
     """Replace rows [0, f) of the wire payload with the attack vectors
     computed from the honest rows [f, n)."""
     if cfg.f == 0 or cfg.attack.name == "none":
         return wire
     honest = wire[cfg.f:]
-    byz = A.apply_attack(cfg.attack, honest, cfg.f, key=key)
+    byz = A.apply_attack(cfg.attack, honest, cfg.f, key=key,
+                         params=attack_params)
     return jnp.concatenate([byz.astype(wire.dtype), honest], axis=0)
 
 
 def server_round(cfg: AlgorithmConfig, state: ServerState,
-                 grads: jnp.ndarray, key: jax.Array
+                 grads: jnp.ndarray, key: jax.Array,
+                 attack_params: Optional[jnp.ndarray] = None
                  ) -> Tuple[jnp.ndarray, ServerState, dict]:
     """Execute one server round.
 
@@ -170,6 +174,9 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
       grads: honest-computed per-worker gradients ``[n, D]`` (f32). Rows of
         Byzantine workers are ignored and replaced by the attack.
       key: PRNG key for this round (mask sampling + stochastic attacks).
+      attack_params: traced parameters for ``attack.name='linear'`` (a ``[2]``
+        coefficient vector); lets a grid of mean/std-family attacks share one
+        compiled program (see ``repro.core.sweep``).
 
     Returns:
       (direction R [D] to descend, next state, aux dict).
@@ -191,7 +198,7 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
         # Steps 1-4: masks (global or local) + unbiased reconstruction.
         masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype)
         g_tilde = C.compress(grads, masks, sp)
-        g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key)
+        g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key, attack_params)
         # Step 5: per-worker server momentum (math dtype configurable —
         # bf16 halves the per-round transient at LLM scale, EXPERIMENTS
         # section Perf).
@@ -208,13 +215,13 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
         # Compressed DGD, non-robust: plain mean of unbiased estimates.
         masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype)
         g_tilde = C.compress(grads, masks, sp)
-        g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key)
+        g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key, attack_params)
         r = jnp.mean(g_tilde, axis=0)
         return r, state._replace(step=state.step + 1), aux
 
     if cfg.name == "robust_dgd":
         # Robust DGD without compression: aggregate raw gradients.
-        g = _byzantine_overwrite(cfg, grads, atk_key)
+        g = _byzantine_overwrite(cfg, grads, atk_key, attack_params)
         aux["payload_floats_per_worker"] = d
         r = agg(g)
         return r, state._replace(step=state.step + 1), aux
@@ -240,7 +247,7 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
         b = 1.0 / (2.0 * sp.alpha)
         diff = C.compress((m - m_prev) + b * (m_prev - h_prev), masks, sp)
         h = h_prev + diff
-        h = _byzantine_overwrite(cfg, h, atk_key)
+        h = _byzantine_overwrite(cfg, h, atk_key, attack_params)
         r = agg(h)
         new = ServerState(momentum=m.astype(mdt), mirror=h.astype(mdt),
                           prev_grad=grads, step=state.step + 1)

@@ -41,6 +41,39 @@ def alie(honest: jnp.ndarray, f: int, z: float | None = None) -> jnp.ndarray:
     return jnp.broadcast_to(byz, (f,) + byz.shape)
 
 
+def linear_attack(honest: jnp.ndarray, f: int,
+                  coeffs: jnp.ndarray) -> jnp.ndarray:
+    """The (a, b)-parameterised mean/std family: ``byz = a*mu + b*sd``.
+
+    Expresses alie (a=1, b=-z), signflip (a=-scale), foe, ipm, and zero as
+    *data* instead of code: ``coeffs`` is a traced ``[2]`` vector, so a grid
+    of linear-family attacks compiles to ONE XLA program vmapped over the
+    coefficient axis (see ``repro.core.sweep``) instead of one program per
+    attack.
+    """
+    mu = jnp.mean(honest, axis=0)
+    sd = jnp.std(honest, axis=0)
+    byz = coeffs[0] * mu + coeffs[1] * sd
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def linear_coeffs(cfg: "AttackConfig", n: int, f: int):
+    """``(a, b)`` such that ``linear_attack`` reproduces ``cfg``, or ``None``
+    when the attack is outside the mean/std family (mimic, gauss)."""
+    if cfg.name == "alie":
+        z = cfg.z if cfg.z is not None else _alie_z(n, f)
+        return (1.0, -z)
+    if cfg.name == "signflip":
+        return (-(cfg.scale or 1.0), 0.0)
+    if cfg.name == "ipm":
+        return (-(cfg.scale or 0.5), 0.0)
+    if cfg.name == "foe":
+        return (-(cfg.scale or 10.0), 0.0)
+    if cfg.name == "zero":
+        return (0.0, 0.0)
+    return None
+
+
 def sign_flip(honest: jnp.ndarray, f: int, scale: float = 1.0) -> jnp.ndarray:
     """Send the negated honest mean (scaled)."""
     byz = -scale * jnp.mean(honest, axis=0)
@@ -83,7 +116,8 @@ class AttackConfig:
 
     Attributes:
       name: ``none`` | ``alie`` | ``signflip`` | ``ipm`` | ``foe`` |
-        ``mimic`` | ``gauss`` | ``zero``.
+        ``mimic`` | ``gauss`` | ``zero`` | ``linear`` (the traced mean/std
+        family; coefficients arrive via ``apply_attack``'s ``params``).
       scale: magnitude parameter (signflip/foe/ipm/gauss).
       z: optional override of the ALIE z-score.
     """
@@ -94,10 +128,17 @@ class AttackConfig:
 
 
 def apply_attack(cfg: AttackConfig, honest: jnp.ndarray, f: int,
-                 key: jax.Array | None = None) -> jnp.ndarray:
-    """Produce the ``[f, d]`` Byzantine payload from honest ``[h, d]``."""
+                 key: jax.Array | None = None,
+                 params: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Produce the ``[f, d]`` Byzantine payload from honest ``[h, d]``.
+
+    ``params`` carries traced attack parameters for ``name='linear'`` (the
+    ``[2]`` coefficient vector of :func:`linear_attack`)."""
     if f == 0 or cfg.name == "none":
         return jnp.zeros((f,) + honest.shape[1:], honest.dtype)
+    if cfg.name == "linear":
+        assert params is not None, "linear attack needs a coeffs vector"
+        return linear_attack(honest, f, params)
     if cfg.name == "alie":
         return alie(honest, f, z=cfg.z)
     if cfg.name == "signflip":

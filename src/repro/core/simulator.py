@@ -3,7 +3,17 @@
 Simulates a server + n workers on a single host (the paper's own evaluation
 setup, §4): every round, honest workers compute (mini-batch) gradients on
 their local shard, the chosen algorithm compresses/attacks/aggregates, and
-the server updates the model. One jitted function per round.
+the server updates the model.
+
+The engine is a single ``lax.scan`` over rounds (:meth:`Simulator.rollout`):
+the whole trajectory runs inside one jitted XLA program with metrics stacked
+on device, so sweeping the paper's attack x aggregator x algorithm x seed
+grids (``repro.core.sweep``) pays host-side dispatch once per scenario
+instead of once per round. :meth:`Simulator.run` is kept as a thin
+compatibility wrapper that chunks the scan at eval rounds to preserve the
+legacy eval/early-stop protocol, and :meth:`Simulator.run_per_round` retains
+the original one-dispatch-per-round loop as the equivalence/benchmark
+reference.
 
 This is the engine behind the MNIST-like reproduction (benchmarks/bench_fig1)
 and the convergence-comparison benchmarks; the LLM-scale path lives in
@@ -17,6 +27,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import algorithms as alg
 from repro.core import compression as C
@@ -27,6 +38,29 @@ class SimState(NamedTuple):
     params_flat: jnp.ndarray
     server: alg.ServerState
     key: jax.Array
+
+
+def stack_batches(batch_fn: Callable[[int], Any], steps: int,
+                  start: int = 0) -> Any:
+    """Materialise ``batch_fn(start) .. batch_fn(start+steps-1)`` stacked on a
+    leading step axis, ready for :meth:`Simulator.rollout`'s scan.
+
+    Stateful ``batch_fn`` implementations (e.g. ``data.BatchFn``) are called
+    in step order, so chunked stacking reproduces the same stream as the
+    legacy per-round loop.
+    """
+    per_step = [batch_fn(t) for t in range(start, start + steps)]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *per_step)
+
+
+def ensure_stacked(batches: Any, steps: Optional[int]) -> Any:
+    """Normalise a rollout's ``batches`` argument: materialise a ``batch_fn``
+    callable into a step-stacked pytree, pass stacked pytrees through."""
+    if callable(batches):
+        if steps is None:
+            raise ValueError("steps is required when batches is callable")
+        return stack_batches(batches, steps)
+    return batches
 
 
 @dataclasses.dataclass
@@ -49,7 +83,8 @@ class Simulator:
         self.spec = T.make_flat_spec(self.params0)
         self.d = self.spec.size
 
-        def _round(state: SimState, worker_batches) -> Tuple[SimState, dict]:
+        def _round(state: SimState, worker_batches,
+                   attack_params=None) -> Tuple[SimState, dict]:
             key, mask_key = jax.random.split(state.key)
             params = T.tree_unravel(state.params_flat, self.spec)
 
@@ -59,7 +94,8 @@ class Simulator:
 
             losses, grads = jax.vmap(worker_grad)(worker_batches)
             r, server, aux = alg.server_round(self.cfg, state.server, grads,
-                                              mask_key)
+                                              mask_key,
+                                              attack_params=attack_params)
             new_flat = alg.apply_direction(state.params_flat, r,
                                            self.cfg.gamma)
             metrics = {
@@ -70,7 +106,19 @@ class Simulator:
             }
             return SimState(new_flat, server, key), metrics
 
+        def _scan(state: SimState, batches,
+                  attack_params=None) -> Tuple[SimState, dict]:
+            return jax.lax.scan(
+                lambda s, b: _round(s, b, attack_params), state, batches)
+
         self._round = jax.jit(_round)
+        # un-jitted scan kept separate so repro.core.sweep can vmap it over
+        # the seed (and linear-attack coefficient) axes before compiling
+        self._scan = _scan
+        self._rollout = jax.jit(_scan)
+        # jitted sweep entry points, cached per vmap structure so repeated
+        # grid calls don't re-trace
+        self._sweep_cache: dict = {}
 
     def init(self, seed: int = 0) -> SimState:
         return SimState(
@@ -91,32 +139,96 @@ class Simulator:
                               with_mask_indices=True)
         return per * self.cfg.n_workers
 
+    def rollout(self, state: SimState, batches: Any,
+                steps: Optional[int] = None) -> Tuple[SimState, dict]:
+        """Run a whole trajectory inside one jitted ``lax.scan``.
+
+        ``batches`` is either a pytree whose leaves carry a leading step axis
+        (``[steps, n_workers, ...]``, see :func:`stack_batches`) or a
+        ``batch_fn(t)`` callable (then ``steps`` is required and the batches
+        are materialised host-side first).
+
+        Returns ``(final_state, metrics)`` where ``metrics`` is a dict of
+        ``[steps]`` arrays stacked on device. There is no early stopping —
+        the scan always runs every round; threshold crossings (the paper's
+        comm-bytes-to-tau protocol) are computed post-hoc, e.g. with
+        :func:`repro.core.sweep.bytes_to_threshold`.
+        """
+        return self._rollout(state, ensure_stacked(batches, steps))
+
+    def _record(self, history: Dict[str, list], rec: Dict[str, float],
+                t: int) -> None:
+        history["step"].append(t)
+        history["loss"].append(rec["loss"])
+        history["comm_bytes"].append(rec["comm_bytes"])
+        for k, v in rec.items():
+            if k not in ("loss", "comm_bytes"):
+                history.setdefault(k, []).append(v)
+
+    def _eval_record(self, state: SimState, m: Dict[str, Any], t: int,
+                     per_round: int, eval_batch: Any) -> Dict[str, float]:
+        rec = {k: float(v) for k, v in m.items()}
+        rec["comm_bytes"] = per_round * (t + 1)
+        if self.eval_fn is not None and eval_batch is not None:
+            emet = self.eval_fn(self.params(state), eval_batch)
+            rec.update({k: float(v) for k, v in emet.items()})
+        return rec
+
     def run(self, state: SimState, batch_fn: Callable[[int], Any],
             steps: int, eval_every: int = 0, eval_batch: Any = None,
             stop_fn: Optional[Callable[[Dict[str, float]], bool]] = None,
             ) -> Tuple[SimState, Dict[str, list]]:
-        """Run ``steps`` rounds.
+        """Run ``steps`` rounds (thin compatibility wrapper over the scan
+        engine).
 
         ``batch_fn(t)`` must return stacked per-worker batches with leading
         dim ``n_workers``. ``stop_fn(metrics)`` can end training early (used
         by the communication-cost-to-threshold benchmark).
+
+        The trajectory is executed as ``lax.scan`` chunks whose boundaries
+        are exactly the legacy eval rounds (``t % eval_every == 0`` or the
+        final step), so the eval schedule, history contents, and early-stop
+        behaviour match :meth:`run_per_round` while paying host dispatch per
+        eval chunk instead of per round.
+        """
+        history: Dict[str, list] = {"step": [], "loss": [], "comm_bytes": []}
+        per_round = self.payload_bytes_per_round()
+        if steps <= 0:
+            return state, history
+        if not eval_every:
+            state, _ = self.rollout(state, batch_fn, steps)
+            return state, history
+        eval_rounds = [t for t in range(steps)
+                       if t % eval_every == 0 or t == steps - 1]
+        prev = -1
+        for t in eval_rounds:
+            chunk = stack_batches(batch_fn, t - prev, start=prev + 1)
+            state, ms = self._rollout(state, chunk)
+            prev = t
+            m_last = {k: v[-1] for k, v in ms.items()}
+            rec = self._eval_record(state, m_last, t, per_round, eval_batch)
+            self._record(history, rec, t)
+            if stop_fn is not None and stop_fn(rec):
+                break
+        return state, history
+
+    def run_per_round(self, state: SimState, batch_fn: Callable[[int], Any],
+                      steps: int, eval_every: int = 0, eval_batch: Any = None,
+                      stop_fn: Optional[Callable[[Dict[str, float]], bool]]
+                      = None) -> Tuple[SimState, Dict[str, list]]:
+        """Legacy engine: one jitted dispatch per round.
+
+        Kept as the numerical-equivalence reference for the scan engine
+        (tests/test_engine.py) and as the sequential baseline for
+        benchmarks/bench_sweep.py.
         """
         history: Dict[str, list] = {"step": [], "loss": [], "comm_bytes": []}
         per_round = self.payload_bytes_per_round()
         for t in range(steps):
             state, m = self._round(state, batch_fn(t))
             if eval_every and (t % eval_every == 0 or t == steps - 1):
-                rec = {k: float(v) for k, v in m.items()}
-                rec["comm_bytes"] = per_round * (t + 1)
-                if self.eval_fn is not None and eval_batch is not None:
-                    emet = self.eval_fn(self.params(state), eval_batch)
-                    rec.update({k: float(v) for k, v in emet.items()})
-                history["step"].append(t)
-                history["loss"].append(rec["loss"])
-                history["comm_bytes"].append(rec["comm_bytes"])
-                for k, v in rec.items():
-                    if k not in ("loss", "comm_bytes"):
-                        history.setdefault(k, []).append(v)
+                rec = self._eval_record(state, m, t, per_round, eval_batch)
+                self._record(history, rec, t)
                 if stop_fn is not None and stop_fn(rec):
                     break
         return state, history

@@ -1,0 +1,343 @@
+"""Batched experiment grids: vmap the scan rollout over seeds, enumerate
+scenarios.
+
+The paper's empirical claims (Fig. 1, Table 1) are sweeps over attack x
+aggregator x algorithm x seed grids. Dispatching ``Simulator.run`` once per
+cell multiplies host-side overhead by the grid size; here every scenario is
+ONE compiled XLA program — ``lax.scan`` over rounds (``Simulator.rollout``)
+``vmap``-ed over the seed axis — and the enumerated scenarios land in a flat
+results table. Early stopping is handled post-hoc from the stacked on-device
+metrics (:func:`bytes_to_threshold`), matching the paper's
+comm-bytes-to-tau protocol without breaking the scan.
+
+CLI (the grid runner described in benchmarks/README.md):
+
+    PYTHONPATH=src python -m repro.core.sweep \
+        --algos rosdhb,dasha --attacks alie,foe,signflip --aggs cwtm \
+        --seeds 4 --steps 300 --f 3 --ratio 0.1
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregators as G
+from repro.core import algorithms as alg
+from repro.core import attacks as A
+from repro.core import compression as C
+from repro.core.simulator import SimState, Simulator, ensure_stacked
+from repro.utils import tree as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One labelled grid cell: a full algorithm configuration."""
+
+    label: str
+    cfg: alg.AlgorithmConfig
+
+
+def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
+                   attacks: Sequence[str] = ("alie",),
+                   aggregators: Sequence[str] = ("cwtm",),
+                   *, n_honest: int = 10, f: int = 3, ratio: float = 0.1,
+                   gamma: float = 0.05, beta: float = 0.9,
+                   pre_nnm: bool = True, local: bool = False,
+                   alie_z: Optional[float] = 1.5) -> List[Scenario]:
+    """Enumerate the attack x aggregator x algorithm product into scenarios.
+
+    ``f`` is fixed across the grid so every scenario shares the worker count
+    (and therefore one stacked batch pytree). ``dgd`` pairs with plain mean
+    (its defining non-robust corner) regardless of ``aggregators``.
+    """
+    out = []
+    for algo, attack, agg in itertools.product(algos, attacks, aggregators):
+        aggregator = (G.AggregatorConfig(name="mean") if algo == "dgd"
+                      else G.AggregatorConfig(name=agg, f=max(f, 1),
+                                              pre_nnm=pre_nnm))
+        sparsifier = C.SparsifierConfig(
+            kind="randk", ratio=1.0 if algo == "robust_dgd" else ratio,
+            local=local)
+        cfg = alg.AlgorithmConfig(
+            name=algo, n_workers=n_honest + f, f=f, gamma=gamma, beta=beta,
+            sparsifier=sparsifier, aggregator=aggregator,
+            attack=A.AttackConfig(name=attack,
+                                  z=alie_z if attack == "alie" else None))
+        out.append(Scenario(label=f"{algo}/{attack}/{aggregator.name}", cfg=cfg))
+    return out
+
+
+def init_states(sim: Simulator, seeds: Sequence[int]) -> SimState:
+    """Stack per-seed initial states on a leading seed axis."""
+    if not len(seeds):
+        raise ValueError("seeds must be non-empty")
+    states = [sim.init(int(s)) for s in seeds]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def rollout_over_seeds(sim: Simulator, seeds: Sequence[int], batches: Any,
+                       steps: Optional[int] = None
+                       ) -> Tuple[SimState, dict]:
+    """Run all seeds of one scenario in a single vmapped scan.
+
+    ``batches`` (a stacked pytree or a ``batch_fn``) is shared across seeds —
+    seed variation enters through the per-seed PRNG state (mask sampling and
+    stochastic attacks), matching sequential ``Simulator.rollout`` calls with
+    ``sim.init(seed)``.
+
+    Returns ``(final_states, metrics)`` with a leading seed axis on every
+    leaf (metrics are ``[n_seeds, steps]``).
+    """
+    batches = ensure_stacked(batches, steps)
+    if "seed_vmap" not in sim._sweep_cache:
+        sim._sweep_cache["seed_vmap"] = jax.jit(
+            jax.vmap(sim._scan, in_axes=(0, None)))
+    return sim._sweep_cache["seed_vmap"](init_states(sim, seeds), batches)
+
+
+def fused_attack_rollout(sim: Simulator,
+                         attack_cfgs: Sequence[A.AttackConfig],
+                         seeds: Sequence[int], batches: Any,
+                         steps: Optional[int] = None
+                         ) -> Tuple[SimState, dict]:
+    """Run a whole attacks x seeds grid as ONE compiled XLA program.
+
+    Every attack must belong to the mean/std linear family
+    (:func:`repro.core.attacks.linear_coeffs` — alie/signflip/ipm/foe/zero):
+    their coefficients become a traced ``[n_attacks, 2]`` input vmapped over,
+    so the grid pays a single compile instead of one per attack. ``sim`` must
+    be built with ``attack=AttackConfig(name="linear")``.
+
+    Returns ``(final_states, metrics)`` with leading ``[n_attacks, n_seeds]``
+    axes on every leaf.
+    """
+    assert sim.cfg.attack.name == "linear", sim.cfg.attack
+    n, f = sim.cfg.n_workers, sim.cfg.f
+    coeffs = []
+    for a in attack_cfgs:
+        c = A.linear_coeffs(a, n, f)
+        if c is None:
+            raise ValueError(f"attack {a.name!r} is outside the linear "
+                             "family; run it as its own scenario")
+        coeffs.append(c)
+    batches = ensure_stacked(batches, steps)
+    if "attack_seed_vmap" not in sim._sweep_cache:
+        # ONE flat vmap axis of size n_attacks * n_seeds (a nested
+        # vmap-of-vmap compiles ~2.5x slower for the same program)
+        sim._sweep_cache["attack_seed_vmap"] = jax.jit(
+            jax.vmap(sim._scan, in_axes=(0, None, 0)))
+    n_a, n_s = len(coeffs), len(seeds)
+    states = init_states(sim, seeds)
+    states_flat = jax.tree_util.tree_map(
+        lambda l: jnp.tile(l, (n_a,) + (1,) * (l.ndim - 1)), states)
+    coeffs_flat = jnp.repeat(jnp.asarray(coeffs, jnp.float32), n_s, axis=0)
+    out_states, out_metrics = sim._sweep_cache["attack_seed_vmap"](
+        states_flat, batches, coeffs_flat)
+    unflatten = lambda l: l.reshape((n_a, n_s) + l.shape[1:])  # noqa: E731
+    return (jax.tree_util.tree_map(unflatten, out_states),
+            jax.tree_util.tree_map(unflatten, out_metrics))
+
+
+def eval_over_seeds(sim: Simulator, states: SimState,
+                    eval_batch: Any) -> Dict[str, jnp.ndarray]:
+    """vmap ``sim.eval_fn`` over the seed axis of stacked final states."""
+    assert sim.eval_fn is not None, "Simulator has no eval_fn"
+    if "eval_vmap" not in sim._sweep_cache:
+        def one(flat, batch):
+            return sim.eval_fn(T.tree_unravel(flat, sim.spec), batch)
+
+        sim._sweep_cache["eval_vmap"] = jax.jit(
+            jax.vmap(one, in_axes=(0, None)))
+    return sim._sweep_cache["eval_vmap"](states.params_flat, eval_batch)
+
+
+def bytes_to_threshold(values: np.ndarray, per_round_bytes: int,
+                       threshold: float, mode: str = "<=") -> np.ndarray:
+    """Post-hoc early stopping: uplink bytes until ``values`` first crosses
+    ``threshold`` (``inf`` where it never does).
+
+    ``values`` is a per-round metric trajectory ``[steps]`` or a stacked
+    ``[n_seeds, steps]``; rounds are 1-indexed for byte accounting, matching
+    the legacy ``stop_fn`` protocol.
+    """
+    if mode not in ("<=", ">="):
+        raise ValueError(f"mode must be '<=' or '>=', got {mode!r}")
+    v = np.atleast_2d(np.asarray(values))
+    hit = (v <= threshold) if mode == "<=" else (v >= threshold)
+    any_hit = hit.any(axis=1)
+    first = np.where(any_hit, hit.argmax(axis=1), 0)
+    out = np.where(any_hit, (first + 1.0) * per_round_bytes, np.inf)
+    return out[0] if np.ndim(values) == 1 else out
+
+
+def _result_rows(sc: Scenario, sim: Simulator, seeds: Sequence[int],
+                 loss: np.ndarray, emet: Dict[str, Any],
+                 n_steps: int) -> List[Dict[str, Any]]:
+    total_bytes = sim.payload_bytes_per_round() * n_steps
+    rows = []
+    for i, seed in enumerate(seeds):
+        row = {
+            "scenario": sc.label,
+            "algo": sc.cfg.name,
+            "attack": sc.cfg.attack.name,
+            "aggregator": sc.cfg.aggregator.name,
+            "ratio": sc.cfg.sparsifier.ratio,
+            "f": sc.cfg.f,
+            "seed": int(seed),
+            "final_loss": float(loss[i, -1]),
+            "min_loss": float(loss[i].min()),
+            "comm_bytes": total_bytes,
+        }
+        row.update({k: float(v[i]) for k, v in emet.items()})
+        rows.append(row)
+    return rows
+
+
+def run_scenarios(scenarios: Sequence[Scenario], *,
+                  loss_fn: Callable[[Any, Any], jnp.ndarray],
+                  params0: Any, batches: Any, seeds: Sequence[int],
+                  steps: Optional[int] = None,
+                  eval_fn: Optional[Callable[[Any, Any], Dict]] = None,
+                  eval_batch: Any = None,
+                  fuse_attacks: bool = True) -> List[Dict[str, Any]]:
+    """Run every scenario x seed cell; return the flat results table.
+
+    Scenarios that differ only in a mean/std-family attack are fused into a
+    single compiled program (:func:`fused_attack_rollout`) — the attack axis
+    becomes vmapped data. Everything else pays one vmapped-scan compile per
+    scenario. Rows carry the scenario label/config fields, the seed,
+    final/min loss, total honest uplink bytes, and (when ``eval_fn`` is
+    given) final eval metrics.
+    """
+    batches = ensure_stacked(batches, steps)
+    n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+
+    # group scenarios that differ only in their (linear-family) attack
+    groups: Dict[alg.AlgorithmConfig, List[Scenario]] = {}
+    for sc in scenarios:
+        base = dataclasses.replace(sc.cfg, attack=A.AttackConfig(name="none"))
+        groups.setdefault(base, []).append(sc)
+
+    rows_by_scenario: Dict[int, List[Dict[str, Any]]] = {}
+    for base, group in groups.items():
+        fusible = (fuse_attacks and len(group) > 1 and all(
+            A.linear_coeffs(sc.cfg.attack, base.n_workers, base.f) is not None
+            for sc in group))
+        if fusible:
+            lin = dataclasses.replace(base,
+                                      attack=A.AttackConfig(name="linear"))
+            sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=lin,
+                            eval_fn=eval_fn)
+            states, metrics = fused_attack_rollout(
+                sim, [sc.cfg.attack for sc in group], seeds, batches)
+            loss = np.asarray(metrics["loss"])  # [n_attacks, n_seeds, steps]
+            for a, sc in enumerate(group):
+                st_a = jax.tree_util.tree_map(lambda l: l[a], states)
+                emet = (eval_over_seeds(sim, st_a, eval_batch)
+                        if eval_fn is not None and eval_batch is not None
+                        else {})
+                rows_by_scenario[id(sc)] = _result_rows(
+                    sc, sim, seeds, loss[a], emet, n_steps)
+        else:
+            for sc in group:
+                sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg,
+                                eval_fn=eval_fn)
+                states, metrics = rollout_over_seeds(sim, seeds, batches)
+                emet = (eval_over_seeds(sim, states, eval_batch)
+                        if eval_fn is not None and eval_batch is not None
+                        else {})
+                rows_by_scenario[id(sc)] = _result_rows(
+                    sc, sim, seeds, np.asarray(metrics["loss"]), emet,
+                    n_steps)
+    # restore caller ordering regardless of fusion grouping
+    return [row for sc in scenarios for row in rows_by_scenario[id(sc)]]
+
+
+# --------------------------------------------------------------------------
+# Built-in testbeds + CLI
+# --------------------------------------------------------------------------
+
+
+def quadratic_testbed(n_workers: int, d: int = 64, spread: float = 0.1,
+                      seed: int = 0):
+    """The controlled quadratic testbed of benchmarks/bench_table1: worker i
+    holds target ``t_i``, local loss ``0.5 ||w - t_i||^2``, so the honest
+    optimum (mean of honest targets) is known exactly.
+
+    Returns ``(loss_fn, params0, batch_fn, targets)``.
+    """
+    tg = jax.random.normal(jax.random.PRNGKey(seed),
+                           (n_workers, d)) * spread + 1.0
+
+    def loss_fn(params, batch):
+        return 0.5 * jnp.sum(jnp.square(params["w"] - batch["target"]))
+
+    return loss_fn, {"w": jnp.zeros(d)}, (lambda t: {"target": tg}), tg
+
+
+def _mnist_testbed(n_workers: int, per_worker: int = 800, batch: int = 60,
+                   seed: int = 0):
+    from repro.data import SyntheticMNIST
+    from repro.models import cnn_accuracy, cnn_init, cnn_loss
+
+    ds = SyntheticMNIST(n_workers=n_workers, per_worker=per_worker, seed=seed)
+    eval_fn = lambda p, b: {"acc": cnn_accuracy(p, b)}  # noqa: E731
+    return (cnn_loss, cnn_init(jax.random.PRNGKey(0)),
+            ds.worker_batches(batch), eval_fn, ds.eval_batch)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
+    import argparse
+
+    p = argparse.ArgumentParser(description="attack x aggregator x algorithm "
+                                "x seed grid runner (one vmapped scan per "
+                                "scenario)")
+    p.add_argument("--algos", default="rosdhb")
+    p.add_argument("--attacks", default="alie")
+    p.add_argument("--aggs", default="cwtm")
+    p.add_argument("--seeds", type=int, default=4, help="number of seeds")
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--f", type=int, default=3)
+    p.add_argument("--n-honest", type=int, default=10)
+    p.add_argument("--ratio", type=float, default=0.1)
+    p.add_argument("--gamma", type=float, default=0.05)
+    p.add_argument("--testbed", default="quadratic",
+                   choices=["quadratic", "mnist"])
+    p.add_argument("--out", default=None, help="optional JSON output path")
+    args = p.parse_args(argv)
+
+    scenarios = grid_scenarios(
+        args.algos.split(","), args.attacks.split(","), args.aggs.split(","),
+        n_honest=args.n_honest, f=args.f, ratio=args.ratio, gamma=args.gamma)
+    seeds = list(range(args.seeds))
+    n = args.n_honest + args.f
+    if args.testbed == "quadratic":
+        loss_fn, params0, batch_fn, _ = quadratic_testbed(n)
+        eval_fn = eval_batch = None
+    else:
+        loss_fn, params0, batch_fn, eval_fn, eval_batch = _mnist_testbed(n)
+    rows = run_scenarios(scenarios, loss_fn=loss_fn, params0=params0,
+                         batches=batch_fn, seeds=seeds, steps=args.steps,
+                         eval_fn=eval_fn, eval_batch=eval_batch)
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+    if args.out:
+        import json
+        import os
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as fh:
+            json.dump(rows, fh, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

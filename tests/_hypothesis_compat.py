@@ -1,0 +1,80 @@
+"""Optional-`hypothesis` shim for the property-based test modules.
+
+When `hypothesis` is installed (see requirements-test.txt) this re-exports
+the real ``given``/``settings``/``st``. When it is not, a deterministic
+miniature takes over: each strategy draws from a fixed-seed PRNG and
+``@given`` runs the test body on ``max_examples`` pre-drawn examples — the
+property checks derandomize into fixed example sets instead of breaking
+collection with an ImportError.
+
+Only the strategy surface the test suite uses is implemented
+(``st.integers``, ``st.floats``, ``st.lists``); extend as tests grow.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw rule: ``example(rng)`` produces one value."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mimics the `hypothesis.strategies` namespace
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [elements.example(rng)
+                             for _ in range(rng.randint(min_size, max_size))])
+
+    def settings(max_examples=10, **_ignored):
+        """Record the example budget for the fallback ``given`` runner."""
+
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Run the test once per pre-drawn example (seed fixed at 0, so the
+        same example set is exercised on every run)."""
+
+        def deco(fn):
+            # NOTE: deliberately no functools.wraps — the wrapper must
+            # present a ZERO-arg signature or pytest mistakes the
+            # strategy-supplied parameters for fixtures.
+            def wrapper():
+                # settings() may sit below @given (attribute on fn) or above
+                # it (attribute on this wrapper) — honour both orders
+                n = getattr(wrapper, "_fallback_max_examples",
+                            getattr(fn, "_fallback_max_examples", 10))
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*drawn, **drawn_kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -1,0 +1,85 @@
+"""Edge-case unit tests for the config surfaces: Theorem-1 schedules and
+robustness-coefficient bounds at their domain boundaries."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import AggregatorConfig, AlgorithmConfig, theorem1_hparams
+
+
+class TestResolvedBeta:
+    def test_explicit_beta_wins(self):
+        assert AlgorithmConfig(beta=0.42, gamma=100.0).resolved_beta() == 0.42
+
+    def test_schedule_value(self):
+        cfg = AlgorithmConfig(beta=None, gamma=0.01, smoothness_L=1.0)
+        assert cfg.resolved_beta() == pytest.approx(math.sqrt(1 - 0.24))
+
+    def test_gamma_too_large_raises(self):
+        # Theorem 1 needs gamma <= 1/(24 L); at the boundary the sqrt
+        # argument hits 0 and the schedule degenerates.
+        cfg = AlgorithmConfig(beta=None, gamma=1.0 / 24.0, smoothness_L=1.0)
+        with pytest.raises(ValueError, match="too large"):
+            cfg.resolved_beta()
+        cfg = AlgorithmConfig(beta=None, gamma=0.05, smoothness_L=2.0)
+        with pytest.raises(ValueError, match="1/\\(24 L\\)"):
+            cfg.resolved_beta()
+
+    def test_gamma_just_below_boundary_ok(self):
+        cfg = AlgorithmConfig(beta=None, gamma=(1.0 - 1e-6) / 24.0,
+                              smoothness_L=1.0)
+        assert 0.0 < cfg.resolved_beta() < 0.01
+
+
+class TestTheorem1Hparams:
+    def test_values_and_consistency(self):
+        gamma, beta = theorem1_hparams(L=2.0, ratio=0.1)
+        assert gamma == pytest.approx(0.1 / (23200 * 2.0))
+        assert beta == pytest.approx(math.sqrt(1 - 24 * gamma * 2.0))
+        # schedule agrees with resolved_beta on the same gamma
+        cfg = AlgorithmConfig(beta=None, gamma=gamma, smoothness_L=2.0)
+        assert cfg.resolved_beta() == pytest.approx(beta)
+
+    def test_custom_constant(self):
+        gamma, beta = theorem1_hparams(L=1.0, ratio=1.0, c=100.0)
+        assert gamma == pytest.approx(0.01)
+        assert beta == pytest.approx(math.sqrt(1 - 0.24))
+
+    def test_more_compression_means_smaller_gamma(self):
+        g_small, b_small = theorem1_hparams(L=1.0, ratio=0.01)
+        g_big, b_big = theorem1_hparams(L=1.0, ratio=0.5)
+        assert g_small < g_big
+        assert b_small > b_big  # tighter compression -> heavier momentum
+
+
+class TestKappaBound:
+    @pytest.mark.parametrize("name", ["cwtm", "median", "geomed", "krum",
+                                      "multikrum"])
+    @pytest.mark.parametrize("n,f", [(4, 2), (6, 3), (5, 3), (2, 1)])
+    def test_n_at_most_2f_is_inf(self, name, n, f):
+        # robustness is information-theoretically impossible at n <= 2f
+        assert AggregatorConfig(name=name, f=f).kappa_bound(n) == float("inf")
+
+    def test_f_zero_is_zero(self):
+        for name in ["cwtm", "median", "geomed", "krum", "mean"]:
+            assert AggregatorConfig(name=name, f=0).kappa_bound(10) == 0.0
+
+    def test_mean_never_robust(self):
+        assert AggregatorConfig(name="mean", f=1).kappa_bound(1000) == \
+            float("inf")
+        # and NNM cannot rescue it (pre_nnm composition skips mean)
+        assert AggregatorConfig(name="mean", f=1, pre_nnm=True).kappa_bound(
+            1000) == float("inf")
+
+    def test_just_above_breakdown_is_finite(self):
+        for name in ["cwtm", "median", "geomed", "krum"]:
+            k = AggregatorConfig(name=name, f=2).kappa_bound(5)  # n = 2f + 1
+            assert np.isfinite(k) and k > 0
+
+    def test_nnm_improves_cwtm_at_paper_setup(self):
+        base = AggregatorConfig(name="cwtm", f=2, pre_nnm=False)
+        nnm = AggregatorConfig(name="cwtm", f=2, pre_nnm=True)
+        assert nnm.kappa_bound(16) < 2.0  # Theorem-1 precondition regime
+        assert np.isfinite(base.kappa_bound(16))

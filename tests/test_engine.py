@@ -1,0 +1,262 @@
+"""Batched experiment engine tests: the lax.scan rollout must reproduce the
+legacy per-round Python loop exactly, and the vmap-over-seeds sweep must
+match per-seed sequential rollouts (tentpole of the scan/vmap engine PR).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    AlgorithmConfig, AggregatorConfig, AttackConfig, Simulator,
+    SparsifierConfig, bytes_to_threshold, grid_scenarios, quadratic_testbed,
+    rollout_over_seeds, run_scenarios, stack_batches,
+)
+from repro.core.sweep import eval_over_seeds, init_states
+
+N, F, D, STEPS = 13, 3, 48, 50
+
+
+def _sim(algo, attack="alie", agg=None, ratio=0.2, local=False):
+    loss_fn, params0, batch_fn, tg = quadratic_testbed(N, D)
+    agg = agg or ("mean" if algo == "dgd" else "cwtm")
+    cfg = AlgorithmConfig(
+        name=algo, n_workers=N, f=F, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(
+            kind="randk", ratio=1.0 if algo == "robust_dgd" else ratio,
+            local=local),
+        aggregator=AggregatorConfig(name=agg, f=F, pre_nnm=(agg != "mean")),
+        attack=AttackConfig(name=attack, z=1.5 if attack == "alie" else None))
+    return Simulator(loss_fn=loss_fn, params0=params0, cfg=cfg), batch_fn, tg
+
+
+@pytest.mark.parametrize("algo,attack", [
+    ("rosdhb", "alie"),
+    ("dasha", "alie"),
+    ("dgd", "signflip"),
+    ("robust_dgd", "foe"),
+])
+def test_scan_rollout_matches_per_round_loop(algo, attack):
+    """Full-trajectory equivalence under f>0 attacks, for every algorithm."""
+    sim, batch_fn, _ = _sim(algo, attack=attack)
+    st_loop = sim.init(0)
+    loop_metrics = []
+    for t in range(STEPS):
+        st_loop, m = sim._round(st_loop, batch_fn(t))
+        loop_metrics.append({k: float(v) for k, v in m.items()})
+    st_scan, ms = sim.rollout(sim.init(0), batch_fn, steps=STEPS)
+
+    np.testing.assert_allclose(np.asarray(st_scan.params_flat),
+                               np.asarray(st_loop.params_flat),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(st_scan.server.momentum),
+                               np.asarray(st_loop.server.momentum),
+                               rtol=1e-5, atol=1e-7)
+    assert int(st_scan.server.step) == int(st_loop.server.step) == STEPS
+    for k in ("loss", "grad_norm", "dir_norm"):
+        np.testing.assert_allclose(
+            np.asarray(ms[k]), np.asarray([m[k] for m in loop_metrics]),
+            rtol=1e-5, atol=1e-7, err_msg=f"{algo}/{attack}/{k}")
+
+
+def test_scan_rollout_local_masks_match():
+    """RoSDHB-Local (per-worker masks) is scan-safe too."""
+    sim, batch_fn, _ = _sim("rosdhb", local=True)
+    st_loop = sim.init(1)
+    for t in range(STEPS):
+        st_loop, _ = sim._round(st_loop, batch_fn(t))
+    st_scan, _ = sim.rollout(sim.init(1), batch_fn, steps=STEPS)
+    np.testing.assert_allclose(np.asarray(st_scan.params_flat),
+                               np.asarray(st_loop.params_flat),
+                               rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("algo", ["rosdhb", "dasha"])
+def test_vmap_sweep_matches_sequential_seeds(algo):
+    """rollout_over_seeds == per-seed sequential rollouts, bit for bit in
+    structure and close in value."""
+    sim, batch_fn, _ = _sim(algo)
+    seeds = [0, 1, 2, 3]
+    batches = stack_batches(batch_fn, STEPS)
+    states, metrics = rollout_over_seeds(sim, seeds, batches)
+    assert np.asarray(metrics["loss"]).shape == (len(seeds), STEPS)
+    for i, s in enumerate(seeds):
+        st_seq, ms_seq = sim.rollout(sim.init(s), batches)
+        np.testing.assert_allclose(
+            np.asarray(states.params_flat[i]), np.asarray(st_seq.params_flat),
+            rtol=1e-5, atol=1e-7, err_msg=f"seed {s}")
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"][i]), np.asarray(ms_seq["loss"]),
+            rtol=1e-5, atol=1e-7)
+
+
+def test_run_wrapper_matches_legacy_history():
+    """Simulator.run (chunked scan) reproduces run_per_round's eval schedule,
+    history, and early stopping."""
+    sim, batch_fn, tg = _sim("rosdhb")
+    kw = dict(steps=23, eval_every=5)
+    st_a, h_a = sim.run_per_round(sim.init(0), batch_fn, **kw)
+    st_b, h_b = sim.run(sim.init(0), batch_fn, **kw)
+    assert h_a["step"] == h_b["step"] == [0, 5, 10, 15, 20, 22]
+    assert h_a["comm_bytes"] == h_b["comm_bytes"]
+    np.testing.assert_allclose(h_a["loss"], h_b["loss"], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_a.params_flat),
+                               np.asarray(st_b.params_flat),
+                               rtol=1e-5, atol=1e-7)
+
+    # early stop fires at the same eval round on both engines
+    thresh = h_a["loss"][2]
+    stop = lambda m: m["loss"] <= thresh  # noqa: E731
+    _, h_c = sim.run_per_round(sim.init(0), batch_fn, stop_fn=stop, **kw)
+    _, h_d = sim.run(sim.init(0), batch_fn, stop_fn=stop, **kw)
+    assert h_c["step"] == h_d["step"]
+    assert len(h_d["step"]) < len(h_b["step"])
+
+
+def test_run_without_eval_is_single_scan():
+    sim, batch_fn, _ = _sim("rosdhb")
+    st, hist = sim.run(sim.init(0), batch_fn, steps=7)
+    assert hist["step"] == [] and int(st.server.step) == 7
+
+
+def test_stack_batches_orders_stateful_streams():
+    calls = []
+
+    def batch_fn(t):
+        calls.append(t)
+        return {"x": np.full((2, 3), t, np.float32)}
+
+    b = stack_batches(batch_fn, 4, start=2)
+    assert calls == [2, 3, 4, 5]
+    assert b["x"].shape == (4, 2, 3)
+    np.testing.assert_array_equal(b["x"][:, 0, 0], [2, 3, 4, 5])
+
+
+def test_grid_scenarios_and_results_table():
+    scenarios = grid_scenarios(["rosdhb", "dgd"], ["alie", "foe"], ["cwtm"],
+                               n_honest=8, f=2, ratio=0.25, gamma=0.05)
+    assert len(scenarios) == 4
+    assert {s.cfg.attack.name for s in scenarios} == {"alie", "foe"}
+    # dgd always pairs with its non-robust mean corner
+    assert all(s.cfg.aggregator.name == "mean" for s in scenarios
+               if s.cfg.name == "dgd")
+
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(10, 16)
+    rows = run_scenarios(scenarios, loss_fn=loss_fn, params0=params0,
+                         batches=batch_fn, seeds=[0, 1], steps=10)
+    assert len(rows) == 8  # 4 scenarios x 2 seeds
+    assert {r["seed"] for r in rows} == {0, 1}
+    for r in rows:
+        assert np.isfinite(r["final_loss"]) or r["algo"] == "dgd"
+        assert r["comm_bytes"] > 0
+
+
+def test_eval_over_seeds_matches_sequential():
+    sim, batch_fn, tg = _sim("rosdhb")
+    sim = Simulator(loss_fn=sim.loss_fn, params0=sim.params0, cfg=sim.cfg,
+                    eval_fn=lambda p, b: {
+                        "dist": jax.numpy.linalg.norm(p["w"] - b["opt"])})
+    eval_batch = {"opt": np.asarray(tg[F:]).mean(0)}
+    seeds = [0, 1]
+    states, _ = rollout_over_seeds(sim, seeds, batch_fn, steps=20)
+    batched = eval_over_seeds(sim, states, eval_batch)
+    for i, s in enumerate(seeds):
+        st, _ = sim.rollout(sim.init(s), batch_fn, steps=20)
+        one = sim.eval_fn(sim.params(st), eval_batch)
+        np.testing.assert_allclose(float(batched["dist"][i]),
+                                   float(one["dist"]), rtol=1e-5)
+
+
+def test_fused_attack_rollout_matches_per_attack_scenarios():
+    """The traced linear-attack axis (one compile for the whole attack grid)
+    reproduces the per-attack compiled programs."""
+    import dataclasses
+
+    from repro.core import fused_attack_rollout
+
+    attacks = [AttackConfig(name="alie", z=1.5),
+               AttackConfig(name="foe"),
+               AttackConfig(name="signflip")]
+    sim_ref, batch_fn, _ = _sim("rosdhb")
+    batches = stack_batches(batch_fn, 30)
+    seeds = [0, 1]
+    lin = dataclasses.replace(sim_ref.cfg, attack=AttackConfig(name="linear"))
+    sim = Simulator(loss_fn=sim_ref.loss_fn, params0=sim_ref.params0, cfg=lin)
+    states, metrics = fused_attack_rollout(sim, attacks, seeds, batches)
+    assert np.asarray(metrics["loss"]).shape == (len(attacks), len(seeds), 30)
+    for a, atk in enumerate(attacks):
+        cfg = dataclasses.replace(sim_ref.cfg, attack=atk)
+        ref = Simulator(loss_fn=sim_ref.loss_fn, params0=sim_ref.params0,
+                        cfg=cfg)
+        ref_states, ref_metrics = rollout_over_seeds(ref, seeds, batches)
+        np.testing.assert_allclose(
+            np.asarray(states.params_flat[a]),
+            np.asarray(ref_states.params_flat),
+            rtol=1e-5, atol=1e-7, err_msg=atk.name)
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"][a]), np.asarray(ref_metrics["loss"]),
+            rtol=1e-5, atol=1e-7)
+
+
+def test_fused_attack_rollout_rejects_nonlinear_attacks():
+    import dataclasses
+
+    from repro.core import fused_attack_rollout
+
+    sim_ref, batch_fn, _ = _sim("rosdhb")
+    lin = dataclasses.replace(sim_ref.cfg, attack=AttackConfig(name="linear"))
+    sim = Simulator(loss_fn=sim_ref.loss_fn, params0=sim_ref.params0, cfg=lin)
+    with pytest.raises(ValueError, match="linear"):
+        fused_attack_rollout(sim, [AttackConfig(name="mimic")], [0],
+                             batch_fn, steps=2)
+
+
+def test_run_scenarios_fusion_matches_unfused():
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(10, 16)
+    scenarios = grid_scenarios(["rosdhb"], ["alie", "foe", "zero"], ["cwtm"],
+                               n_honest=8, f=2, ratio=0.25)
+    kw = dict(loss_fn=loss_fn, params0=params0, batches=batch_fn,
+              seeds=[0, 1], steps=15)
+    fused = run_scenarios(scenarios, fuse_attacks=True, **kw)
+    unfused = run_scenarios(scenarios, fuse_attacks=False, **kw)
+    assert [(r["scenario"], r["seed"]) for r in fused] == \
+        [(r["scenario"], r["seed"]) for r in unfused]
+    for rf, ru in zip(fused, unfused):
+        np.testing.assert_allclose(rf["final_loss"], ru["final_loss"],
+                                   rtol=1e-5)
+        np.testing.assert_allclose(rf["min_loss"], ru["min_loss"], rtol=1e-5)
+
+
+def test_linear_coeffs_cover_the_mean_std_family():
+    from repro.core.attacks import _alie_z, linear_coeffs
+
+    n, f = 13, 3
+    assert linear_coeffs(AttackConfig(name="alie", z=1.5), n, f) == (1.0, -1.5)
+    a, b = linear_coeffs(AttackConfig(name="alie"), n, f)
+    assert b == -_alie_z(n, f)
+    assert linear_coeffs(AttackConfig(name="signflip"), n, f) == (-1.0, 0.0)
+    assert linear_coeffs(AttackConfig(name="foe"), n, f) == (-10.0, 0.0)
+    assert linear_coeffs(AttackConfig(name="ipm"), n, f) == (-0.5, 0.0)
+    assert linear_coeffs(AttackConfig(name="zero"), n, f) == (0.0, 0.0)
+    assert linear_coeffs(AttackConfig(name="mimic"), n, f) is None
+    assert linear_coeffs(AttackConfig(name="gauss"), n, f) is None
+
+
+def test_bytes_to_threshold_post_hoc():
+    traj = np.asarray([5.0, 3.0, 1.0, 0.5, 0.4])
+    assert bytes_to_threshold(traj, 100, 1.0) == 300.0  # crosses at round 3
+    assert bytes_to_threshold(traj, 100, 0.1) == np.inf
+    stacked = np.stack([traj, traj * 10])
+    np.testing.assert_array_equal(bytes_to_threshold(stacked, 100, 1.0),
+                                  [300.0, np.inf])
+    # rising-metric mode (accuracy-to-tau)
+    acc = np.asarray([0.1, 0.5, 0.9])
+    assert bytes_to_threshold(acc, 7, 0.85, mode=">=") == 21.0
+
+
+def test_init_states_stacks_seed_axis():
+    sim, _, _ = _sim("rosdhb")
+    states = init_states(sim, [0, 1, 2])
+    assert states.params_flat.shape == (3, sim.spec.padded_size)
+    keys = np.asarray(states.key)
+    assert not np.array_equal(keys[0], keys[1])

@@ -13,12 +13,16 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.sharding import flatten as sf
     from repro.sharding import partitioning as sp
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    try:  # jax >= 0.5: explicit Auto axis types
+        from jax.sharding import AxisType
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+    except ImportError:  # jax 0.4.x: all mesh axes are Auto already
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
     n = 4
     key = jax.random.PRNGKey(0)
     # mimic model params: a model-sharded 2D leaf, an fsdp-style leaf, a

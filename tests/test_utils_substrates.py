@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.utils import tree as T
@@ -113,8 +113,17 @@ def test_batch_fn_stacking():
 # --------------------------------------------------------------------------
 
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    # jax >= 0.5 signature is (axis_sizes, axis_names); 0.4.x takes a single
+    # tuple of (name, size) pairs
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_param_spec_rules():
