@@ -1,23 +1,28 @@
-"""Batched-engine speedup: the grid sweep vs sequential Simulator runs.
+"""One-program grid engine: fused/sharded sweep vs sequential Simulator runs.
 
-The engine PR's acceptance gate: a 4-seed x 3-attack grid through
-``repro.core.sweep`` must be >= 5x faster wall-clock than sequential
-``Simulator.run`` calls on CPU. Both paths execute the paper's
-comm-bytes-to-threshold protocol on the quadratic testbed and must produce
-IDENTICAL per-cell bytes-to-tau tables (asserted below) — the comparison is
-end-to-end, compilation included, because per-cell construct + compile +
-run is exactly what sequential sweeping pays (see
-``benchmarks.common.comm_cost_to_tau``).
+Three claims are measured (and the first two gated):
 
-Paths, slowest to fastest:
-  * sequential ``Simulator.run`` per cell — the acceptance baseline: eval
-    every 20 rounds with a stop_fn, fresh Simulator per cell;
-  * sequential legacy ``Simulator.run_per_round`` per cell — the pre-engine
-    loop (one compile per cell, one dispatch per round);
-  * the fused engine: ONE compiled program for all 12 cells — linear-family
-    attack coefficients as a traced vmap axis (``fused_attack_rollout``),
-    seeds as a vmap axis, rounds as a lax.scan, threshold crossings
-    post-hoc from the stacked on-device loss trajectory.
+1. **Attack fusion**: a 4-seed x 3-attack grid through ``repro.core.sweep``
+   must be >= 1.2x faster wall-clock than sequential ``Simulator.run`` calls
+   on CPU, with identical per-cell bytes-to-tau tables. (PR 1 gated this at
+   5x against the then-chunked ``run``; the eval-in-scan rewrite made the
+   baseline itself ~2x cheaper — one compile per cell instead of one per
+   distinct chunk length — and wall-clock on shared 2-core CI is noisy, so
+   the hard gates are now the *compile counts* of claim 2 and the loose
+   1.2x floor here; typical observed speedup is 2-4x.)
+2. **One compile for the whole grid**: a rosdhb x 5-attack x 3-aggregator
+   x 4-seed grid (the paper's Fig.-1-style comparison across robust rules)
+   plans to ONE fusible bank and traces the round body exactly once
+   (``Simulator.round_traces`` — jit compiles trace once, so this counts
+   compiled programs), where the per-scenario path pays one compile per
+   scenario (n_attacks x n_aggregators of them).
+3. **Device sharding**: the same bank laid out over all visible devices
+   (``--shard`` path, ``repro.sharding.sweep_mesh``) must match the
+   single-device rows exactly; the speedup is reported (force virtual CPU
+   devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` —
+   near-linear until the physical core count saturates).
+
+All timings land in ``results/BENCH_sweep.json`` for CI trend tracking.
 
 The engine is timed FIRST (coldest JAX state), so any in-process warmup
 favours the baselines.
@@ -26,15 +31,18 @@ favours the baselines.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import (AttackConfig, Simulator, grid_scenarios,
-                        quadratic_testbed, stack_batches)
-from repro.core.sweep import fused_attack_rollout
+from repro.core import (AttackConfig, Simulator, grid_scenarios, plan_grid,
+                        quadratic_testbed, rollout_over_seeds, stack_batches)
+from repro.core.sweep import fused_attack_rollout, fused_grid_rollout
 
 D = 64
 STEPS = 300
@@ -42,19 +50,15 @@ EVAL_EVERY = 20
 TAU_LOSS = 0.5  # honest-mean-loss threshold standing in for the paper's tau
 SEEDS = (0, 1, 2, 3)
 ATTACKS = ("alie", "foe", "signflip")
+GRID_ATTACKS = ("alie", "signflip", "ipm", "foe", "zero")
+GRID_AGGS = ("cwtm", "median", "geomed")
 
 
-def run():
-    f = 3
-    n = 10 + f
-    loss_fn, params0, batch_fn, _ = quadratic_testbed(n, D, seed=0)
-    scenarios = grid_scenarios(["rosdhb"], ATTACKS, ["cwtm"], n_honest=10,
-                               f=f, ratio=0.1, gamma=0.05)
-    batches = stack_batches(batch_fn, STEPS)
+def _attack_fusion_gate(loss_fn, params0, batch_fn, batches, scenarios):
+    """Claim 1: fused attack grid vs sequential Simulator.run (1.2x floor)."""
     cells = len(scenarios) * len(SEEDS)
     eval_rounds = np.asarray([t for t in range(STEPS)
                               if t % EVAL_EVERY == 0 or t == STEPS - 1])
-    jnp.zeros(1).block_until_ready()  # backend init outside all timings
 
     # -- the engine: one compiled program for the whole grid, post-hoc stop
     t0 = time.perf_counter()
@@ -114,12 +118,133 @@ def run():
     emit("sweep/fused_engine", t_sweep * 1e6 / cells,
          f"total={t_sweep:.2f}s speedup_vs_run={t_run / t_sweep:.1f}x "
          f"speedup_vs_per_round={t_legacy / t_sweep:.1f}x")
+    # Loose 1.2x floor: the sequential baseline is itself on the one-scan
+    # engine now (a single compile per cell, no chunk-boundary recompiles),
+    # so the remaining fused win is compile amortisation across cells —
+    # which grows with grid size and is gated deterministically via compile
+    # counts in _one_program_grid (wall-clock on shared CI is too noisy for
+    # a tight gate).
     speedup = t_run / t_sweep
-    assert speedup >= 5.0, (
+    assert speedup >= 1.2, (
         f"fused sweep only {speedup:.1f}x faster than sequential "
-        f"Simulator.run calls (acceptance gate is 5x)")
+        f"Simulator.run calls (acceptance floor is 1.2x)")
     return {"run_s": t_run, "per_round_s": t_legacy, "sweep_s": t_sweep,
             "speedup": speedup}
+
+
+def _one_program_grid(loss_fn, params0, batches):
+    """Claim 2: attack x aggregator grid = ONE compiled program (counted)."""
+    scenarios = grid_scenarios(["rosdhb"], GRID_ATTACKS, GRID_AGGS,
+                               n_honest=10, f=3, ratio=0.1, gamma=0.05)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1 and plan.banks[0].n_cells == len(scenarios), \
+        plan.describe()
+    bank = plan.banks[0]
+
+    t0 = time.perf_counter()
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    states, metrics = fused_grid_rollout(
+        sim, bank.scenario_params(), SEEDS, batches, shard=False)
+    jax.block_until_ready(metrics["loss"])
+    t_bank = time.perf_counter() - t0
+    assert sim.round_traces == 1, (
+        f"fused grid traced the round body {sim.round_traces}x; "
+        "expected ONE compiled program for the whole bank")
+    fused_loss = np.asarray(metrics["loss"])  # [n_cells, n_seeds, steps]
+
+    # per-scenario path: one vmapped-scan compile per (attack, aggregator)
+    t0 = time.perf_counter()
+    traces = 0
+    for c, sc in enumerate(bank.scenarios):
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg)
+        _, ref_metrics = rollout_over_seeds(ref, SEEDS, batches)
+        traces += ref.round_traces
+        np.testing.assert_allclose(
+            fused_loss[c], np.asarray(ref_metrics["loss"]),
+            rtol=1e-4, atol=1e-6, err_msg=sc.label)
+    t_seq = time.perf_counter() - t0
+    assert traces == len(bank.scenarios), traces
+
+    n_cells = len(scenarios)
+    emit("sweep/grid_one_program", t_bank * 1e6 / (n_cells * len(SEEDS)),
+         f"total={t_bank:.2f}s compiles=1 cells={n_cells}")
+    emit("sweep/grid_per_scenario", t_seq * 1e6 / (n_cells * len(SEEDS)),
+         f"total={t_seq:.2f}s compiles={traces} "
+         f"speedup_fused={t_seq / t_bank:.1f}x")
+    return {"bank_s": t_bank, "per_scenario_s": t_seq,
+            "bank_compiles": sim.round_traces, "per_scenario_compiles": traces,
+            "n_cells": n_cells, "speedup": t_seq / t_bank}
+
+
+def _sharded_grid(loss_fn, params0, batches):
+    """Claim 3: the bank sharded across devices matches single-device."""
+    n_dev = len(jax.devices())
+    scenarios = grid_scenarios(["rosdhb"], GRID_ATTACKS, GRID_AGGS,
+                               n_honest=10, f=3, ratio=0.1, gamma=0.05)
+    bank = plan_grid(scenarios).banks[0]
+
+    def timed(shard):
+        """(cold_s, warm_s, loss): cold includes the compile; warm is the
+        cached-program execution — the number that scales with devices."""
+        sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+        t0 = time.perf_counter()
+        _, metrics = fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                        batches, shard=shard)
+        loss = np.asarray(metrics["loss"])
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, metrics = fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                        batches, shard=shard)
+        jax.block_until_ready(metrics["loss"])
+        warm = time.perf_counter() - t0
+        return cold, warm, loss
+
+    c_single, w_single, loss_single = timed(False)
+    if n_dev < 2:
+        emit("sweep/sharded_grid", w_single * 1e6,
+             f"SKIPPED n_devices={n_dev} (set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8)")
+        return {"n_devices": n_dev, "single_warm_s": w_single,
+                "sharded_warm_s": None}
+    c_shard, w_shard, loss_shard = timed(True)
+    np.testing.assert_allclose(loss_shard, loss_single, rtol=1e-5, atol=1e-7)
+    emit("sweep/sharded_grid", w_shard * 1e6,
+         f"n_devices={n_dev} warm single={w_single:.2f}s "
+         f"sharded={w_shard:.2f}s speedup={w_single / w_shard:.2f}x "
+         f"(cold {c_single:.2f}s/{c_shard:.2f}s)")
+    return {"n_devices": n_dev, "single_warm_s": w_single,
+            "sharded_warm_s": w_shard, "single_cold_s": c_single,
+            "sharded_cold_s": c_shard, "speedup": w_single / w_shard}
+
+
+def run(out: str = "results/BENCH_sweep.json"):
+    f = 3
+    n = 10 + f
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(n, D, seed=0)
+    scenarios = grid_scenarios(["rosdhb"], ATTACKS, ["cwtm"], n_honest=10,
+                               f=f, ratio=0.1, gamma=0.05)
+    batches = stack_batches(batch_fn, STEPS)
+    jnp.zeros(1).block_until_ready()  # backend init outside all timings
+
+    # write the JSON after every section so a failed gate still leaves the
+    # partial timings behind for diagnosis (CI uploads it with if: always())
+    results = {}
+
+    def record(name, fn):
+        try:
+            results[name] = fn()
+        finally:
+            if out:
+                os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+                with open(out, "w") as fh:
+                    json.dump(results, fh, indent=2)
+
+    record("attack_fusion", lambda: _attack_fusion_gate(
+        loss_fn, params0, batch_fn, batches, scenarios))
+    record("grid_one_program",
+           lambda: _one_program_grid(loss_fn, params0, batches))
+    record("sharded", lambda: _sharded_grid(loss_fn, params0, batches))
+    return results
 
 
 if __name__ == "__main__":

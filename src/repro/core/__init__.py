@@ -6,19 +6,25 @@ See DESIGN.md §1-3. The module split mirrors Algorithm 1:
                  rosdhb / dasha / robust_dgd / dgd
   aggregators  - the (f, kappa)-robust rules F
   attacks      - the Byzantine adversary
-  simulator    - paper-scale single-host training loop (lax.scan engine)
+  simulator    - paper-scale single-host training loop (lax.scan engine,
+                 eval snapshots carried in-scan)
   sweep        - attack x aggregator x algorithm x seed grid runner
-                 (vmapped scan, one XLA program per scenario)
+                 (plan/execute: maximal fusible banks, one device-sharded
+                 XLA program per bank)
 """
 
 from repro.core.compression import (
     SparsifierConfig, make_mask, make_masks, compress, payload_bytes,
     payload_floats,
 )
-from repro.core.aggregators import AggregatorConfig, make_aggregator
+from repro.core.aggregators import (
+    AggregatorConfig, make_aggregator, make_aggregator_bank, bank_index,
+    DEFAULT_BANK,
+)
 from repro.core.attacks import AttackConfig, apply_attack
 from repro.core.algorithms import (
     AlgorithmConfig,
+    ScenarioParams,
     ServerState,
     init_state,
     server_round,
@@ -27,19 +33,22 @@ from repro.core.algorithms import (
 )
 from repro.core.simulator import Simulator, SimState, stack_batches
 from repro.core.sweep import (
-    Scenario, grid_scenarios, rollout_over_seeds, fused_attack_rollout,
+    Scenario, GridPlan, FusedBank, grid_scenarios, plan_grid, execute_plan,
+    rollout_over_seeds, fused_attack_rollout, fused_grid_rollout,
     run_scenarios, bytes_to_threshold, quadratic_testbed,
 )
 
 __all__ = [
     "SparsifierConfig", "make_mask", "make_masks", "compress",
     "payload_bytes", "payload_floats",
-    "AggregatorConfig", "make_aggregator",
+    "AggregatorConfig", "make_aggregator", "make_aggregator_bank",
+    "bank_index", "DEFAULT_BANK",
     "AttackConfig", "apply_attack",
-    "AlgorithmConfig", "ServerState", "init_state", "server_round",
-    "apply_direction", "theorem1_hparams",
+    "AlgorithmConfig", "ScenarioParams", "ServerState", "init_state",
+    "server_round", "apply_direction", "theorem1_hparams",
     "Simulator", "SimState", "stack_batches",
-    "Scenario", "grid_scenarios", "rollout_over_seeds",
-    "fused_attack_rollout", "run_scenarios",
+    "Scenario", "GridPlan", "FusedBank", "grid_scenarios", "plan_grid",
+    "execute_plan", "rollout_over_seeds", "fused_attack_rollout",
+    "fused_grid_rollout", "run_scenarios",
     "bytes_to_threshold", "quadratic_testbed",
 ]

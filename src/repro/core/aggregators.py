@@ -21,13 +21,23 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
 Aggregator = Callable[[jnp.ndarray], jnp.ndarray]
+
+#: ``(name, pre_nnm)`` branch labels of the default aggregator bank, in
+#: switch order. ``(mean, True)`` is intentionally absent — NNM composition
+#: skips the non-robust mean (see :func:`make_aggregator`); ``bank_index``
+#: maps it onto the plain-mean branch.
+BANK_NAMES: Tuple[str, ...] = ("mean", "cwtm", "median", "geomed", "krum",
+                               "multikrum")
+DEFAULT_BANK: Tuple[Tuple[str, bool], ...] = (
+    tuple((n, False) for n in BANK_NAMES)
+    + tuple((n, True) for n in BANK_NAMES if n != "mean"))
 
 
 def mean(x: jnp.ndarray) -> jnp.ndarray:
@@ -105,16 +115,25 @@ class AggregatorConfig:
       pre_nnm: compose with NNM pre-aggregation (recommended; gives the
         optimal kappa = O(f/n) per [2]).
       geomed_iters: Weiszfeld iterations for ``geomed``.
+      bank: branch set ``((name, pre_nnm), ...)`` when ``name='bank'`` — the
+        switch-based aggregator bank whose branch is selected per grid cell
+        by a traced index (see :func:`make_aggregator_bank`). ``None`` means
+        :data:`DEFAULT_BANK`.
     """
 
     name: str = "cwtm"
     f: int = 0
     pre_nnm: bool = False
     geomed_iters: int = 8
+    bank: Optional[Tuple[Tuple[str, bool], ...]] = None
 
     def kappa_bound(self, n: int) -> float:
         """Conservative upper bound on the robustness coefficient kappa."""
         f = self.f
+        if self.name not in BANK_NAMES:
+            raise ValueError(
+                f"unknown aggregator: {self.name!r} (expected one of "
+                f"{'|'.join(BANK_NAMES)})")
         if f == 0:
             return 0.0
         if n <= 2 * f:
@@ -134,27 +153,89 @@ class AggregatorConfig:
         return base
 
 
+def _base_rule(name: str, f: int, geomed_iters: int = 8) -> Aggregator:
+    """The named rule without NNM composition."""
+    if name == "mean":
+        return mean
+    if name == "cwtm":
+        return functools.partial(trimmed_mean, f=f)
+    if name == "median":
+        return coordinate_median
+    if name == "geomed":
+        return functools.partial(geometric_median, iters=geomed_iters)
+    if name == "krum":
+        return functools.partial(krum, f=f, m=1)
+    if name == "multikrum":
+        return lambda x: krum(x, f=f, m=max(1, x.shape[0] - f))
+    raise ValueError(f"unknown aggregator: {name!r}")
+
+
 def make_aggregator(cfg: AggregatorConfig) -> Aggregator:
     """Build an aggregator ``[n, d] -> [d]`` from a config."""
     f = cfg.f
-    base: Aggregator
-    if cfg.name == "mean":
-        base = mean
-    elif cfg.name == "cwtm":
-        base = functools.partial(trimmed_mean, f=f)
-    elif cfg.name == "median":
-        base = coordinate_median
-    elif cfg.name == "geomed":
-        base = functools.partial(geometric_median, iters=cfg.geomed_iters)
-    elif cfg.name == "krum":
-        base = functools.partial(krum, f=f, m=1)
-    elif cfg.name == "multikrum":
-        base = lambda x: krum(x, f=f, m=max(1, x.shape[0] - f))  # noqa: E731
-    else:
-        raise ValueError(f"unknown aggregator: {cfg.name!r}")
-
+    base = _base_rule(cfg.name, f, cfg.geomed_iters)
     if cfg.pre_nnm and cfg.name != "mean":
         def agg(x: jnp.ndarray) -> jnp.ndarray:
             return base(nnm(x, f))
         return agg
     return base
+
+
+# --------------------------------------------------------------------------
+# Switch-based aggregator bank (the one-program grid axis)
+# --------------------------------------------------------------------------
+
+
+BankAggregator = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def bank_index(cfg: AggregatorConfig,
+               bank: Optional[Sequence[Tuple[str, bool]]] = None) -> int:
+    """Branch index of ``cfg`` inside ``bank`` (default the full bank).
+
+    ``(mean, pre_nnm=True)`` maps to the plain-mean branch, mirroring
+    :func:`make_aggregator`'s NNM-skips-mean composition rule.
+    """
+    bank = tuple(bank) if bank is not None else DEFAULT_BANK
+    entry = (cfg.name, bool(cfg.pre_nnm) and cfg.name != "mean")
+    try:
+        return bank.index(entry)
+    except ValueError:
+        raise ValueError(
+            f"aggregator {entry} is not a branch of the bank {bank}") from None
+
+
+def make_aggregator_bank(cfg: AggregatorConfig) -> BankAggregator:
+    """Build the rank-preserving aggregator bank ``bank(x, idx) -> [d]``.
+
+    The bank is a ``lax.switch`` over uniformly-shaped branches
+    (``[n, d] -> [d]``), one per ``(rule, pre_nnm)`` combination in
+    ``cfg.bank`` (default :data:`DEFAULT_BANK`), selected by the *traced*
+    integer ``idx``. Because the branch choice is data, an entire
+    attack x aggregator x seed grid shares ONE compiled XLA program —
+    ``idx`` simply joins the vmapped fusion axis next to the linear-attack
+    coefficients (see ``repro.core.sweep``).
+
+    ``cfg.f`` and ``cfg.geomed_iters`` stay static across branches, which is
+    why a fused bank requires every grid cell to share them. Note that under
+    ``vmap`` a switch on per-lane indices lowers to a select over all
+    branches: every lane computes every rule in the bank and keeps one. Keep
+    ``cfg.bank`` restricted to the rules the grid actually uses.
+    """
+    entries = cfg.bank if cfg.bank is not None else DEFAULT_BANK
+    f, iters = cfg.f, cfg.geomed_iters
+
+    def branch(name: str, pre: bool) -> Aggregator:
+        base = _base_rule(name, f, iters)
+        if pre and name != "mean":
+            return lambda x: base(nnm(x, f))
+        return base
+
+    branches = tuple(branch(n, p) for n, p in entries)
+
+    def apply(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        if len(branches) == 1:
+            return branches[0](x)
+        return jax.lax.switch(idx, branches, x)
+
+    return apply

@@ -114,6 +114,26 @@ def theorem1_hparams(L: float, ratio: float,
 # --------------------------------------------------------------------------
 
 
+class ScenarioParams(NamedTuple):
+    """Traced per-cell scenario vector for the fused grid axis.
+
+    Every component is optional (``None`` components contribute no pytree
+    leaves, so a ``ScenarioParams`` batch vmaps cleanly whichever subset is
+    fused); a present component overrides the corresponding static config:
+
+    ``attack_coeffs``: ``[2]`` linear-attack ``(a, b)`` coefficients
+      (requires ``cfg.attack.name == 'linear'``, see ``attacks.linear_attack``).
+    ``agg_idx``: scalar int32 branch index into the aggregator bank
+      (``aggregators.make_aggregator_bank``) replacing the static rule.
+    ``ratio``: scalar keep-ratio replacing ``cfg.sparsifier.ratio``
+      (only for ``compression.TRACED_RATIO_KINDS``).
+    """
+
+    attack_coeffs: Optional[jnp.ndarray] = None
+    agg_idx: Optional[jnp.ndarray] = None
+    ratio: Optional[jnp.ndarray] = None
+
+
 class ServerState(NamedTuple):
     """Server-side algorithm state.
 
@@ -164,7 +184,8 @@ def _byzantine_overwrite(cfg: AlgorithmConfig, wire: jnp.ndarray,
 
 def server_round(cfg: AlgorithmConfig, state: ServerState,
                  grads: jnp.ndarray, key: jax.Array,
-                 attack_params: Optional[jnp.ndarray] = None
+                 attack_params: Optional[jnp.ndarray] = None,
+                 scenario: Optional[ScenarioParams] = None
                  ) -> Tuple[jnp.ndarray, ServerState, dict]:
     """Execute one server round.
 
@@ -177,6 +198,10 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
       attack_params: traced parameters for ``attack.name='linear'`` (a ``[2]``
         coefficient vector); lets a grid of mean/std-family attacks share one
         compiled program (see ``repro.core.sweep``).
+      scenario: traced :class:`ScenarioParams` cell vector — the fused grid
+        axis. Its ``attack_coeffs`` supersede ``attack_params``; ``agg_idx``
+        switches the aggregator bank; ``ratio`` overrides the sparsifier
+        keep-ratio. Static config fills in whatever is ``None``.
 
     Returns:
       (direction R [D] to descend, next state, aux dict).
@@ -188,16 +213,26 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
                                 keepdims=True)
         scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norms, 1e-12))
         grads = (grads * scale.astype(grads.dtype))
+    ratio = None
+    if scenario is not None:
+        if scenario.attack_coeffs is not None:
+            attack_params = scenario.attack_coeffs
+        ratio = scenario.ratio
     mask_key, atk_key = jax.random.split(key)
-    agg = G.make_aggregator(cfg.aggregator)
+    if scenario is not None and scenario.agg_idx is not None:
+        bank = G.make_aggregator_bank(cfg.aggregator)
+        agg = lambda x: bank(x, scenario.agg_idx)  # noqa: E731
+    else:
+        agg = G.make_aggregator(cfg.aggregator)
     sp = cfg.sparsifier
     mdt = jnp.dtype(cfg.momentum_dtype)
     aux = {"payload_floats_per_worker": C.payload_floats(d, sp)}
 
     if cfg.name == "rosdhb":
         # Steps 1-4: masks (global or local) + unbiased reconstruction.
-        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype)
-        g_tilde = C.compress(grads, masks, sp)
+        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype,
+                             ratio=ratio)
+        g_tilde = C.compress(grads, masks, sp, ratio=ratio)
         g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key, attack_params)
         # Step 5: per-worker server momentum (math dtype configurable —
         # bf16 halves the per-round transient at LLM scale, EXPERIMENTS
@@ -213,8 +248,9 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
 
     if cfg.name == "dgd":
         # Compressed DGD, non-robust: plain mean of unbiased estimates.
-        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype)
-        g_tilde = C.compress(grads, masks, sp)
+        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype,
+                             ratio=ratio)
+        g_tilde = C.compress(grads, masks, sp, ratio=ratio)
         g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key, attack_params)
         r = jnp.mean(g_tilde, axis=0)
         return r, state._replace(step=state.step + 1), aux
@@ -243,9 +279,12 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
         h_prev = state.mirror.astype(jnp.float32)
         m = jnp.where(first, grads,
                       grads + (1.0 - a) * (m_prev - state.prev_grad))
-        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype)
-        b = 1.0 / (2.0 * sp.alpha)
-        diff = C.compress((m - m_prev) + b * (m_prev - h_prev), masks, sp)
+        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype,
+                             ratio=ratio)
+        alpha = (1.0 / ratio) if ratio is not None else sp.alpha
+        b = 1.0 / (2.0 * alpha)
+        diff = C.compress((m - m_prev) + b * (m_prev - h_prev), masks, sp,
+                          ratio=ratio)
         h = h_prev + diff
         h = _byzantine_overwrite(cfg, h, atk_key, attack_params)
         r = agg(h)

@@ -109,12 +109,32 @@ def _block_hash_mask(key: jax.Array, d: int, ratio: float, block: int,
     return (u < ratio).astype(dtype)
 
 
+#: Sparsifier kinds whose keep-ratio may be a *traced* scalar — the mask
+#: sampling and the unbiased rescale are pure elementwise functions of the
+#: ratio, so a grid of ratios can join the vmapped fusion axis of
+#: ``repro.core.sweep`` (the static-shape kinds randk/block cannot: their
+#: ``k`` fixes index-array shapes at trace time).
+TRACED_RATIO_KINDS = ("bernoulli", "block_hash")
+
+
 def make_mask(key: jax.Array, d: int, cfg: SparsifierConfig,
-              dtype=jnp.float32) -> jnp.ndarray:
+              dtype=jnp.float32,
+              ratio: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Sample one sparsification mask of shape ``[d]``.
 
     For ``kind='natural'`` the "mask" is the uniform rounding randomness
-    u ~ U[0,1) consumed by :func:`compress`."""
+    u ~ U[0,1) consumed by :func:`compress`.
+
+    ``ratio``, when given, is a traced scalar overriding ``cfg.ratio``
+    (only for :data:`TRACED_RATIO_KINDS`)."""
+    if ratio is not None:
+        if cfg.kind == "bernoulli":
+            return _bernoulli_mask(key, d, ratio, dtype)
+        if cfg.kind == "block_hash":
+            return _block_hash_mask(key, d, ratio, cfg.block_size, dtype)
+        raise ValueError(
+            f"sparsifier kind {cfg.kind!r} does not support a traced ratio "
+            f"(supported: {TRACED_RATIO_KINDS})")
     if cfg.kind == "natural":
         return jax.random.uniform(key, (d,), dtype)
     if cfg.kind == "none" or cfg.ratio >= 1.0:
@@ -131,26 +151,32 @@ def make_mask(key: jax.Array, d: int, cfg: SparsifierConfig,
 
 
 def make_masks(key: jax.Array, n_workers: int, d: int, cfg: SparsifierConfig,
-               dtype=jnp.float32) -> jnp.ndarray:
+               dtype=jnp.float32,
+               ratio: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Sample masks ``[n_workers, d]``.
 
     With ``cfg.local=False`` (global sparsification, Algorithm 1) all rows are
     the *same* mask; with ``cfg.local=True`` (RoSDHB-Local, §3.3) each worker
-    gets an independent mask.
+    gets an independent mask. ``ratio`` optionally overrides ``cfg.ratio``
+    with a traced scalar (see :func:`make_mask`).
     """
     if not cfg.local:
-        m = make_mask(key, d, cfg, dtype)
+        m = make_mask(key, d, cfg, dtype, ratio=ratio)
         return jnp.broadcast_to(m, (n_workers, d))
     keys = jax.random.split(key, n_workers)
-    return jax.vmap(lambda k: make_mask(k, d, cfg, dtype))(keys)
+    return jax.vmap(lambda k: make_mask(k, d, cfg, dtype, ratio=ratio))(keys)
 
 
-def compress(g: jnp.ndarray, mask: jnp.ndarray,
-             cfg: SparsifierConfig) -> jnp.ndarray:
+def compress(g: jnp.ndarray, mask: jnp.ndarray, cfg: SparsifierConfig,
+             ratio: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Server-side unbiased reconstruction ``g̃ = (d/k)(g ⊙ mask)``.
 
     ``g`` may be ``[d]`` or ``[n, d]`` (with ``mask`` broadcastable).
+    ``ratio`` optionally overrides ``cfg.ratio`` with a traced scalar; the
+    unbiased rescale then uses the traced ``alpha = 1/ratio``.
     """
+    if ratio is not None:
+        return (g / ratio) * mask
     if cfg.kind == "natural":
         # stochastic power-of-two rounding: |x| in [2^e, 2^{e+1}) rounds up
         # with prob (|x|/2^e - 1); unbiased, E||C(x)||^2 <= (9/8)||x||^2.

@@ -8,12 +8,15 @@ the server updates the model.
 The engine is a single ``lax.scan`` over rounds (:meth:`Simulator.rollout`):
 the whole trajectory runs inside one jitted XLA program with metrics stacked
 on device, so sweeping the paper's attack x aggregator x algorithm x seed
-grids (``repro.core.sweep``) pays host-side dispatch once per scenario
-instead of once per round. :meth:`Simulator.run` is kept as a thin
-compatibility wrapper that chunks the scan at eval rounds to preserve the
-legacy eval/early-stop protocol, and :meth:`Simulator.run_per_round` retains
-the original one-dispatch-per-round loop as the equivalence/benchmark
-reference.
+grids (``repro.core.sweep``) pays host-side dispatch once per *grid*
+instead of once per round. Eval lives inside the scan too: parameter
+snapshots are written into a carried ``[n_evals, D]`` buffer at eval rounds
+(:meth:`Simulator.rollout_with_snapshots`) and all eval rounds are evaluated
+afterwards in ONE vmapped call, so :meth:`Simulator.run` is a single compiled
+program regardless of the eval schedule (the old chunked wrapper paid one
+compile per distinct chunk length — ``{1, eval_every, remainder}``).
+:meth:`Simulator.run_per_round` retains the original one-dispatch-per-round
+loop as the equivalence/benchmark reference.
 
 This is the engine behind the MNIST-like reproduction (benchmarks/bench_fig1)
 and the convergence-comparison benchmarks; the LLM-scale path lives in
@@ -82,9 +85,15 @@ class Simulator:
     def __post_init__(self):
         self.spec = T.make_flat_spec(self.params0)
         self.d = self.spec.size
+        # Number of times the round body has been traced: jit compiles trace
+        # exactly once, so this counts distinct XLA programs built through
+        # this Simulator (the one-program-per-grid acceptance check in
+        # benchmarks/bench_sweep.py reads it).
+        self.round_traces = 0
 
-        def _round(state: SimState, worker_batches,
-                   attack_params=None) -> Tuple[SimState, dict]:
+        def _round(state: SimState, worker_batches, attack_params=None,
+                   scenario=None) -> Tuple[SimState, dict]:
+            self.round_traces += 1  # trace-time (python) side effect only
             key, mask_key = jax.random.split(state.key)
             params = T.tree_unravel(state.params_flat, self.spec)
 
@@ -95,7 +104,8 @@ class Simulator:
             losses, grads = jax.vmap(worker_grad)(worker_batches)
             r, server, aux = alg.server_round(self.cfg, state.server, grads,
                                               mask_key,
-                                              attack_params=attack_params)
+                                              attack_params=attack_params,
+                                              scenario=scenario)
             new_flat = alg.apply_direction(state.params_flat, r,
                                            self.cfg.gamma)
             metrics = {
@@ -106,16 +116,47 @@ class Simulator:
             }
             return SimState(new_flat, server, key), metrics
 
-        def _scan(state: SimState, batches,
-                  attack_params=None) -> Tuple[SimState, dict]:
+        def _scan(state: SimState, batches, attack_params=None,
+                  scenario=None) -> Tuple[SimState, dict]:
             return jax.lax.scan(
-                lambda s, b: _round(s, b, attack_params), state, batches)
+                lambda s, b: _round(s, b, attack_params, scenario),
+                state, batches)
+
+        def _snap_scan(state: SimState, batches, eval_mask, snaps0,
+                       attack_params=None, scenario=None
+                       ) -> Tuple[SimState, dict, jnp.ndarray]:
+            """Scan with an in-scan eval-snapshot carry.
+
+            ``eval_mask`` is a ``[steps]`` bool vector; at rounds where it is
+            set, the post-update ``params_flat`` is written into the next
+            free row of the carried ``snaps0`` buffer (``[n_evals, D]``).
+            All eval rounds are then evaluated post-hoc in one vmapped call
+            — no scan breaks, no chunk-boundary recompiles.
+            """
+            def step(carry, inp):
+                st, buf, slot = carry
+                batch, is_eval = inp
+                new_st, m = _round(st, batch, attack_params, scenario)
+                buf = jax.lax.cond(
+                    is_eval,
+                    lambda b: jax.lax.dynamic_update_slice_in_dim(
+                        b, new_st.params_flat[None].astype(b.dtype), slot,
+                        axis=0),
+                    lambda b: b, buf)
+                return (new_st, buf, slot + is_eval.astype(jnp.int32)), m
+
+            (st, buf, _), ms = jax.lax.scan(
+                step, (state, snaps0, jnp.zeros((), jnp.int32)),
+                (batches, eval_mask))
+            return st, ms, buf
 
         self._round = jax.jit(_round)
         # un-jitted scan kept separate so repro.core.sweep can vmap it over
-        # the seed (and linear-attack coefficient) axes before compiling
+        # the grid fusion axes (seed / attack-coefficient / aggregator
+        # index / ratio) before compiling
         self._scan = _scan
         self._rollout = jax.jit(_scan)
+        self._snap_rollout = jax.jit(_snap_scan)
         # jitted sweep entry points, cached per vmap structure so repeated
         # grid calls don't re-trace
         self._sweep_cache: dict = {}
@@ -156,6 +197,37 @@ class Simulator:
         """
         return self._rollout(state, ensure_stacked(batches, steps))
 
+    def rollout_with_snapshots(self, state: SimState, batches: Any,
+                               eval_rounds: Any,
+                               steps: Optional[int] = None
+                               ) -> Tuple[SimState, dict, jnp.ndarray]:
+        """One-scan trajectory that also returns parameter snapshots.
+
+        ``eval_rounds`` is a sequence of round indices; the returned
+        ``snaps`` array is ``[len(eval_rounds), D]`` holding ``params_flat``
+        *after* each listed round (the legacy eval protocol). The snapshot
+        write is a masked in-scan ``dynamic_update_slice`` — the scan never
+        breaks, so the whole trajectory (eval included) is ONE compiled
+        program.
+        """
+        batches = ensure_stacked(batches, steps)
+        n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        eval_rounds = np.asarray(eval_rounds, np.int64)
+        if (eval_rounds.ndim != 1 or np.any(np.diff(eval_rounds) <= 0)
+                or (eval_rounds.size
+                    and (eval_rounds[0] < 0 or eval_rounds[-1] >= n_steps))):
+            # rows are written chronologically by a slot counter, so an
+            # unsorted/duplicated schedule (or a wrapping negative index)
+            # would silently misalign snaps[i]
+            raise ValueError(
+                "eval_rounds must be strictly increasing round indices in "
+                f"[0, {n_steps}), got {eval_rounds}")
+        mask = np.zeros((n_steps,), bool)
+        mask[eval_rounds] = True
+        snaps0 = jnp.zeros((len(eval_rounds), self.spec.padded_size),
+                           jnp.float32)
+        return self._snap_rollout(state, batches, jnp.asarray(mask), snaps0)
+
     def _record(self, history: Dict[str, list], rec: Dict[str, float],
                 t: int) -> None:
         history["step"].append(t)
@@ -178,18 +250,25 @@ class Simulator:
             steps: int, eval_every: int = 0, eval_batch: Any = None,
             stop_fn: Optional[Callable[[Dict[str, float]], bool]] = None,
             ) -> Tuple[SimState, Dict[str, list]]:
-        """Run ``steps`` rounds (thin compatibility wrapper over the scan
-        engine).
+        """Run ``steps`` rounds as ONE compiled scan, eval included.
 
         ``batch_fn(t)`` must return stacked per-worker batches with leading
-        dim ``n_workers``. ``stop_fn(metrics)`` can end training early (used
-        by the communication-cost-to-threshold benchmark).
+        dim ``n_workers`` (a pre-stacked pytree is accepted too).
 
-        The trajectory is executed as ``lax.scan`` chunks whose boundaries
-        are exactly the legacy eval rounds (``t % eval_every == 0`` or the
-        final step), so the eval schedule, history contents, and early-stop
-        behaviour match :meth:`run_per_round` while paying host dispatch per
-        eval chunk instead of per round.
+        Eval rounds (``t % eval_every == 0`` or the final step) no longer
+        break the scan: parameter snapshots are carried through the scan
+        (:meth:`rollout_with_snapshots`) and every eval round is evaluated
+        in a single vmapped ``eval_fn`` call afterwards, so the eval
+        schedule and history contents match :meth:`run_per_round` while the
+        whole trajectory pays exactly one compile (the old chunked wrapper
+        paid one per distinct chunk length: ``{1, eval_every, remainder}``).
+
+        ``stop_fn(metrics)`` is honoured post-hoc: the history is truncated
+        at the first eval record where it fires, matching the legacy early
+        stop, but the scan itself always runs every round and the returned
+        state is the final-round state. Threshold protocols should read the
+        crossing from the history (or ``sweep.bytes_to_threshold``), not
+        from the returned state.
         """
         history: Dict[str, list] = {"step": [], "loss": [], "comm_bytes": []}
         per_round = self.payload_bytes_per_round()
@@ -200,13 +279,29 @@ class Simulator:
             return state, history
         eval_rounds = [t for t in range(steps)
                        if t % eval_every == 0 or t == steps - 1]
-        prev = -1
-        for t in eval_rounds:
-            chunk = stack_batches(batch_fn, t - prev, start=prev + 1)
-            state, ms = self._rollout(state, chunk)
-            prev = t
-            m_last = {k: v[-1] for k, v in ms.items()}
-            rec = self._eval_record(state, m_last, t, per_round, eval_batch)
+        batches = ensure_stacked(batch_fn, steps)
+        emets: Dict[str, np.ndarray] = {}
+        if self.eval_fn is not None and eval_batch is not None:
+            state, ms, snaps = self.rollout_with_snapshots(state, batches,
+                                                           eval_rounds)
+            if "snap_eval" not in self._sweep_cache:
+                def eval_snap(flat, batch):
+                    return self.eval_fn(T.tree_unravel(flat, self.spec),
+                                        batch)
+
+                self._sweep_cache["snap_eval"] = jax.jit(
+                    jax.vmap(eval_snap, in_axes=(0, None)))
+            emets = {k: np.asarray(v) for k, v in
+                     self._sweep_cache["snap_eval"](snaps, eval_batch).items()}
+        else:
+            # nothing to evaluate: skip the snapshot carry entirely (the
+            # per-round metrics already hold everything the history needs)
+            state, ms = self._rollout(state, batches)
+        ms = {k: np.asarray(v) for k, v in ms.items()}
+        for i, t in enumerate(eval_rounds):
+            rec = {k: float(v[t]) for k, v in ms.items()}
+            rec["comm_bytes"] = per_round * (t + 1)
+            rec.update({k: float(v[i]) for k, v in emets.items()})
             self._record(history, rec, t)
             if stop_fn is not None and stop_fn(rec):
                 break

@@ -1,20 +1,36 @@
-"""Batched experiment grids: vmap the scan rollout over seeds, enumerate
-scenarios.
+"""One-program experiment grids: plan/execute over a device-sharded fusion
+axis.
 
 The paper's empirical claims (Fig. 1, Table 1) are sweeps over attack x
 aggregator x algorithm x seed grids. Dispatching ``Simulator.run`` once per
-cell multiplies host-side overhead by the grid size; here every scenario is
-ONE compiled XLA program — ``lax.scan`` over rounds (``Simulator.rollout``)
-``vmap``-ed over the seed axis — and the enumerated scenarios land in a flat
-results table. Early stopping is handled post-hoc from the stacked on-device
-metrics (:func:`bytes_to_threshold`), matching the paper's
-comm-bytes-to-tau protocol without breaking the scan.
+cell multiplies host-side overhead (and XLA compiles) by the grid size; here
+the grid is collapsed into as few compiled programs as the scenario set
+allows, in two stages:
+
+* **plan** (:func:`plan_grid`): partition the scenarios into maximal fusible
+  banks — per algorithm, every cell whose attack is in the mean/std linear
+  family (``attacks.linear_coeffs``) joins one bank; its attack coefficients,
+  aggregator-bank branch index (``aggregators.make_aggregator_bank``) and,
+  for ratio-traceable sparsifiers (``compression.TRACED_RATIO_KINDS``), its
+  keep-ratio become *traced data* (``algorithms.ScenarioParams``). What
+  cannot fuse (mimic/gauss/none attacks, singleton groups) stays a classic
+  per-scenario vmapped scan.
+* **execute** (:func:`execute_plan` / :func:`fused_grid_rollout`): each bank
+  runs as ONE compiled XLA program — ``lax.scan`` over rounds, one flat
+  ``vmap`` axis of size ``n_cells * n_seeds`` — laid out over mesh devices
+  with ``jax.sharding`` (``NamedSharding`` over the batch dim via
+  ``repro.sharding.sweep_mesh``). The flat axis is padded to a multiple of
+  the device count and pad rows are masked out of the results table.
+
+Early stopping is handled post-hoc from the stacked on-device metrics
+(:func:`bytes_to_threshold`), matching the paper's comm-bytes-to-tau
+protocol without breaking the scan.
 
 CLI (the grid runner described in benchmarks/README.md):
 
     PYTHONPATH=src python -m repro.core.sweep \
-        --algos rosdhb,dasha --attacks alie,foe,signflip --aggs cwtm \
-        --seeds 4 --steps 300 --f 3 --ratio 0.1
+        --algos rosdhb,dasha --attacks alie,foe,signflip --aggs cwtm,median \
+        --seeds 4 --steps 300 --f 3 --ratio 0.1 [--no-fuse] [--no-shard]
 """
 
 from __future__ import annotations
@@ -27,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sharding as S
 from repro.core import aggregators as G
 from repro.core import algorithms as alg
 from repro.core import attacks as A
@@ -101,6 +118,67 @@ def rollout_over_seeds(sim: Simulator, seeds: Sequence[int], batches: Any,
     return sim._sweep_cache["seed_vmap"](init_states(sim, seeds), batches)
 
 
+def fused_grid_rollout(sim: Simulator, params: alg.ScenarioParams,
+                       seeds: Sequence[int], batches: Any,
+                       steps: Optional[int] = None, *,
+                       shard: bool = True,
+                       devices: Optional[Sequence[Any]] = None
+                       ) -> Tuple[SimState, dict]:
+    """Run a whole cells x seeds grid as ONE compiled, device-sharded program.
+
+    ``params`` is a traced :class:`repro.core.algorithms.ScenarioParams`
+    whose present components carry a leading ``[n_cells]`` axis (attack
+    coefficients / aggregator-bank indices / keep-ratios). The grid is
+    flattened to one ``[n_cells * n_seeds]`` vmap axis (a nested
+    vmap-of-vmap compiles ~2.5x slower for the same program) and, when
+    ``shard`` is set and >1 devices are visible, laid out over a 1-D
+    ``grid`` mesh with ``NamedSharding`` — padded to a device-count multiple
+    with repeated tail rows that are sliced off again before returning.
+
+    Returns ``(final_states, metrics)`` with leading ``[n_cells, n_seeds]``
+    axes on every leaf.
+    """
+    batches = ensure_stacked(batches, steps)
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves:
+        raise ValueError("ScenarioParams has no traced components to fuse")
+    if any(getattr(l, "ndim", 0) == 0 for l in leaves):
+        raise ValueError("every ScenarioParams component needs a leading "
+                         "[n_cells] axis (got a scalar)")
+    lead = [l.shape[0] for l in leaves]
+    if len(set(lead)) != 1:
+        raise ValueError(f"inconsistent ScenarioParams cell axes: {lead}")
+    n_c, n_s = lead[0], len(seeds)
+    states = init_states(sim, seeds)
+    # flat fusion axis, cell-major: row c * n_s + s = (cell c, seed s)
+    states_flat = jax.tree_util.tree_map(
+        lambda l: jnp.tile(l, (n_c,) + (1,) * (l.ndim - 1)), states)
+    params_flat = jax.tree_util.tree_map(
+        lambda l: jnp.repeat(l, n_s, axis=0), params)
+    n_rows = n_c * n_s
+    mesh = S.sweep_mesh(devices) if shard else None
+    if mesh is not None and mesh.size > 1:
+        pad = (-n_rows) % mesh.size
+        if pad:
+            pad_rows = lambda l: jnp.concatenate(  # noqa: E731
+                [l, jnp.repeat(l[-1:], pad, axis=0)], axis=0)
+            states_flat = jax.tree_util.tree_map(pad_rows, states_flat)
+            params_flat = jax.tree_util.tree_map(pad_rows, params_flat)
+        states_flat = jax.device_put(states_flat, S.grid_sharding(mesh))
+        params_flat = jax.device_put(params_flat, S.grid_sharding(mesh))
+        batches = jax.device_put(batches, S.replicated_sharding(mesh))
+    if "grid_vmap" not in sim._sweep_cache:
+        sim._sweep_cache["grid_vmap"] = jax.jit(
+            jax.vmap(sim._scan, in_axes=(0, None, None, 0)))
+    out_states, out_metrics = sim._sweep_cache["grid_vmap"](
+        states_flat, batches, None, params_flat)
+    # mask pad rows out, restore the [n_cells, n_seeds] grid axes
+    unflatten = lambda l: l[:n_rows].reshape(  # noqa: E731
+        (n_c, n_s) + l.shape[1:])
+    return (jax.tree_util.tree_map(unflatten, out_states),
+            jax.tree_util.tree_map(unflatten, out_metrics))
+
+
 def fused_attack_rollout(sim: Simulator,
                          attack_cfgs: Sequence[A.AttackConfig],
                          seeds: Sequence[int], batches: Any,
@@ -112,7 +190,9 @@ def fused_attack_rollout(sim: Simulator,
     (:func:`repro.core.attacks.linear_coeffs` — alie/signflip/ipm/foe/zero):
     their coefficients become a traced ``[n_attacks, 2]`` input vmapped over,
     so the grid pays a single compile instead of one per attack. ``sim`` must
-    be built with ``attack=AttackConfig(name="linear")``.
+    be built with ``attack=AttackConfig(name="linear")``. This is the
+    attack-only corner of :func:`fused_grid_rollout` (unsharded, for
+    backward compatibility).
 
     Returns ``(final_states, metrics)`` with leading ``[n_attacks, n_seeds]``
     axes on every leaf.
@@ -126,22 +206,139 @@ def fused_attack_rollout(sim: Simulator,
             raise ValueError(f"attack {a.name!r} is outside the linear "
                              "family; run it as its own scenario")
         coeffs.append(c)
-    batches = ensure_stacked(batches, steps)
-    if "attack_seed_vmap" not in sim._sweep_cache:
-        # ONE flat vmap axis of size n_attacks * n_seeds (a nested
-        # vmap-of-vmap compiles ~2.5x slower for the same program)
-        sim._sweep_cache["attack_seed_vmap"] = jax.jit(
-            jax.vmap(sim._scan, in_axes=(0, None, 0)))
-    n_a, n_s = len(coeffs), len(seeds)
-    states = init_states(sim, seeds)
-    states_flat = jax.tree_util.tree_map(
-        lambda l: jnp.tile(l, (n_a,) + (1,) * (l.ndim - 1)), states)
-    coeffs_flat = jnp.repeat(jnp.asarray(coeffs, jnp.float32), n_s, axis=0)
-    out_states, out_metrics = sim._sweep_cache["attack_seed_vmap"](
-        states_flat, batches, coeffs_flat)
-    unflatten = lambda l: l.reshape((n_a, n_s) + l.shape[1:])  # noqa: E731
-    return (jax.tree_util.tree_map(unflatten, out_states),
-            jax.tree_util.tree_map(unflatten, out_metrics))
+    params = alg.ScenarioParams(
+        attack_coeffs=jnp.asarray(coeffs, jnp.float32))
+    return fused_grid_rollout(sim, params, seeds, batches, steps,
+                              shard=False)
+
+
+# --------------------------------------------------------------------------
+# Plan: partition a scenario grid into maximal fusible banks
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedBank:
+    """One maximal fusible group: ``n_cells`` scenarios sharing ONE compiled
+    program, their differences carried as traced :class:`ScenarioParams`.
+
+    ``cfg`` is the executable bank configuration: ``attack='linear'`` and
+    ``aggregator.name='bank'`` with the branch set restricted to the rules
+    the group actually uses (under vmap a switch computes every branch per
+    lane, so smaller banks are cheaper).
+    """
+
+    cfg: alg.AlgorithmConfig
+    scenarios: Tuple[Scenario, ...]
+    coeffs: Tuple[Tuple[float, float], ...]
+    agg_idx: Tuple[int, ...]
+    ratios: Optional[Tuple[float, ...]]  # None -> ratio stays static config
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.scenarios)
+
+    def scenario_params(self) -> alg.ScenarioParams:
+        """Stack the per-cell traced parameters on a leading cell axis."""
+        return alg.ScenarioParams(
+            attack_coeffs=jnp.asarray(self.coeffs, jnp.float32),
+            agg_idx=jnp.asarray(self.agg_idx, jnp.int32),
+            ratio=(jnp.asarray(self.ratios, jnp.float32)
+                   if self.ratios is not None else None))
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """Execution plan for a scenario grid: fusible banks + leftovers.
+
+    ``banks`` each compile once for all their cells x seeds;
+    ``singles`` (non-linear attacks, singleton groups) each pay one
+    classic vmapped-scan compile over seeds.
+    """
+
+    banks: Tuple[FusedBank, ...]
+    singles: Tuple[Scenario, ...]
+
+    @property
+    def n_cells(self) -> int:
+        return sum(b.n_cells for b in self.banks) + len(self.singles)
+
+    @property
+    def n_programs(self) -> int:
+        return len(self.banks) + len(self.singles)
+
+    def describe(self) -> str:
+        parts = [f"{self.n_cells} scenarios -> {self.n_programs} programs"]
+        for b in self.banks:
+            parts.append(
+                f"  bank[{b.cfg.name}] x{b.n_cells}: "
+                + ", ".join(sc.label for sc in b.scenarios))
+        for sc in self.singles:
+            parts.append(f"  single: {sc.label}")
+        return "\n".join(parts)
+
+
+def plan_grid(scenarios: Sequence[Scenario], *,
+              fuse: bool = True) -> GridPlan:
+    """Partition ``scenarios`` into maximal fusible banks.
+
+    Cells fuse when they share an algorithm and every static field of its
+    config, and differ only along traced axes: a mean/std-family attack
+    (coefficients), the aggregator rule +/- NNM (bank branch index), and —
+    for :data:`repro.core.compression.TRACED_RATIO_KINDS` sparsifiers — the
+    keep-ratio. The aggregator's ``f``/``geomed_iters`` and everything else
+    must match (they are baked into the compiled branches). Groups of one
+    and non-linear attacks fall back to per-scenario programs.
+    """
+    singles: List[Scenario] = []
+    if not fuse:
+        return GridPlan(banks=(), singles=tuple(scenarios))
+    groups: Dict[alg.AlgorithmConfig,
+                 List[Tuple[Scenario, Tuple[float, float]]]] = {}
+    for sc in scenarios:
+        cfg = sc.cfg
+        coeffs = A.linear_coeffs(cfg.attack, cfg.n_workers, cfg.f)
+        if coeffs is None:
+            singles.append(sc)
+            continue
+        sp = cfg.sparsifier
+        key = dataclasses.replace(
+            cfg,
+            attack=A.AttackConfig(name="linear"),
+            aggregator=dataclasses.replace(cfg.aggregator, name="bank",
+                                           pre_nnm=False, bank=None),
+            sparsifier=(dataclasses.replace(sp, ratio=1.0)
+                        if sp.kind in C.TRACED_RATIO_KINDS else sp))
+        groups.setdefault(key, []).append((sc, coeffs))
+
+    banks: List[FusedBank] = []
+    for key, group in groups.items():
+        if len(group) == 1:
+            singles.append(group[0][0])
+            continue
+        entries: List[Tuple[str, bool]] = []
+        for sc, _ in group:
+            a = sc.cfg.aggregator
+            e = (a.name, bool(a.pre_nnm) and a.name != "mean")
+            if e not in entries:
+                entries.append(e)
+        bank_agg = dataclasses.replace(
+            group[0][0].cfg.aggregator, name="bank", pre_nnm=False,
+            bank=tuple(entries))
+        ratios = tuple(sc.cfg.sparsifier.ratio for sc, _ in group)
+        trace_ratio = (group[0][0].cfg.sparsifier.kind
+                       in C.TRACED_RATIO_KINDS and len(set(ratios)) > 1)
+        exec_cfg = dataclasses.replace(
+            group[0][0].cfg,
+            attack=A.AttackConfig(name="linear"), aggregator=bank_agg)
+        banks.append(FusedBank(
+            cfg=exec_cfg,
+            scenarios=tuple(sc for sc, _ in group),
+            coeffs=tuple(c for _, c in group),
+            agg_idx=tuple(G.bank_index(sc.cfg.aggregator, tuple(entries))
+                          for sc, _ in group),
+            ratios=ratios if trace_ratio else None))
+    return GridPlan(banks=tuple(banks), singles=tuple(singles))
 
 
 def eval_over_seeds(sim: Simulator, states: SimState,
@@ -162,24 +359,33 @@ def bytes_to_threshold(values: np.ndarray, per_round_bytes: int,
     """Post-hoc early stopping: uplink bytes until ``values`` first crosses
     ``threshold`` (``inf`` where it never does).
 
-    ``values`` is a per-round metric trajectory ``[steps]`` or a stacked
-    ``[n_seeds, steps]``; rounds are 1-indexed for byte accounting, matching
-    the legacy ``stop_fn`` protocol.
+    ``values`` is a per-round metric trajectory whose LAST axis is the round
+    axis; any number of leading batch axes is preserved — ``[steps]``,
+    ``[n_seeds, steps]``, the fused ``[n_attacks, n_seeds, steps]`` grid
+    output, etc. Rounds are 1-indexed for byte accounting, matching the
+    legacy ``stop_fn`` protocol.
     """
     if mode not in ("<=", ">="):
         raise ValueError(f"mode must be '<=' or '>=', got {mode!r}")
-    v = np.atleast_2d(np.asarray(values))
-    hit = (v <= threshold) if mode == "<=" else (v >= threshold)
+    v = np.asarray(values)
+    if v.ndim == 0:
+        raise ValueError("values must have a trailing round axis")
+    flat = v.reshape((-1, v.shape[-1]))
+    hit = (flat <= threshold) if mode == "<=" else (flat >= threshold)
     any_hit = hit.any(axis=1)
     first = np.where(any_hit, hit.argmax(axis=1), 0)
     out = np.where(any_hit, (first + 1.0) * per_round_bytes, np.inf)
-    return out[0] if np.ndim(values) == 1 else out
+    return out[0] if v.ndim == 1 else out.reshape(v.shape[:-1])
 
 
 def _result_rows(sc: Scenario, sim: Simulator, seeds: Sequence[int],
                  loss: np.ndarray, emet: Dict[str, Any],
                  n_steps: int) -> List[Dict[str, Any]]:
-    total_bytes = sim.payload_bytes_per_round() * n_steps
+    # byte accounting from the CELL's own config — inside a traced-ratio
+    # bank the executing sim's static sparsifier is not this cell's
+    per_round = C.payload_bytes(sim.d, sc.cfg.sparsifier, bytes_per_value=4,
+                                with_mask_indices=True) * sc.cfg.n_workers
+    total_bytes = per_round * n_steps
     rows = []
     for i, seed in enumerate(seeds):
         row = {
@@ -199,62 +405,79 @@ def _result_rows(sc: Scenario, sim: Simulator, seeds: Sequence[int],
     return rows
 
 
+def execute_plan(plan: GridPlan, *,
+                 loss_fn: Callable[[Any, Any], jnp.ndarray],
+                 params0: Any, batches: Any, seeds: Sequence[int],
+                 steps: Optional[int] = None,
+                 eval_fn: Optional[Callable[[Any, Any], Dict]] = None,
+                 eval_batch: Any = None,
+                 shard: bool = True,
+                 devices: Optional[Sequence[Any]] = None
+                 ) -> Dict[int, List[Dict[str, Any]]]:
+    """Execute a :class:`GridPlan`; return rows keyed by ``id(scenario)``.
+
+    Each bank is one compiled program over its flat cells x seeds axis,
+    sharded across ``devices`` when ``shard`` is set
+    (:func:`fused_grid_rollout`); singles run as per-scenario vmapped scans.
+    """
+    batches = ensure_stacked(batches, steps)
+    n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    rows_by_scenario: Dict[int, List[Dict[str, Any]]] = {}
+    for bank in plan.banks:
+        sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg,
+                        eval_fn=eval_fn)
+        states, metrics = fused_grid_rollout(
+            sim, bank.scenario_params(), seeds, batches,
+            shard=shard, devices=devices)
+        loss = np.asarray(metrics["loss"])  # [n_cells, n_seeds, steps]
+        for c, sc in enumerate(bank.scenarios):
+            st_c = jax.tree_util.tree_map(lambda l: l[c], states)
+            emet = (eval_over_seeds(sim, st_c, eval_batch)
+                    if eval_fn is not None and eval_batch is not None
+                    else {})
+            rows_by_scenario[id(sc)] = _result_rows(
+                sc, sim, seeds, loss[c], emet, n_steps)
+    for sc in plan.singles:
+        sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg,
+                        eval_fn=eval_fn)
+        states, metrics = rollout_over_seeds(sim, seeds, batches)
+        emet = (eval_over_seeds(sim, states, eval_batch)
+                if eval_fn is not None and eval_batch is not None
+                else {})
+        rows_by_scenario[id(sc)] = _result_rows(
+            sc, sim, seeds, np.asarray(metrics["loss"]), emet, n_steps)
+    return rows_by_scenario
+
+
 def run_scenarios(scenarios: Sequence[Scenario], *,
                   loss_fn: Callable[[Any, Any], jnp.ndarray],
                   params0: Any, batches: Any, seeds: Sequence[int],
                   steps: Optional[int] = None,
                   eval_fn: Optional[Callable[[Any, Any], Dict]] = None,
                   eval_batch: Any = None,
-                  fuse_attacks: bool = True) -> List[Dict[str, Any]]:
+                  fuse_attacks: bool = True,
+                  shard: bool = True,
+                  devices: Optional[Sequence[Any]] = None
+                  ) -> List[Dict[str, Any]]:
     """Run every scenario x seed cell; return the flat results table.
 
-    Scenarios that differ only in a mean/std-family attack are fused into a
-    single compiled program (:func:`fused_attack_rollout`) — the attack axis
-    becomes vmapped data. Everything else pays one vmapped-scan compile per
-    scenario. Rows carry the scenario label/config fields, the seed,
-    final/min loss, total honest uplink bytes, and (when ``eval_fn`` is
-    given) final eval metrics.
+    Plan/execute: the grid is partitioned into maximal fusible banks
+    (:func:`plan_grid` — attack coefficients, aggregator-bank index, and
+    traceable keep-ratios become vmapped data) and each bank executes as
+    ONE compiled program laid out over mesh devices
+    (:func:`fused_grid_rollout`). Everything else pays one vmapped-scan
+    compile per scenario. Rows carry the scenario label/config fields, the
+    seed, final/min loss, total honest uplink bytes, and (when ``eval_fn``
+    is given) final eval metrics.
+
+    ``fuse_attacks=False`` disables fusion entirely (the equivalence
+    baseline); ``shard=False`` keeps every program on the default device.
     """
-    batches = ensure_stacked(batches, steps)
-    n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
-
-    # group scenarios that differ only in their (linear-family) attack
-    groups: Dict[alg.AlgorithmConfig, List[Scenario]] = {}
-    for sc in scenarios:
-        base = dataclasses.replace(sc.cfg, attack=A.AttackConfig(name="none"))
-        groups.setdefault(base, []).append(sc)
-
-    rows_by_scenario: Dict[int, List[Dict[str, Any]]] = {}
-    for base, group in groups.items():
-        fusible = (fuse_attacks and len(group) > 1 and all(
-            A.linear_coeffs(sc.cfg.attack, base.n_workers, base.f) is not None
-            for sc in group))
-        if fusible:
-            lin = dataclasses.replace(base,
-                                      attack=A.AttackConfig(name="linear"))
-            sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=lin,
-                            eval_fn=eval_fn)
-            states, metrics = fused_attack_rollout(
-                sim, [sc.cfg.attack for sc in group], seeds, batches)
-            loss = np.asarray(metrics["loss"])  # [n_attacks, n_seeds, steps]
-            for a, sc in enumerate(group):
-                st_a = jax.tree_util.tree_map(lambda l: l[a], states)
-                emet = (eval_over_seeds(sim, st_a, eval_batch)
-                        if eval_fn is not None and eval_batch is not None
-                        else {})
-                rows_by_scenario[id(sc)] = _result_rows(
-                    sc, sim, seeds, loss[a], emet, n_steps)
-        else:
-            for sc in group:
-                sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg,
-                                eval_fn=eval_fn)
-                states, metrics = rollout_over_seeds(sim, seeds, batches)
-                emet = (eval_over_seeds(sim, states, eval_batch)
-                        if eval_fn is not None and eval_batch is not None
-                        else {})
-                rows_by_scenario[id(sc)] = _result_rows(
-                    sc, sim, seeds, np.asarray(metrics["loss"]), emet,
-                    n_steps)
+    plan = plan_grid(scenarios, fuse=fuse_attacks)
+    rows_by_scenario = execute_plan(
+        plan, loss_fn=loss_fn, params0=params0, batches=batches, seeds=seeds,
+        steps=steps, eval_fn=eval_fn, eval_batch=eval_batch, shard=shard,
+        devices=devices)
     # restore caller ordering regardless of fusion grouping
     return [row for sc in scenarios for row in rows_by_scenario[id(sc)]]
 
@@ -296,8 +519,9 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
     import argparse
 
     p = argparse.ArgumentParser(description="attack x aggregator x algorithm "
-                                "x seed grid runner (one vmapped scan per "
-                                "scenario)")
+                                "x seed grid runner (plan/execute: maximal "
+                                "fusible banks, one device-sharded program "
+                                "per bank)")
     p.add_argument("--algos", default="rosdhb")
     p.add_argument("--attacks", default="alie")
     p.add_argument("--aggs", default="cwtm")
@@ -309,12 +533,28 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
     p.add_argument("--gamma", type=float, default=0.05)
     p.add_argument("--testbed", default="quadratic",
                    choices=["quadratic", "mnist"])
+    p.add_argument("--fuse", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="fuse linear-family attack / aggregator / ratio axes "
+                        "into per-algorithm banks (--no-fuse: one program "
+                        "per scenario)")
+    p.add_argument("--shard", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="lay each bank's flat cells x seeds axis over all "
+                        "visible devices (--no-shard: single device); force "
+                        "virtual CPU devices with "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    p.add_argument("--plan", action="store_true",
+                   help="print the grid plan (banks/singles) and exit")
     p.add_argument("--out", default=None, help="optional JSON output path")
     args = p.parse_args(argv)
 
     scenarios = grid_scenarios(
         args.algos.split(","), args.attacks.split(","), args.aggs.split(","),
         n_honest=args.n_honest, f=args.f, ratio=args.ratio, gamma=args.gamma)
+    if args.plan:
+        print(plan_grid(scenarios, fuse=args.fuse).describe())
+        return []
     seeds = list(range(args.seeds))
     n = args.n_honest + args.f
     if args.testbed == "quadratic":
@@ -324,7 +564,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
         loss_fn, params0, batch_fn, eval_fn, eval_batch = _mnist_testbed(n)
     rows = run_scenarios(scenarios, loss_fn=loss_fn, params0=params0,
                          batches=batch_fn, seeds=seeds, steps=args.steps,
-                         eval_fn=eval_fn, eval_batch=eval_batch)
+                         eval_fn=eval_fn, eval_batch=eval_batch,
+                         fuse_attacks=args.fuse, shard=args.shard)
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:

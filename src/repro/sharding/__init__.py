@@ -10,9 +10,13 @@ from repro.sharding.partitioning import (
     dp_axes,
     all_axes,
     n_workers,
+    sweep_mesh,
+    grid_sharding,
+    replicated_sharding,
 )
 
 __all__ = [
     "param_specs", "param_shardings", "batch_spec", "bank_spec", "server_axes", "constrain_activation",
     "cache_spec", "cache_shardings", "dp_axes", "all_axes", "n_workers",
+    "sweep_mesh", "grid_sharding", "replicated_sharding",
 ]

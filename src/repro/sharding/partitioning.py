@@ -204,6 +204,31 @@ def cache_shardings(abstract_caches: Any, mesh: Mesh) -> Any:
         abstract_caches)
 
 
+# --------------------------------------------------------------------------
+# sweep grid axis (repro.core.sweep's flat fusion axis over devices)
+# --------------------------------------------------------------------------
+
+
+def sweep_mesh(devices: Optional[Sequence[Any]] = None) -> Mesh:
+    """1-D mesh over ``devices`` (default all local devices) with the single
+    axis ``grid`` — the layout target for the sweep's flat fusion axis
+    (``[n_cells * n_seeds]``, see ``repro.core.sweep.fused_grid_rollout``)."""
+    devs = list(devices) if devices is not None else jax.devices()
+    return Mesh(np.asarray(devs), ("grid",))
+
+
+def grid_sharding(mesh: Mesh) -> NamedSharding:
+    """Shard dim 0 over the ``grid`` axis, replicate every other dim. The
+    spec is rank-agnostic (trailing dims default to replicated), so one
+    sharding serves every leaf of a batched state pytree."""
+    return NamedSharding(mesh, P("grid"))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully replicated across the mesh (e.g. the shared batch stream)."""
+    return NamedSharding(mesh, P())
+
+
 def constrain_activation(x):
     """Mesh-aware activation constraint: shard the trailing (d_model) dim
     over 'model' when divisible. A no-op outside a mesh context, so model

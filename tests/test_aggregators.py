@@ -93,6 +93,71 @@ def test_mean_equals_numpy():
     assert np.allclose(np.asarray(G.mean(jnp.asarray(x))), x.mean(0))
 
 
+@pytest.mark.parametrize("name", G.BANK_NAMES)
+@pytest.mark.parametrize("pre_nnm", [False, True])
+def test_bank_matches_direct_aggregator(name, pre_nnm):
+    """The switch-bank branch selected by index reproduces the directly
+    built aggregator for every rule, with and without NNM."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(11, 24)).astype(np.float32))
+    cfg = G.AggregatorConfig(name=name, f=2, pre_nnm=pre_nnm)
+    direct = np.asarray(G.make_aggregator(cfg)(x))
+    bank = G.make_aggregator_bank(G.AggregatorConfig(name="bank", f=2))
+    via_bank = np.asarray(bank(x, jnp.int32(G.bank_index(cfg))))
+    np.testing.assert_allclose(via_bank, direct, rtol=1e-6, atol=1e-7)
+
+
+def test_bank_index_mapping():
+    # mean + NNM maps onto the plain-mean branch (NNM skips mean)
+    assert G.bank_index(G.AggregatorConfig(name="mean", pre_nnm=True)) == \
+        G.bank_index(G.AggregatorConfig(name="mean", pre_nnm=False))
+    # restricted banks index within their own branch tuple
+    bank = (("cwtm", True), ("median", False))
+    assert G.bank_index(G.AggregatorConfig(name="median"), bank) == 1
+    with pytest.raises(ValueError, match="not a branch"):
+        G.bank_index(G.AggregatorConfig(name="krum"), bank)
+
+
+def test_restricted_bank_only_builds_listed_branches():
+    bank_cfg = G.AggregatorConfig(name="bank", f=2,
+                                  bank=(("cwtm", False), ("geomed", False)))
+    bank = G.make_aggregator_bank(bank_cfg)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(9, 6)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(bank(x, jnp.int32(0))),
+        np.asarray(G.trimmed_mean(x, f=2)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(bank(x, jnp.int32(1))),
+        np.asarray(G.geometric_median(x, iters=8)), rtol=1e-6)
+
+
+def test_bank_vmapped_index_selects_per_lane():
+    """Under vmap the switch becomes a per-lane select — each lane must
+    still get exactly its own rule's output."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    bank = G.make_aggregator_bank(G.AggregatorConfig(name="bank", f=1))
+    idxs = jnp.asarray([G.bank_index(G.AggregatorConfig(name=n, f=1))
+                        for n in ("mean", "cwtm", "median")], jnp.int32)
+    out = jax.vmap(lambda i: bank(x, i))(idxs)
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               np.asarray(G.mean(x)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]),
+                               np.asarray(G.trimmed_mean(x, f=1)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[2]),
+                               np.asarray(G.coordinate_median(x)), rtol=1e-6)
+
+
+def test_kappa_bound_unknown_name_raises_value_error():
+    """Unknown names raise ValueError (not a bare KeyError), matching
+    make_aggregator's validation."""
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        G.AggregatorConfig(name="trimmed", f=2).kappa_bound(10)
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        G.AggregatorConfig(name="bank", f=0).kappa_bound(10)
+
+
 def test_kappa_bounds_finite_and_ordered():
     for n, f in [(10, 2), (19, 9), (16, 2)]:
         for name in ["cwtm", "median", "geomed", "krum"]:

@@ -1,0 +1,378 @@
+"""One-program grid engine tests (plan/execute tentpole).
+
+The switch-bank + traced-scenario fusion must reproduce the per-scenario
+compiled programs cell for cell; the plan layer must partition grids into
+maximal fusible banks; the sharded executor must match the single-device
+path with pad rows masked out; and the in-scan eval snapshots must
+reproduce the legacy eval protocol.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AlgorithmConfig, AggregatorConfig, AttackConfig, ScenarioParams,
+    Simulator, SparsifierConfig, bytes_to_threshold,
+    grid_scenarios, plan_grid, quadratic_testbed, rollout_over_seeds,
+    run_scenarios, stack_batches,
+)
+from repro.core.sweep import Scenario, fused_grid_rollout
+
+N, F, D, STEPS = 13, 3, 32, 20
+
+
+def _testbed():
+    return quadratic_testbed(N, D)
+
+
+def _cfg(algo="rosdhb", attack="alie", agg="cwtm", ratio=0.2, kind="randk",
+         pre_nnm=True):
+    return AlgorithmConfig(
+        name=algo, n_workers=N, f=F, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(kind=kind, ratio=ratio),
+        aggregator=AggregatorConfig(name=agg, f=F, pre_nnm=pre_nnm),
+        attack=AttackConfig(name=attack, z=1.5 if attack == "alie" else None))
+
+
+# --------------------------------------------------------------------------
+# plan layer
+# --------------------------------------------------------------------------
+
+
+def test_plan_grid_fuses_attack_x_aggregator_per_algorithm():
+    scenarios = grid_scenarios(
+        ["rosdhb", "dasha"], ["alie", "signflip", "foe"], ["cwtm", "median"],
+        n_honest=10, f=3, ratio=0.1)
+    plan = plan_grid(scenarios)
+    # one maximal bank per algorithm, every cell fused
+    assert plan.n_programs == 2 and not plan.singles
+    assert sorted(b.cfg.name for b in plan.banks) == ["dasha", "rosdhb"]
+    assert all(b.n_cells == 6 for b in plan.banks)
+    assert plan.n_cells == len(scenarios)
+    # executable bank configs: traced attack + restricted switch bank
+    for b in plan.banks:
+        assert b.cfg.attack.name == "linear"
+        assert b.cfg.aggregator.name == "bank"
+        assert set(b.cfg.aggregator.bank) == {("cwtm", True),
+                                              ("median", True)}
+
+
+def test_plan_grid_nonlinear_attacks_and_singletons_fall_back():
+    scenarios = grid_scenarios(["rosdhb"], ["alie", "mimic", "gauss"],
+                               ["cwtm"], n_honest=10, f=3)
+    plan = plan_grid(scenarios)
+    # mimic/gauss are outside the mean/std family; alie alone is a
+    # singleton group -> everything stays a per-scenario program
+    assert not plan.banks and len(plan.singles) == 3
+    assert plan_grid(scenarios, fuse=False).n_programs == 3
+
+
+def test_plan_grid_traces_ratio_only_for_traceable_kinds():
+    def sc(kind, ratio):
+        cfg = _cfg(attack="alie", kind=kind, ratio=ratio)
+        return Scenario(label=f"{kind}/{ratio}", cfg=cfg)
+
+    def sc2(kind, ratio):
+        cfg = _cfg(attack="foe", kind=kind, ratio=ratio)
+        return Scenario(label=f"{kind}/{ratio}/foe", cfg=cfg)
+
+    # bernoulli: ratios become traced data -> ONE bank
+    plan = plan_grid([sc("bernoulli", 0.1), sc2("bernoulli", 0.5)])
+    assert plan.n_programs == 1
+    assert plan.banks[0].ratios == (0.1, 0.5)
+    # randk: static-shape k -> ratio stays config, no fusion across ratios
+    plan = plan_grid([sc("randk", 0.1), sc2("randk", 0.5)])
+    assert not plan.banks and len(plan.singles) == 2
+    # equal ratios need no tracing even for bernoulli
+    plan = plan_grid([sc("bernoulli", 0.1), sc2("bernoulli", 0.1)])
+    assert plan.n_programs == 1 and plan.banks[0].ratios is None
+
+
+# --------------------------------------------------------------------------
+# execute layer: fused bank == per-scenario programs
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["rosdhb", "dasha", "robust_dgd"])
+def test_fused_bank_matches_per_scenario_rollouts(algo):
+    """Acceptance core: the one-program bank (traced attack coeffs +
+    aggregator switch) reproduces every per-scenario compiled program."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    ratio = 1.0 if algo == "robust_dgd" else 0.2
+    scenarios = grid_scenarios([algo], ["alie", "signflip", "zero"],
+                               ["cwtm", "median"], n_honest=N - F, f=F,
+                               ratio=ratio)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1
+    bank = plan.banks[0]
+    seeds = [0, 1]
+    batches = stack_batches(batch_fn, STEPS)
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    states, metrics = fused_grid_rollout(sim, bank.scenario_params(), seeds,
+                                         batches, shard=False)
+    assert sim.round_traces == 1  # ONE compiled program for the whole bank
+    for c, sc in enumerate(bank.scenarios):
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg)
+        ref_states, ref_metrics = rollout_over_seeds(ref, seeds, batches)
+        np.testing.assert_allclose(
+            np.asarray(states.params_flat[c]),
+            np.asarray(ref_states.params_flat),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"][c]), np.asarray(ref_metrics["loss"]),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+
+
+def test_fused_traced_ratio_matches_static_ratio():
+    """bernoulli keep-ratios as traced data == static-config ratios."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    batches = stack_batches(batch_fn, STEPS)
+    seeds = [0, 1]
+    ratios = (0.1, 0.5, 1.0)
+    scenarios = [Scenario(label=f"r{r}",
+                          cfg=_cfg(kind="bernoulli", ratio=r))
+                 for r in ratios]
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1 and plan.banks[0].ratios == ratios
+    bank = plan.banks[0]
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    _, metrics = fused_grid_rollout(sim, bank.scenario_params(), seeds,
+                                    batches, shard=False)
+    for c, sc in enumerate(bank.scenarios):
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg)
+        _, ref_metrics = rollout_over_seeds(ref, seeds, batches)
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"][c]), np.asarray(ref_metrics["loss"]),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+
+
+@pytest.mark.slow
+def test_acceptance_grid_is_one_program_and_matches_unfused():
+    """ISSUE acceptance: rosdhb x {alie,signflip,ipm,foe,zero} x
+    {cwtm,median,geomed} x 4 seeds executes as ONE compiled program and
+    matches the unfused rollout_over_seeds results."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    scenarios = grid_scenarios(
+        ["rosdhb"], ["alie", "signflip", "ipm", "foe", "zero"],
+        ["cwtm", "median", "geomed"], n_honest=N - F, f=F, ratio=0.1)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1 and plan.banks[0].n_cells == 15
+    seeds = [0, 1, 2, 3]
+    batches = stack_batches(batch_fn, STEPS)
+    bank = plan.banks[0]
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    _, metrics = fused_grid_rollout(sim, bank.scenario_params(), seeds,
+                                    batches, shard=False)
+    assert sim.round_traces == 1
+    for c, sc in enumerate(bank.scenarios):
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg)
+        _, ref_metrics = rollout_over_seeds(ref, seeds, batches)
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"][c]), np.asarray(ref_metrics["loss"]),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+
+
+def test_run_scenarios_bank_fusion_matches_unfused_rows():
+    loss_fn, params0, batch_fn, _ = _testbed()
+    scenarios = grid_scenarios(["rosdhb"], ["alie", "foe"],
+                               ["cwtm", "median"], n_honest=N - F, f=F,
+                               ratio=0.25)
+    kw = dict(loss_fn=loss_fn, params0=params0, batches=batch_fn,
+              seeds=[0, 1], steps=12)
+    fused = run_scenarios(scenarios, fuse_attacks=True, shard=False, **kw)
+    unfused = run_scenarios(scenarios, fuse_attacks=False, **kw)
+    assert [(r["scenario"], r["seed"]) for r in fused] == \
+        [(r["scenario"], r["seed"]) for r in unfused]
+    for rf, ru in zip(fused, unfused):
+        np.testing.assert_allclose(rf["final_loss"], ru["final_loss"],
+                                   rtol=1e-5, err_msg=rf["scenario"])
+        np.testing.assert_allclose(rf["min_loss"], ru["min_loss"], rtol=1e-5)
+
+
+def test_mixed_ratio_bank_rows_carry_per_cell_comm_bytes():
+    """Inside a traced-ratio bank every cell must report ITS ratio's byte
+    cost, not the bank config's static ratio."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    ratios = (0.125, 0.5)
+    scenarios = [Scenario(label=f"r{r}", cfg=_cfg(kind="bernoulli", ratio=r))
+                 for r in ratios]
+    assert plan_grid(scenarios).n_programs == 1  # fused despite the ratios
+    rows = run_scenarios(scenarios, loss_fn=loss_fn, params0=params0,
+                         batches=batch_fn, seeds=[0], steps=8, shard=False)
+    by_label = {r["scenario"]: r for r in rows}
+    b_small = by_label["r0.125"]["comm_bytes"]
+    b_big = by_label["r0.5"]["comm_bytes"]
+    assert b_small < b_big
+    assert b_big == pytest.approx(b_small * (0.5 / 0.125), rel=0.01)
+
+
+def test_fused_grid_rollout_rejects_empty_and_ragged_params():
+    loss_fn, params0, batch_fn, _ = _testbed()
+    sim = Simulator(loss_fn=loss_fn, params0=params0,
+                    cfg=_cfg(attack="linear"))
+    with pytest.raises(ValueError, match="no traced components"):
+        fused_grid_rollout(sim, ScenarioParams(), [0], batch_fn, steps=2)
+    ragged = ScenarioParams(attack_coeffs=jnp.zeros((2, 2)),
+                            agg_idx=jnp.zeros((3,), jnp.int32))
+    with pytest.raises(ValueError, match="inconsistent"):
+        fused_grid_rollout(sim, ragged, [0], batch_fn, steps=2)
+
+
+# --------------------------------------------------------------------------
+# in-scan eval (snapshot carry)
+# --------------------------------------------------------------------------
+
+
+def test_rollout_with_snapshots_matches_eval_round_params():
+    loss_fn, params0, batch_fn, _ = _testbed()
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=_cfg())
+    eval_rounds = [0, 5, 10, 19]
+    st, ms, snaps = sim.rollout_with_snapshots(sim.init(0), batch_fn,
+                                               eval_rounds, steps=STEPS)
+    assert snaps.shape == (len(eval_rounds), sim.spec.padded_size)
+    # reference: per-round loop, capturing params after each eval round
+    ref = sim.init(0)
+    want = {}
+    for t in range(STEPS):
+        ref, _ = sim._round(ref, batch_fn(t))
+        if t in eval_rounds:
+            want[t] = np.asarray(ref.params_flat)
+    for i, t in enumerate(eval_rounds):
+        np.testing.assert_allclose(np.asarray(snaps[i]), want[t],
+                                   rtol=1e-5, atol=1e-7, err_msg=f"round {t}")
+    np.testing.assert_allclose(np.asarray(st.params_flat),
+                               np.asarray(ref.params_flat),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_rollout_with_snapshots_rejects_unsorted_or_duplicate_rounds():
+    """Rows are written chronologically by a slot counter, so an unsorted
+    or duplicated schedule would silently misalign the snapshot buffer."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=_cfg())
+    for bad in ([5, 3], [2, 2, 7], [-8, 1], [0, 10]):
+        with pytest.raises(ValueError, match="strictly increasing"):
+            sim.rollout_with_snapshots(sim.init(0), batch_fn, bad, steps=10)
+
+
+def test_run_single_scan_matches_legacy_history_with_eval():
+    """Satellite: in-scan eval vs legacy run history equivalence (eval
+    metrics included)."""
+    loss_fn, params0, batch_fn, tg = _testbed()
+    opt = np.asarray(tg[F:]).mean(0)
+    sim = Simulator(
+        loss_fn=loss_fn, params0=params0, cfg=_cfg(),
+        eval_fn=lambda p, b: {"dist": jnp.linalg.norm(p["w"] - b["opt"])})
+    kw = dict(steps=23, eval_every=5, eval_batch={"opt": opt})
+    st_a, h_a = sim.run_per_round(sim.init(0), batch_fn, **kw)
+    st_b, h_b = sim.run(sim.init(0), batch_fn, **kw)
+    assert h_a["step"] == h_b["step"] == [0, 5, 10, 15, 20, 22]
+    assert h_a["comm_bytes"] == h_b["comm_bytes"]
+    for k in ("loss", "dist"):
+        np.testing.assert_allclose(h_a[k], h_b[k], rtol=1e-5, err_msg=k)
+    np.testing.assert_allclose(np.asarray(st_a.params_flat),
+                               np.asarray(st_b.params_flat),
+                               rtol=1e-5, atol=1e-7)
+    # early stop truncates the history at the same eval round
+    thresh = h_a["dist"][2]
+    stop = lambda m: m["dist"] <= thresh  # noqa: E731
+    _, h_c = sim.run_per_round(sim.init(0), batch_fn, stop_fn=stop, **kw)
+    _, h_d = sim.run(sim.init(0), batch_fn, stop_fn=stop, **kw)
+    assert h_c["step"] == h_d["step"]
+    assert len(h_d["step"]) < len(h_b["step"])
+
+
+def test_run_pays_one_compile_regardless_of_eval_schedule():
+    """The chunk-boundary recompiles ({1, eval_every, remainder} lengths)
+    are gone: one run with eval = one round-body trace."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=_cfg())
+    sim.run(sim.init(0), batch_fn, steps=23, eval_every=5)
+    assert sim.round_traces == 1
+
+
+# --------------------------------------------------------------------------
+# bytes_to_threshold: arbitrary leading batch axes (satellite)
+# --------------------------------------------------------------------------
+
+
+def test_bytes_to_threshold_3d_grid_output():
+    traj = np.asarray([5.0, 3.0, 1.0, 0.5, 0.4])
+    grid = np.stack([np.stack([traj, traj * 10]),
+                     np.stack([traj / 10, traj + 10])])
+    out = bytes_to_threshold(grid, 100, 1.0)
+    assert out.shape == (2, 2)
+    np.testing.assert_array_equal(out, [[300.0, np.inf],
+                                        [100.0, np.inf]])
+
+
+def test_bytes_to_threshold_never_crosses_is_inf_everywhere():
+    v = np.full((3, 2, 4), 9.0)
+    out = bytes_to_threshold(v, 7, 1.0)
+    assert out.shape == (3, 2)
+    assert np.all(np.isinf(out))
+    # rising-metric mode on 3-D as well
+    out = bytes_to_threshold(v, 7, 1.0, mode=">=")
+    np.testing.assert_array_equal(out, np.full((3, 2), 7.0))
+
+
+def test_bytes_to_threshold_rejects_scalar():
+    with pytest.raises(ValueError, match="round axis"):
+        bytes_to_threshold(np.float32(1.0), 7, 1.0)
+
+
+# --------------------------------------------------------------------------
+# sharded execution (forced multi-device subprocess; device count is fixed
+# at jax init, so the sharded path needs its own process)
+# --------------------------------------------------------------------------
+
+SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, numpy as np
+    assert len(jax.devices()) == 4
+    from repro.core import (Simulator, grid_scenarios, plan_grid,
+                            quadratic_testbed, run_scenarios, stack_batches)
+    from repro.core.sweep import fused_grid_rollout
+
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(13, 16)
+    scenarios = grid_scenarios(["rosdhb"], ["alie", "signflip", "foe"],
+                               ["cwtm", "median"], n_honest=10, f=3,
+                               ratio=0.1)
+    # 6 cells x 3 seeds = 18 rows; 18 % 4 != 0 exercises pad-row masking
+    kw = dict(loss_fn=loss_fn, params0=params0, batches=batch_fn,
+              seeds=[0, 1, 2], steps=10)
+    sharded = run_scenarios(scenarios, shard=True, **kw)
+    single = run_scenarios(scenarios, shard=False, **kw)
+    assert len(sharded) == len(single) == 18  # pad rows masked out
+    for rs, r1 in zip(sharded, single):
+        assert rs["scenario"] == r1["scenario"] and rs["seed"] == r1["seed"]
+        np.testing.assert_allclose(rs["final_loss"], r1["final_loss"],
+                                   rtol=1e-5, err_msg=rs["scenario"])
+    # the sharded bank is still ONE compiled program
+    bank = plan_grid(scenarios).banks[0]
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    batches = stack_batches(batch_fn, 10)
+    states, _ = fused_grid_rollout(sim, bank.scenario_params(), [0, 1, 2],
+                                   batches, shard=True)
+    assert sim.round_traces == 1
+    assert np.asarray(states.params_flat).shape[:2] == (6, 3)
+    print("SHARDED-SWEEP-OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_sweep_parity_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SHARDED-SWEEP-OK" in r.stdout
