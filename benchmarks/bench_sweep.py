@@ -1,6 +1,6 @@
 """One-program grid engine: fused/sharded sweep vs sequential Simulator runs.
 
-Three claims are measured (and the first two gated):
+Four claims are measured (and all but the last gated):
 
 1. **Attack fusion**: a 4-seed x 3-attack grid through ``repro.core.sweep``
    must be >= 1.2x faster wall-clock than sequential ``Simulator.run`` calls
@@ -16,7 +16,14 @@ Three claims are measured (and the first two gated):
    (``Simulator.round_traces`` — jit compiles trace once, so this counts
    compiled programs), where the per-scenario path pays one compile per
    scenario (n_attacks x n_aggregators of them).
-3. **Device sharding**: the same bank laid out over all visible devices
+3. **Stateful attack bank**: a mixed grid of SIX attacks — three stateless
+   (alie/signflip/foe) plus the stateful tracked mimic, gauss, and the
+   adaptive spectral attack (``repro.adversary``) — x 3 aggregators must
+   STILL plan to one bank and trace the round body exactly once, with every
+   cell matching its per-scenario (statically configured) rollout. This is
+   the ISSUE-3 acceptance gate: adversary memory lives in the scan carry,
+   so statefulness no longer breaks fusion.
+4. **Device sharding**: the same bank laid out over all visible devices
    (``--shard`` path, ``repro.sharding.sweep_mesh``) must match the
    single-device rows exactly; the speedup is reported (force virtual CPU
    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` —
@@ -52,6 +59,7 @@ SEEDS = (0, 1, 2, 3)
 ATTACKS = ("alie", "foe", "signflip")
 GRID_ATTACKS = ("alie", "signflip", "ipm", "foe", "zero")
 GRID_AGGS = ("cwtm", "median", "geomed")
+STATEFUL_ATTACKS = ("alie", "signflip", "foe", "mimic", "gauss", "spectral")
 
 
 def _attack_fusion_gate(loss_fn, params0, batch_fn, batches, scenarios):
@@ -176,8 +184,58 @@ def _one_program_grid(loss_fn, params0, batches):
             "n_cells": n_cells, "speedup": t_seq / t_bank}
 
 
+def _stateful_grid(loss_fn, params0, batches):
+    """Claim 3 (ISSUE-3 acceptance): 6 mixed stateless+stateful attacks x 3
+    aggregators = ONE compiled program, cells match per-scenario rollouts."""
+    scenarios = grid_scenarios(["rosdhb"], STATEFUL_ATTACKS, GRID_AGGS,
+                               n_honest=10, f=3, ratio=0.1, gamma=0.05)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1 and plan.banks[0].n_cells == len(scenarios), \
+        plan.describe()
+    bank = plan.banks[0]
+    assert {"mimic", "gauss", "spectral"} <= set(bank.cfg.attack.bank)
+
+    t0 = time.perf_counter()
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    _, metrics = fused_grid_rollout(
+        sim, bank.scenario_params(), SEEDS, batches, shard=False)
+    jax.block_until_ready(metrics["loss"])
+    t_bank = time.perf_counter() - t0
+    assert sim.round_traces == 1, (
+        f"stateful attack bank traced the round body {sim.round_traces}x; "
+        "expected ONE compiled program for the whole mixed grid")
+    fused_loss = np.asarray(metrics["loss"])
+
+    # parity: every cell (stateful adversaries included — their memory is in
+    # the scan carry on both paths) matches its per-scenario program
+    t0 = time.perf_counter()
+    traces = 0
+    for c, sc in enumerate(bank.scenarios):
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg)
+        _, ref_metrics = rollout_over_seeds(ref, SEEDS, batches)
+        traces += ref.round_traces
+        np.testing.assert_allclose(
+            fused_loss[c], np.asarray(ref_metrics["loss"]),
+            rtol=1e-4, atol=1e-6, err_msg=sc.label)
+    t_seq = time.perf_counter() - t0
+
+    n_cells = len(scenarios)
+    emit("sweep/stateful_grid_one_program",
+         t_bank * 1e6 / (n_cells * len(SEEDS)),
+         f"total={t_bank:.2f}s compiles=1 cells={n_cells} "
+         f"attacks={len(STATEFUL_ATTACKS)} (3 stateful)")
+    emit("sweep/stateful_grid_per_scenario",
+         t_seq * 1e6 / (n_cells * len(SEEDS)),
+         f"total={t_seq:.2f}s compiles={traces} "
+         f"speedup_fused={t_seq / t_bank:.1f}x")
+    return {"bank_s": t_bank, "per_scenario_s": t_seq,
+            "bank_compiles": sim.round_traces,
+            "per_scenario_compiles": traces, "n_cells": n_cells,
+            "speedup": t_seq / t_bank}
+
+
 def _sharded_grid(loss_fn, params0, batches):
-    """Claim 3: the bank sharded across devices matches single-device."""
+    """Claim 4: the bank sharded across devices matches single-device."""
     n_dev = len(jax.devices())
     scenarios = grid_scenarios(["rosdhb"], GRID_ATTACKS, GRID_AGGS,
                                n_honest=10, f=3, ratio=0.1, gamma=0.05)
@@ -243,6 +301,8 @@ def run(out: str = "results/BENCH_sweep.json"):
         loss_fn, params0, batch_fn, batches, scenarios))
     record("grid_one_program",
            lambda: _one_program_grid(loss_fn, params0, batches))
+    record("stateful_grid",
+           lambda: _stateful_grid(loss_fn, params0, batches))
     record("sharded", lambda: _sharded_grid(loss_fn, params0, batches))
     return results
 

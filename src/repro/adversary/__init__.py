@@ -1,0 +1,39 @@
+"""Adversary subsystem: stateful attack banks + (G, B)-heterogeneity.
+
+Three layers (see each module's docstring):
+
+* ``core``          — the :class:`Adversary` API (``init_attack_state`` /
+                      ``step``), the uniformly-shaped :class:`AttackState`
+                      slab, and :func:`make_attack_bank` — a ``lax.switch``
+                      attack bank selected by a traced index, so mixed
+                      stateless/stateful attack grids compile to one
+                      program per algorithm bank.
+* ``heterogeneity`` — Dirichlet(alpha) label partitioners and the empirical
+                      $(G, B)$-gradient-dissimilarity probe.
+* ``registry``      — named composed scenarios (attack x heterogeneity x
+                      byzantine-fraction) expanded into grid plans for the
+                      sweep CLI (``--scenario``).
+"""
+
+from repro.adversary.core import (
+    ADVERSARIES, AttackState, Adversary, DEFAULT_ATTACK_BANK, KNOWN_ATTACKS,
+    attack_index, bank_entry, init_attack_state, is_stateful,
+    make_attack_bank, needs_attack_state, static_coeffs,
+)
+from repro.adversary.heterogeneity import (
+    GBEstimate, dirichlet_mnist, dirichlet_proportions, gb_probe,
+    label_histograms, label_skew, partition_pool,
+)
+from repro.adversary.registry import (
+    REGISTRY, ScenarioSpec, describe, expand_scenario, get_spec, register,
+)
+
+__all__ = [
+    "ADVERSARIES", "AttackState", "Adversary", "DEFAULT_ATTACK_BANK",
+    "KNOWN_ATTACKS", "attack_index", "bank_entry", "init_attack_state",
+    "is_stateful", "make_attack_bank", "needs_attack_state", "static_coeffs",
+    "GBEstimate", "dirichlet_mnist", "dirichlet_proportions", "gb_probe",
+    "label_histograms", "label_skew", "partition_pool",
+    "REGISTRY", "ScenarioSpec", "describe", "expand_scenario", "get_spec",
+    "register",
+]

@@ -1,0 +1,336 @@
+"""First-class, stateful, fusible Byzantine adversaries.
+
+The paper's threat model (omniscient colluding Byzantine workers observing
+every honest message) is only interesting when the adversary is allowed to
+*remember*: the strongest known attacks against robust aggregation track
+statistics of the honest updates across rounds (Karimireddy et al.'s mimic
+heuristic, spectral perturbations along the top covariance direction,
+bandit-style scale probing).  ``repro.core.attacks`` covers the stateless
+mean/std linear family; this module promotes adversaries to first-class
+citizens with carried state so they can live inside the fused
+``lax.scan``/``vmap`` grid engine of ``repro.core.sweep``.
+
+Adversary API
+-------------
+
+An :class:`Adversary` is a named pair
+
+* ``init_state(d) -> AttackState`` (shared :func:`init_attack_state`), and
+* ``step(state, honest, f, key, coeffs) -> (state, byz)``,
+
+where ``honest`` is the stacked honest wire payload ``[h, d]``, ``byz`` the
+``[f, d]`` Byzantine payload, and ``coeffs`` a ``[2]`` per-attack parameter
+vector (traced, so a grid of parameterisations shares one program).
+
+Every adversary carries the same uniformly-shaped :class:`AttackState` slab
+(two ``[d]`` vector slots + a small scalar slab + a step counter); attacks
+use the slots they need and ignore the rest.  Uniform shapes are what makes
+:func:`make_attack_bank` possible: a ``lax.switch`` over attack branches
+selected by a *traced* index, mirroring
+``repro.core.aggregators.make_aggregator_bank`` — a mixed grid of stateless
+AND stateful attacks then compiles to ONE XLA program per algorithm bank
+(see ``repro.core.sweep.plan_grid``).
+
+The built-in bank:
+
+* ``linear``     — the stateless mean/std family ``a*mu + b*sd`` (alie,
+                   signflip, ipm, foe, zero as coefficient choices).
+* ``mimic``      — Karimireddy-He-Jaggi mimic with a *tracked* target: an
+                   online power iteration over the centered honest updates
+                   maintains the max-variance direction ``z``; all Byzantine
+                   workers copy the honest worker most aligned with ``z``.
+                   Under heterogeneity this consistently over-represents one
+                   honest distribution, which plain i.i.d.-minded defences
+                   miss.
+* ``gauss``      — honest mean + Gaussian noise (weak baseline; stateless
+                   but PRNG-consuming).
+* ``spectral``   — adaptive spectral attack: a power iteration *carried
+                   across rounds* tracks the top eigenvector ``v`` of the
+                   honest update covariance; Byzantine workers send
+                   ``mu - scale * sigma_v * v`` — an ALIE-style shift aimed
+                   along the direction where the honest spread is widest, so
+                   it hides inside the empirical spread while maximally
+                   displacing coordinate-blind aggregators.
+* ``ipm_greedy`` — epsilon-greedy Inner-Product-Manipulation: two arms
+                   (weak scale that slips through filters, strong scale that
+                   disrupts when undefended), valued by the observed
+                   round-to-round displacement of the honest mean; explores
+                   with decaying epsilon, exploits the best arm.
+
+``apply_attack`` in ``repro.core.attacks`` remains the stateless legacy
+dispatch; ``repro.core.algorithms.server_round`` routes stateful names (and
+``name='bank'``) through this module and threads :class:`AttackState`
+through its ``ServerState`` so the whole trajectory — adversary memory
+included — stays inside one ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attacks as A
+
+
+NUM_SCALARS = 4
+
+
+class AttackState(NamedTuple):
+    """Uniformly-shaped adversary state slab shared by every attack.
+
+    ``vec``:     ``[d]`` direction slot (power-iteration vector of the
+                 spectral attack; mimic's alignment direction ``z``).
+    ``mu``:      ``[d]`` auxiliary vector slot (previous-round honest mean,
+                 used by ``ipm_greedy``'s displacement reward).
+    ``scalars``: ``[NUM_SCALARS]`` scalar slab (``ipm_greedy``: arm values
+                 0-1, last arm index at 2).
+    ``step``:    ``[]`` int32 round counter.
+    """
+
+    vec: jnp.ndarray
+    mu: jnp.ndarray
+    scalars: jnp.ndarray
+    step: jnp.ndarray
+
+
+def init_attack_state(d: int, dtype=jnp.float32) -> AttackState:
+    """Zero-initialised :class:`AttackState` for a ``d``-dimensional wire."""
+    return AttackState(
+        vec=jnp.zeros((d,), dtype),
+        mu=jnp.zeros((d,), dtype),
+        scalars=jnp.zeros((NUM_SCALARS,), dtype),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+StepFn = Callable[[AttackState, jnp.ndarray, int, jax.Array, jnp.ndarray],
+                  Tuple[AttackState, jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Adversary:
+    """Named adversary: a step function plus its bank metadata.
+
+    ``step(state, honest, f, key, coeffs) -> (state, byz)`` must preserve
+    the :class:`AttackState` structure exactly (same shapes/dtypes) — the
+    state is a ``lax.scan`` carry and a ``lax.switch`` branch output.
+    """
+
+    name: str
+    step: StepFn
+    stateful: bool = False
+    default_coeffs: Tuple[float, float] = (0.0, 0.0)
+
+
+def _bump(state: AttackState) -> AttackState:
+    return state._replace(step=state.step + 1)
+
+
+def _broadcast(byz: jnp.ndarray, f: int) -> jnp.ndarray:
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def _linear_step(state, honest, f, key, coeffs):
+    """Stateless mean/std family (see ``attacks.linear_attack``)."""
+    return _bump(state), A.linear_attack(honest, f, coeffs)
+
+
+def _gauss_step(state, honest, f, key, coeffs):
+    """Honest mean + N(0, coeffs[0]^2) noise — matches ``attacks.gauss``
+    bit-for-bit for equal std/key."""
+    return _bump(state), A.gauss(honest, f, key, std=coeffs[0])
+
+
+def _power_step(state, honest):
+    """One shared online power-iteration step over the centered honest
+    updates: returns ``(mu, centered, v)`` with ``v`` unit-norm, seeded from
+    the first centered update at round 0 and sign-aligned with the carried
+    vector for cross-round stability."""
+    h32 = honest.astype(jnp.float32)
+    mu = jnp.mean(h32, axis=0)
+    c = h32 - mu
+    v_prev = jnp.where(state.step == 0, c[0], state.vec)
+    w = c.T @ (c @ v_prev) + 1e-12 * v_prev  # leak keeps degenerate rounds alive
+    w = w / (jnp.linalg.norm(w) + 1e-12)
+    w = jnp.where(jnp.dot(w, v_prev) < 0, -w, w)
+    return mu, c, w
+
+
+def _mimic_step(state, honest, f, key, coeffs):
+    """Tracked-target mimic (Karimireddy et al.): copy the honest worker
+    whose centered update projects furthest onto the carried max-variance
+    direction ``z`` (absolute projection — eigenvector sign is arbitrary)."""
+    _, c, z = _power_step(state, honest)
+    target = jnp.argmax(jnp.abs(c @ z))
+    byz = honest[target]
+    return _bump(state)._replace(vec=z), _broadcast(byz, f)
+
+
+def _spectral_step(state, honest, f, key, coeffs):
+    """Adaptive spectral attack: ALIE-style shift of size ``coeffs[0]``
+    honest-spread standard deviations along the carried top covariance
+    direction."""
+    mu, c, v = _power_step(state, honest)
+    sigma = jnp.sqrt(jnp.mean(jnp.square(c @ v)) + 1e-12)
+    byz = (mu - coeffs[0] * sigma * v).astype(honest.dtype)
+    return _bump(state)._replace(vec=v), _broadcast(byz, f)
+
+
+def _ipm_greedy_step(state, honest, f, key, coeffs):
+    """Epsilon-greedy IPM over two scales ``coeffs = (weak, strong)``.
+
+    The adversary observes every honest message, so it can score its
+    previous arm by how far the honest mean moved between rounds (a proxy
+    for training disruption), keep running arm values, and pick the better
+    scale with decaying exploration.
+    """
+    h32 = honest.astype(jnp.float32)
+    mu = jnp.mean(h32, axis=0)
+    reward = jnp.linalg.norm(mu - state.mu)
+    last_arm = state.scalars[2].astype(jnp.int32)
+    vals = state.scalars[:2]
+    vals = jnp.where(state.step > 0,
+                     vals + 0.2 * (reward - vals) * jax.nn.one_hot(last_arm, 2),
+                     vals)
+    k_explore, k_arm = jax.random.split(key)
+    eps_t = 1.0 / (1.0 + 0.1 * state.step.astype(jnp.float32))
+    explore = jax.random.bernoulli(k_explore, eps_t)
+    rand_arm = jax.random.bernoulli(k_arm, 0.5).astype(jnp.int32)
+    arm = jnp.where(explore, rand_arm, jnp.argmax(vals).astype(jnp.int32))
+    scale = jnp.where(arm == 0, coeffs[0], coeffs[1])
+    byz = (-scale * mu).astype(honest.dtype)
+    scalars = jnp.stack([vals[0], vals[1], arm.astype(jnp.float32),
+                         state.scalars[3]])
+    new = _bump(state)._replace(mu=mu, scalars=scalars)
+    return new, _broadcast(byz, f)
+
+
+#: The adversary registry. ``linear`` covers the whole stateless mean/std
+#: family via coefficients; the rest are the stateful/stochastic attacks.
+ADVERSARIES = {
+    "linear": Adversary("linear", _linear_step, stateful=False),
+    "mimic": Adversary("mimic", _mimic_step, stateful=True),
+    "gauss": Adversary("gauss", _gauss_step, stateful=False,
+                       default_coeffs=(1.0, 0.0)),
+    "spectral": Adversary("spectral", _spectral_step, stateful=True,
+                          default_coeffs=(1.5, 0.0)),
+    "ipm_greedy": Adversary("ipm_greedy", _ipm_greedy_step, stateful=True,
+                            default_coeffs=(0.5, 5.0)),
+}
+
+#: Default branch order of the full attack bank.
+DEFAULT_ATTACK_BANK: Tuple[str, ...] = ("linear", "mimic", "gauss",
+                                        "spectral", "ipm_greedy")
+
+#: Attack names accepted by ``AttackConfig``/the sweep CLI. ``linear`` and
+#: ``bank`` are engine-internal (their parameters arrive as traced data) and
+#: are deliberately NOT valid grid-scenario names.
+KNOWN_ATTACKS: Tuple[str, ...] = (
+    "none", "alie", "signflip", "ipm", "foe", "zero",
+    "mimic", "gauss", "spectral", "ipm_greedy")
+
+
+def is_stateful(name: str) -> bool:
+    a = ADVERSARIES.get(name)
+    return a is not None and a.stateful
+
+
+def needs_attack_state(attack_name: str, f: int) -> bool:
+    """Whether a config needs the :class:`AttackState` slab in its server
+    state — THE single predicate shared by ``algorithms.init_state`` and the
+    launch path's abstract input specs (``launch.steps``), so the real
+    pytree and the jit-lowering specs can never diverge."""
+    if f == 0 or attack_name == "none":
+        return False
+    return attack_name == "bank" or is_stateful(attack_name)
+
+
+def bank_entry(cfg: "A.AttackConfig", n: int, f: int
+               ) -> Optional[Tuple[str, Tuple[float, float]]]:
+    """Map an :class:`attacks.AttackConfig` onto its attack-bank branch.
+
+    Returns ``(branch_name, coeffs)`` — the branch of
+    :data:`DEFAULT_ATTACK_BANK` executing ``cfg`` and the ``[2]`` parameter
+    vector reproducing it — or ``None`` when the attack cannot join a bank
+    (``none``, and the engine-internal ``linear``/``bank`` whose parameters
+    are traced, not named).
+    """
+    coeffs = A.linear_coeffs(cfg, n, f)
+    if coeffs is not None:
+        return ("linear", coeffs)
+    if cfg.name == "mimic":
+        return ("mimic", (0.0, 0.0))
+    if cfg.name == "gauss":
+        return ("gauss", (cfg.scale or 1.0, 0.0))
+    if cfg.name == "spectral":
+        return ("spectral", (cfg.scale or 1.5, 0.0))
+    if cfg.name == "ipm_greedy":
+        return ("ipm_greedy", (cfg.scale or 0.5, 5.0))
+    return None
+
+
+def static_coeffs(cfg: "A.AttackConfig", n: int, f: int) -> jnp.ndarray:
+    """The ``[2]`` coefficient vector of a *statically configured* attack
+    (the per-scenario, non-bank path)."""
+    entry = bank_entry(cfg, n, f)
+    if entry is None:
+        raise ValueError(f"attack {cfg.name!r} has no bank entry")
+    return jnp.asarray(entry[1], jnp.float32)
+
+
+def attack_index(name: str,
+                 entries: Optional[Sequence[str]] = None) -> int:
+    """Branch index of adversary ``name`` inside ``entries`` (default the
+    full :data:`DEFAULT_ATTACK_BANK`)."""
+    entries = tuple(entries) if entries is not None else DEFAULT_ATTACK_BANK
+    try:
+        return entries.index(name)
+    except ValueError:
+        raise ValueError(
+            f"adversary {name!r} is not a branch of the attack bank "
+            f"{entries}") from None
+
+
+BankStepFn = Callable[
+    [AttackState, jnp.ndarray, jax.Array, jnp.ndarray, jnp.ndarray],
+    Tuple[AttackState, jnp.ndarray]]
+
+
+def make_attack_bank(entries: Sequence[str], f: int) -> BankStepFn:
+    """Build the switch-based attack bank ``step(state, honest, key, idx,
+    coeffs) -> (state, byz)``.
+
+    A ``lax.switch`` over uniformly-shaped adversary branches (every branch
+    maps the shared :class:`AttackState` slab + ``[h, d]`` honest payload to
+    the same slab + ``[f, d]`` Byzantine payload), selected by the *traced*
+    integer ``idx`` — so the attack choice is data and a mixed
+    stateless/stateful attack grid joins the one-program fusion axis of
+    ``repro.core.sweep``.  ``f`` is static across branches (a fused bank
+    requires every grid cell to share it).  As with the aggregator bank,
+    under ``vmap`` a switch on per-lane indices computes every branch per
+    lane — keep ``entries`` restricted to the attacks the grid uses.
+    """
+    entries = tuple(entries)
+    unknown = [e for e in entries if e not in ADVERSARIES]
+    if unknown:
+        raise ValueError(
+            f"unknown attack-bank entries {unknown} (known adversaries: "
+            f"{'|'.join(ADVERSARIES)})")
+    if not entries:
+        raise ValueError("attack bank needs at least one entry")
+    branches = tuple(
+        (lambda step: lambda st, h, k, c: step(st, h, f, k, c))(
+            ADVERSARIES[e].step)
+        for e in entries)
+
+    def apply(state: AttackState, honest: jnp.ndarray, key: jax.Array,
+              idx: jnp.ndarray, coeffs: jnp.ndarray
+              ) -> Tuple[AttackState, jnp.ndarray]:
+        if len(branches) == 1:
+            return branches[0](state, honest, key, coeffs)
+        return jax.lax.switch(idx, branches, state, honest, key, coeffs)
+
+    return apply

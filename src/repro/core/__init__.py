@@ -14,8 +14,8 @@ See DESIGN.md §1-3. The module split mirrors Algorithm 1:
 """
 
 from repro.core.compression import (
-    SparsifierConfig, make_mask, make_masks, compress, payload_bytes,
-    payload_floats,
+    SparsifierConfig, index_bytes, make_mask, make_masks, compress,
+    payload_bytes, payload_floats,
 )
 from repro.core.aggregators import (
     AggregatorConfig, make_aggregator, make_aggregator_bank, bank_index,
@@ -33,13 +33,13 @@ from repro.core.algorithms import (
 )
 from repro.core.simulator import Simulator, SimState, stack_batches
 from repro.core.sweep import (
-    Scenario, GridPlan, FusedBank, grid_scenarios, plan_grid, execute_plan,
-    rollout_over_seeds, fused_attack_rollout, fused_grid_rollout,
-    run_scenarios, bytes_to_threshold, quadratic_testbed,
+    Scenario, GridPlan, FusedBank, KNOWN_ALGORITHMS, grid_scenarios,
+    plan_grid, execute_plan, rollout_over_seeds, fused_attack_rollout,
+    fused_grid_rollout, run_scenarios, bytes_to_threshold, quadratic_testbed,
 )
 
 __all__ = [
-    "SparsifierConfig", "make_mask", "make_masks", "compress",
+    "SparsifierConfig", "index_bytes", "make_mask", "make_masks", "compress",
     "payload_bytes", "payload_floats",
     "AggregatorConfig", "make_aggregator", "make_aggregator_bank",
     "bank_index", "DEFAULT_BANK",
@@ -47,7 +47,8 @@ __all__ = [
     "AlgorithmConfig", "ScenarioParams", "ServerState", "init_state",
     "server_round", "apply_direction", "theorem1_hparams",
     "Simulator", "SimState", "stack_batches",
-    "Scenario", "GridPlan", "FusedBank", "grid_scenarios", "plan_grid",
+    "Scenario", "GridPlan", "FusedBank", "KNOWN_ALGORITHMS",
+    "grid_scenarios", "plan_grid",
     "execute_plan", "rollout_over_seeds", "fused_attack_rollout",
     "fused_grid_rollout", "run_scenarios",
     "bytes_to_threshold", "quadratic_testbed",

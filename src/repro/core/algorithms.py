@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,8 +121,13 @@ class ScenarioParams(NamedTuple):
     leaves, so a ``ScenarioParams`` batch vmaps cleanly whichever subset is
     fused); a present component overrides the corresponding static config:
 
-    ``attack_coeffs``: ``[2]`` linear-attack ``(a, b)`` coefficients
-      (requires ``cfg.attack.name == 'linear'``, see ``attacks.linear_attack``).
+    ``attack_coeffs``: ``[2]`` attack parameter vector — the linear-family
+      ``(a, b)`` coefficients for ``cfg.attack.name == 'linear'`` (see
+      ``attacks.linear_attack``), or the per-branch parameter vector of the
+      attack bank for ``cfg.attack.name == 'bank'``.
+    ``attack_idx``: scalar int32 branch index into the attack bank
+      (``repro.adversary.make_attack_bank``; requires
+      ``cfg.attack.name == 'bank'``).
     ``agg_idx``: scalar int32 branch index into the aggregator bank
       (``aggregators.make_aggregator_bank``) replacing the static rule.
     ``ratio``: scalar keep-ratio replacing ``cfg.sparsifier.ratio``
@@ -130,6 +135,7 @@ class ScenarioParams(NamedTuple):
     """
 
     attack_coeffs: Optional[jnp.ndarray] = None
+    attack_idx: Optional[jnp.ndarray] = None
     agg_idx: Optional[jnp.ndarray] = None
     ratio: Optional[jnp.ndarray] = None
 
@@ -144,23 +150,45 @@ class ServerState(NamedTuple):
     ``prev_grad``: previous-round per-worker gradients for DASHA's MVR
       correction (placeholder otherwise).
     ``step``: iteration counter t.
+    ``attack``: the adversary's carried memory
+      (``repro.adversary.AttackState``) for stateful attacks and attack
+      banks; ``None`` (no pytree leaves) for stateless attacks, so legacy
+      configs keep their exact state structure.
     """
 
     momentum: jnp.ndarray
     mirror: jnp.ndarray
     prev_grad: jnp.ndarray
     step: jnp.ndarray
+    attack: Optional[Any] = None
+
+
+def _adversary():
+    # local import: repro.adversary.core imports repro.core.attacks, so a
+    # module-level import here would be circular
+    from repro.adversary import core as adv
+    return adv
+
+
+def _init_attack_state(cfg: AlgorithmConfig, d: int) -> Optional[Any]:
+    """Adversary memory slab for stateful attacks / attack banks; ``None``
+    (structure-preserving) for the stateless legacy attacks."""
+    adv = _adversary()
+    if adv.needs_attack_state(cfg.attack.name, cfg.f):
+        return adv.init_attack_state(d)
+    return None
 
 
 def init_state(cfg: AlgorithmConfig, d: int) -> ServerState:
     n = cfg.n_workers
     mdt = jnp.dtype(cfg.momentum_dtype)
     zeros = jnp.zeros((n, d), mdt)
+    atk = _init_attack_state(cfg, d)
     if cfg.name == "dasha":
         return ServerState(zeros, zeros, jnp.zeros((n, d), jnp.float32),
-                           jnp.zeros((), jnp.int32))
+                           jnp.zeros((), jnp.int32), atk)
     ph = jnp.zeros((1, 1), mdt)
-    return ServerState(zeros, ph, ph, jnp.zeros((), jnp.int32))
+    return ServerState(zeros, ph, ph, jnp.zeros((), jnp.int32), atk)
 
 
 # --------------------------------------------------------------------------
@@ -168,18 +196,56 @@ def init_state(cfg: AlgorithmConfig, d: int) -> ServerState:
 # --------------------------------------------------------------------------
 
 
-def _byzantine_overwrite(cfg: AlgorithmConfig, wire: jnp.ndarray,
-                         key: jax.Array,
-                         attack_params: Optional[jnp.ndarray] = None
-                         ) -> jnp.ndarray:
+def _byzantine_overwrite(cfg: AlgorithmConfig, atk_state: Optional[Any],
+                         wire: jnp.ndarray, key: jax.Array,
+                         attack_params: Optional[jnp.ndarray] = None,
+                         attack_idx: Optional[jnp.ndarray] = None
+                         ) -> Tuple[jnp.ndarray, Optional[Any]]:
     """Replace rows [0, f) of the wire payload with the attack vectors
-    computed from the honest rows [f, n)."""
-    if cfg.f == 0 or cfg.attack.name == "none":
-        return wire
+    computed from the honest rows [f, n).
+
+    Returns ``(wire, new_attack_state)``.  Dispatch: ``name='bank'`` runs
+    the switch-based attack bank (``repro.adversary.make_attack_bank``)
+    selected by the traced ``attack_idx``; statically configured *stateful*
+    adversaries (mimic/spectral/ipm_greedy) run their registry step with the
+    carried ``atk_state``; everything else stays on the stateless legacy
+    ``attacks.apply_attack`` path.
+    """
+    name = cfg.attack.name
+    if cfg.f == 0 or name == "none":
+        return wire, atk_state
     honest = wire[cfg.f:]
-    byz = A.apply_attack(cfg.attack, honest, cfg.f, key=key,
-                         params=attack_params)
-    return jnp.concatenate([byz.astype(wire.dtype), honest], axis=0)
+    if name == "bank":
+        adv = _adversary()
+        if atk_state is None:
+            raise ValueError(
+                "attack bank needs the adversary memory slab: build the "
+                "server state with init_state(cfg, d) (ServerState.attack)")
+        entries = cfg.attack.bank or adv.DEFAULT_ATTACK_BANK
+        if attack_idx is None or attack_params is None:
+            raise ValueError(
+                "bank attack needs traced branch selectors: pass a "
+                "ScenarioParams with attack_idx and attack_coeffs "
+                "(see sweep.FusedBank.scenario_params)")
+        atk_state, byz = adv.make_attack_bank(entries, cfg.f)(
+            atk_state, honest, key, attack_idx, attack_params)
+    else:
+        adv = _adversary()
+        if adv.is_stateful(name):
+            if atk_state is None:
+                raise ValueError(
+                    f"stateful attack {name!r} needs the adversary memory "
+                    "slab: build the server state with init_state(cfg, d) "
+                    "(ServerState.attack)")
+            coeffs = (attack_params if attack_params is not None
+                      else adv.static_coeffs(cfg.attack, cfg.n_workers,
+                                             cfg.f))
+            atk_state, byz = adv.ADVERSARIES[name].step(
+                atk_state, honest, cfg.f, key, coeffs)
+        else:
+            byz = A.apply_attack(cfg.attack, honest, cfg.f, key=key,
+                                 params=attack_params)
+    return jnp.concatenate([byz.astype(wire.dtype), honest], axis=0), atk_state
 
 
 def server_round(cfg: AlgorithmConfig, state: ServerState,
@@ -195,13 +261,18 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
       grads: honest-computed per-worker gradients ``[n, D]`` (f32). Rows of
         Byzantine workers are ignored and replaced by the attack.
       key: PRNG key for this round (mask sampling + stochastic attacks).
-      attack_params: traced parameters for ``attack.name='linear'`` (a ``[2]``
-        coefficient vector); lets a grid of mean/std-family attacks share one
-        compiled program (see ``repro.core.sweep``).
+      attack_params: traced attack parameters — the ``[2]`` coefficient
+        vector for ``attack.name='linear'`` (or the per-branch parameter
+        vector for ``attack.name='bank'``); lets a grid of attacks share
+        one compiled program (see ``repro.core.sweep``).
       scenario: traced :class:`ScenarioParams` cell vector — the fused grid
-        axis. Its ``attack_coeffs`` supersede ``attack_params``; ``agg_idx``
-        switches the aggregator bank; ``ratio`` overrides the sparsifier
-        keep-ratio. Static config fills in whatever is ``None``.
+        axis. Its ``attack_coeffs`` supersede ``attack_params``;
+        ``attack_idx`` selects the attack-bank branch
+        (``attack.name='bank'``); ``agg_idx`` switches the aggregator bank;
+        ``ratio`` overrides the sparsifier keep-ratio. Static config fills
+        in whatever is ``None``. Stateful adversaries carry their memory in
+        ``state.attack`` (threaded through the scan like every other
+        server-state component).
 
     Returns:
       (direction R [D] to descend, next state, aux dict).
@@ -213,10 +284,11 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
                                 keepdims=True)
         scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norms, 1e-12))
         grads = (grads * scale.astype(grads.dtype))
-    ratio = None
+    ratio = attack_idx = None
     if scenario is not None:
         if scenario.attack_coeffs is not None:
             attack_params = scenario.attack_coeffs
+        attack_idx = scenario.attack_idx
         ratio = scenario.ratio
     mask_key, atk_key = jax.random.split(key)
     if scenario is not None and scenario.agg_idx is not None:
@@ -233,7 +305,9 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
         masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype,
                              ratio=ratio)
         g_tilde = C.compress(grads, masks, sp, ratio=ratio)
-        g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key, attack_params)
+        g_tilde, atk = _byzantine_overwrite(cfg, state.attack, g_tilde,
+                                            atk_key, attack_params,
+                                            attack_idx)
         # Step 5: per-worker server momentum (math dtype configurable —
         # bf16 halves the per-round transient at LLM scale, EXPERIMENTS
         # section Perf).
@@ -243,7 +317,8 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
              + (1.0 - beta) * g_tilde.astype(cdt))
         # Step 6: robust aggregation of momenta.
         r = agg(m)
-        new = state._replace(momentum=m.astype(mdt), step=state.step + 1)
+        new = state._replace(momentum=m.astype(mdt), step=state.step + 1,
+                             attack=atk)
         return r, new, aux
 
     if cfg.name == "dgd":
@@ -251,16 +326,19 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
         masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype,
                              ratio=ratio)
         g_tilde = C.compress(grads, masks, sp, ratio=ratio)
-        g_tilde = _byzantine_overwrite(cfg, g_tilde, atk_key, attack_params)
+        g_tilde, atk = _byzantine_overwrite(cfg, state.attack, g_tilde,
+                                            atk_key, attack_params,
+                                            attack_idx)
         r = jnp.mean(g_tilde, axis=0)
-        return r, state._replace(step=state.step + 1), aux
+        return r, state._replace(step=state.step + 1, attack=atk), aux
 
     if cfg.name == "robust_dgd":
         # Robust DGD without compression: aggregate raw gradients.
-        g = _byzantine_overwrite(cfg, grads, atk_key, attack_params)
+        g, atk = _byzantine_overwrite(cfg, state.attack, grads, atk_key,
+                                      attack_params, attack_idx)
         aux["payload_floats_per_worker"] = d
         r = agg(g)
-        return r, state._replace(step=state.step + 1), aux
+        return r, state._replace(step=state.step + 1, attack=atk), aux
 
     if cfg.name == "dasha":
         # Byz-DASHA-PAGE, p=1 branch.
@@ -286,10 +364,11 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
         diff = C.compress((m - m_prev) + b * (m_prev - h_prev), masks, sp,
                           ratio=ratio)
         h = h_prev + diff
-        h = _byzantine_overwrite(cfg, h, atk_key, attack_params)
+        h, atk = _byzantine_overwrite(cfg, state.attack, h, atk_key,
+                                      attack_params, attack_idx)
         r = agg(h)
         new = ServerState(momentum=m.astype(mdt), mirror=h.astype(mdt),
-                          prev_grad=grads, step=state.step + 1)
+                          prev_grad=grads, step=state.step + 1, attack=atk)
         return r, new, aux
 
     raise ValueError(f"unknown algorithm: {cfg.name!r}")

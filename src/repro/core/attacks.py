@@ -116,15 +116,26 @@ class AttackConfig:
 
     Attributes:
       name: ``none`` | ``alie`` | ``signflip`` | ``ipm`` | ``foe`` |
-        ``mimic`` | ``gauss`` | ``zero`` | ``linear`` (the traced mean/std
-        family; coefficients arrive via ``apply_attack``'s ``params``).
-      scale: magnitude parameter (signflip/foe/ipm/gauss).
+        ``mimic`` | ``gauss`` | ``zero`` | ``spectral`` | ``ipm_greedy`` |
+        ``linear`` (the traced mean/std family; coefficients arrive via
+        ``apply_attack``'s ``params``) | ``bank`` (the switch-based attack
+        bank of ``repro.adversary``; branch selected per grid cell by a
+        traced ``ScenarioParams.attack_idx``). Stateful adversaries —
+        the *tracked* mimic, ``spectral``, ``ipm_greedy`` — are executed by
+        ``repro.adversary`` with memory carried in ``ServerState.attack``;
+        :func:`apply_attack` below remains the stateless legacy dispatch
+        (its ``mimic`` is the fixed-target variant).
+      scale: magnitude parameter (signflip/foe/ipm/gauss/spectral/
+        ipm_greedy).
       z: optional override of the ALIE z-score.
+      bank: branch-name tuple when ``name='bank'`` (``None`` means the full
+        ``repro.adversary.DEFAULT_ATTACK_BANK``).
     """
 
     name: str = "alie"
     scale: float | None = None
     z: float | None = None
+    bank: tuple[str, ...] | None = None
 
 
 def apply_attack(cfg: AttackConfig, honest: jnp.ndarray, f: int,
@@ -154,4 +165,7 @@ def apply_attack(cfg: AttackConfig, honest: jnp.ndarray, f: int,
         return gauss(honest, f, key, std=cfg.scale or 1.0)
     if cfg.name == "zero":
         return zero(honest, f)
-    raise ValueError(f"unknown attack: {cfg.name!r}")
+    raise ValueError(
+        f"unknown attack: {cfg.name!r} (apply_attack handles the stateless "
+        "attacks none|linear|alie|signflip|ipm|foe|mimic|gauss|zero; "
+        "stateful adversaries live in repro.adversary)")

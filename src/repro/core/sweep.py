@@ -8,13 +8,16 @@ the grid is collapsed into as few compiled programs as the scenario set
 allows, in two stages:
 
 * **plan** (:func:`plan_grid`): partition the scenarios into maximal fusible
-  banks — per algorithm, every cell whose attack is in the mean/std linear
-  family (``attacks.linear_coeffs``) joins one bank; its attack coefficients,
-  aggregator-bank branch index (``aggregators.make_aggregator_bank``) and,
-  for ratio-traceable sparsifiers (``compression.TRACED_RATIO_KINDS``), its
-  keep-ratio become *traced data* (``algorithms.ScenarioParams``). What
-  cannot fuse (mimic/gauss/none attacks, singleton groups) stays a classic
-  per-scenario vmapped scan.
+  banks — per algorithm, every cell whose attack has an attack-bank branch
+  (``repro.adversary.bank_entry``: the stateless mean/std family AND the
+  stateful mimic/gauss/spectral/ipm_greedy adversaries) joins one bank; its
+  attack-bank branch index + parameter vector, aggregator-bank branch index
+  (``aggregators.make_aggregator_bank``) and, for ratio-traceable
+  sparsifiers (``compression.TRACED_RATIO_KINDS``), its keep-ratio become
+  *traced data* (``algorithms.ScenarioParams``). Stateful adversaries carry
+  their memory (``repro.adversary.AttackState``) inside the scan like any
+  other server state. What cannot fuse (``none`` attacks, singleton groups)
+  stays a classic per-scenario vmapped scan.
 * **execute** (:func:`execute_plan` / :func:`fused_grid_rollout`): each bank
   runs as ONE compiled XLA program — ``lax.scan`` over rounds, one flat
   ``vmap`` axis of size ``n_cells * n_seeds`` — laid out over mesh devices
@@ -31,6 +34,12 @@ CLI (the grid runner described in benchmarks/README.md):
     PYTHONPATH=src python -m repro.core.sweep \
         --algos rosdhb,dasha --attacks alie,foe,signflip --aggs cwtm,median \
         --seeds 4 --steps 300 --f 3 --ratio 0.1 [--no-fuse] [--no-shard]
+
+or, via the adversarial-scenario registry (``repro.adversary.registry``:
+named attack x heterogeneity x byzantine-fraction compositions):
+
+    PYTHONPATH=src python -m repro.core.sweep --scenario mixed-attacks
+    PYTHONPATH=src python -m repro.core.sweep --list-scenarios
 """
 
 from __future__ import annotations
@@ -60,6 +69,33 @@ class Scenario:
     cfg: alg.AlgorithmConfig
 
 
+#: Algorithms the grid runner knows how to build.
+KNOWN_ALGORITHMS: Tuple[str, ...] = ("rosdhb", "dasha", "robust_dgd", "dgd")
+
+
+def _validate_grid_names(algos: Sequence[str], attacks: Sequence[str],
+                         aggregators: Sequence[str]) -> None:
+    """Fail fast on unknown names, listing everything known — mirrors the
+    ``kappa_bound`` ValueError contract instead of erroring deep inside
+    ``plan_grid``/tracing."""
+    from repro.adversary import core as adv  # local: core <-> adversary cycle
+    for a in algos:
+        if a not in KNOWN_ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm: {a!r} (expected one of "
+                f"{'|'.join(KNOWN_ALGORITHMS)})")
+    for a in attacks:
+        if a not in adv.KNOWN_ATTACKS:
+            raise ValueError(
+                f"unknown attack: {a!r} (expected one of "
+                f"{'|'.join(adv.KNOWN_ATTACKS)})")
+    for a in aggregators:
+        if a not in G.BANK_NAMES:
+            raise ValueError(
+                f"unknown aggregator: {a!r} (expected one of "
+                f"{'|'.join(G.BANK_NAMES)})")
+
+
 def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
                    attacks: Sequence[str] = ("alie",),
                    aggregators: Sequence[str] = ("cwtm",),
@@ -71,8 +107,11 @@ def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
 
     ``f`` is fixed across the grid so every scenario shares the worker count
     (and therefore one stacked batch pytree). ``dgd`` pairs with plain mean
-    (its defining non-robust corner) regardless of ``aggregators``.
+    (its defining non-robust corner) regardless of ``aggregators``. Unknown
+    algorithm/attack/aggregator names raise ``ValueError`` listing the
+    known names.
     """
+    _validate_grid_names(algos, attacks, aggregators)
     out = []
     for algo, attack, agg in itertools.product(algos, attacks, aggregators):
         aggregator = (G.AggregatorConfig(name="mean") if algo == "dgd"
@@ -222,15 +261,18 @@ class FusedBank:
     """One maximal fusible group: ``n_cells`` scenarios sharing ONE compiled
     program, their differences carried as traced :class:`ScenarioParams`.
 
-    ``cfg`` is the executable bank configuration: ``attack='linear'`` and
-    ``aggregator.name='bank'`` with the branch set restricted to the rules
-    the group actually uses (under vmap a switch computes every branch per
-    lane, so smaller banks are cheaper).
+    ``cfg`` is the executable bank configuration: ``attack='bank'`` (the
+    switch-based attack bank of ``repro.adversary`` — its branch set
+    restricted to the adversaries the group actually uses, stateless linear
+    family and stateful attacks alike) and ``aggregator.name='bank'`` with
+    the rule set restricted likewise (under vmap a switch computes every
+    branch per lane, so smaller banks are cheaper).
     """
 
     cfg: alg.AlgorithmConfig
     scenarios: Tuple[Scenario, ...]
     coeffs: Tuple[Tuple[float, float], ...]
+    attack_idx: Tuple[int, ...]
     agg_idx: Tuple[int, ...]
     ratios: Optional[Tuple[float, ...]]  # None -> ratio stays static config
 
@@ -242,6 +284,7 @@ class FusedBank:
         """Stack the per-cell traced parameters on a leading cell axis."""
         return alg.ScenarioParams(
             attack_coeffs=jnp.asarray(self.coeffs, jnp.float32),
+            attack_idx=jnp.asarray(self.attack_idx, jnp.int32),
             agg_idx=jnp.asarray(self.agg_idx, jnp.int32),
             ratio=(jnp.asarray(self.ratios, jnp.float32)
                    if self.ratios is not None else None))
@@ -283,33 +326,37 @@ def plan_grid(scenarios: Sequence[Scenario], *,
     """Partition ``scenarios`` into maximal fusible banks.
 
     Cells fuse when they share an algorithm and every static field of its
-    config, and differ only along traced axes: a mean/std-family attack
-    (coefficients), the aggregator rule +/- NNM (bank branch index), and —
-    for :data:`repro.core.compression.TRACED_RATIO_KINDS` sparsifiers — the
+    config, and differ only along traced axes: the attack — stateless
+    mean/std family *and* stateful adversaries (mimic/gauss/spectral/
+    ipm_greedy) alike, as an attack-bank branch index + parameter vector
+    (``repro.adversary.bank_entry``) — the aggregator rule +/- NNM (bank
+    branch index), and, for
+    :data:`repro.core.compression.TRACED_RATIO_KINDS` sparsifiers, the
     keep-ratio. The aggregator's ``f``/``geomed_iters`` and everything else
     must match (they are baked into the compiled branches). Groups of one
-    and non-linear attacks fall back to per-scenario programs.
+    and non-bankable attacks (``none``) fall back to per-scenario programs.
     """
+    from repro.adversary import core as adv  # local: core <-> adversary cycle
     singles: List[Scenario] = []
     if not fuse:
         return GridPlan(banks=(), singles=tuple(scenarios))
     groups: Dict[alg.AlgorithmConfig,
-                 List[Tuple[Scenario, Tuple[float, float]]]] = {}
+                 List[Tuple[Scenario, Tuple[str, Tuple[float, float]]]]] = {}
     for sc in scenarios:
         cfg = sc.cfg
-        coeffs = A.linear_coeffs(cfg.attack, cfg.n_workers, cfg.f)
-        if coeffs is None:
+        entry = adv.bank_entry(cfg.attack, cfg.n_workers, cfg.f)
+        if entry is None:
             singles.append(sc)
             continue
         sp = cfg.sparsifier
         key = dataclasses.replace(
             cfg,
-            attack=A.AttackConfig(name="linear"),
+            attack=A.AttackConfig(name="bank"),
             aggregator=dataclasses.replace(cfg.aggregator, name="bank",
                                            pre_nnm=False, bank=None),
             sparsifier=(dataclasses.replace(sp, ratio=1.0)
                         if sp.kind in C.TRACED_RATIO_KINDS else sp))
-        groups.setdefault(key, []).append((sc, coeffs))
+        groups.setdefault(key, []).append((sc, entry))
 
     banks: List[FusedBank] = []
     for key, group in groups.items():
@@ -317,24 +364,28 @@ def plan_grid(scenarios: Sequence[Scenario], *,
             singles.append(group[0][0])
             continue
         entries: List[Tuple[str, bool]] = []
-        for sc, _ in group:
+        attack_entries: List[str] = []
+        for sc, (branch, _) in group:
             a = sc.cfg.aggregator
             e = (a.name, bool(a.pre_nnm) and a.name != "mean")
             if e not in entries:
                 entries.append(e)
+            if branch not in attack_entries:
+                attack_entries.append(branch)
         bank_agg = dataclasses.replace(
             group[0][0].cfg.aggregator, name="bank", pre_nnm=False,
             bank=tuple(entries))
+        bank_attack = A.AttackConfig(name="bank", bank=tuple(attack_entries))
         ratios = tuple(sc.cfg.sparsifier.ratio for sc, _ in group)
         trace_ratio = (group[0][0].cfg.sparsifier.kind
                        in C.TRACED_RATIO_KINDS and len(set(ratios)) > 1)
         exec_cfg = dataclasses.replace(
-            group[0][0].cfg,
-            attack=A.AttackConfig(name="linear"), aggregator=bank_agg)
+            group[0][0].cfg, attack=bank_attack, aggregator=bank_agg)
         banks.append(FusedBank(
             cfg=exec_cfg,
             scenarios=tuple(sc for sc, _ in group),
-            coeffs=tuple(c for _, c in group),
+            coeffs=tuple(c for _, (_, c) in group),
+            attack_idx=tuple(attack_entries.index(b) for _, (b, _) in group),
             agg_idx=tuple(G.bank_index(sc.cfg.aggregator, tuple(entries))
                           for sc, _ in group),
             ratios=ratios if trace_ratio else None))
@@ -505,11 +556,12 @@ def quadratic_testbed(n_workers: int, d: int = 64, spread: float = 0.1,
 
 
 def _mnist_testbed(n_workers: int, per_worker: int = 800, batch: int = 60,
-                   seed: int = 0):
-    from repro.data import SyntheticMNIST
+                   seed: int = 0, alpha_het: Optional[float] = None):
+    from repro.adversary.heterogeneity import dirichlet_mnist
     from repro.models import cnn_accuracy, cnn_init, cnn_loss
 
-    ds = SyntheticMNIST(n_workers=n_workers, per_worker=per_worker, seed=seed)
+    ds = dirichlet_mnist(n_workers=n_workers, alpha=alpha_het,
+                         per_worker=per_worker, seed=seed)
     eval_fn = lambda p, b: {"acc": cnn_accuracy(p, b)}  # noqa: E731
     return (cnn_loss, cnn_init(jax.random.PRNGKey(0)),
             ds.worker_batches(batch), eval_fn, ds.eval_batch)
@@ -525,6 +577,13 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
     p.add_argument("--algos", default="rosdhb")
     p.add_argument("--attacks", default="alie")
     p.add_argument("--aggs", default="cwtm")
+    p.add_argument("--scenario", default=None,
+                   help="named registry scenario (attack x heterogeneity x "
+                        "byzantine-fraction composition, see "
+                        "--list-scenarios); overrides --algos/--attacks/"
+                        "--aggs/--f/--n-honest/--ratio/--testbed")
+    p.add_argument("--list-scenarios", action="store_true",
+                   help="print the scenario registry and exit")
     p.add_argument("--seeds", type=int, default=4, help="number of seeds")
     p.add_argument("--steps", type=int, default=300)
     p.add_argument("--f", type=int, default=3)
@@ -549,19 +608,34 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
     p.add_argument("--out", default=None, help="optional JSON output path")
     args = p.parse_args(argv)
 
-    scenarios = grid_scenarios(
-        args.algos.split(","), args.attacks.split(","), args.aggs.split(","),
-        n_honest=args.n_honest, f=args.f, ratio=args.ratio, gamma=args.gamma)
+    if args.list_scenarios:
+        from repro.adversary import registry as R
+        print(R.describe())
+        return []
+    alpha_het = None
+    if args.scenario is not None:
+        from repro.adversary import registry as R
+        spec = R.get_spec(args.scenario)  # ValueError lists known names
+        scenarios = spec.expand()
+        n = spec.n_workers
+        testbed, alpha_het = spec.testbed, spec.alpha_het
+    else:
+        scenarios = grid_scenarios(
+            args.algos.split(","), args.attacks.split(","),
+            args.aggs.split(","), n_honest=args.n_honest, f=args.f,
+            ratio=args.ratio, gamma=args.gamma)
+        n = args.n_honest + args.f
+        testbed = args.testbed
     if args.plan:
         print(plan_grid(scenarios, fuse=args.fuse).describe())
         return []
     seeds = list(range(args.seeds))
-    n = args.n_honest + args.f
-    if args.testbed == "quadratic":
+    if testbed == "quadratic":
         loss_fn, params0, batch_fn, _ = quadratic_testbed(n)
         eval_fn = eval_batch = None
     else:
-        loss_fn, params0, batch_fn, eval_fn, eval_batch = _mnist_testbed(n)
+        loss_fn, params0, batch_fn, eval_fn, eval_batch = _mnist_testbed(
+            n, alpha_het=alpha_het)
     rows = run_scenarios(scenarios, loss_fn=loss_fn, params0=params0,
                          batches=batch_fn, seeds=seeds, steps=args.steps,
                          eval_fn=eval_fn, eval_batch=eval_batch,

@@ -52,9 +52,12 @@ class SyntheticMNIST:
             protos.append(img.astype(np.float32))
         self.prototypes = np.stack(protos)  # [10, 28, 28]
 
-        # label proportions per worker
+        # label proportions per worker: the Dirichlet(alpha) split of
+        # repro.adversary.heterogeneity (exposed as label_props so the
+        # (G, B)-dissimilarity probes can correlate skew with gradients)
         props = rng.dirichlet([self.alpha_het] * self.n_classes,
                               size=self.n_workers)
+        self.label_props = props
         self.images = np.zeros((self.n_workers, self.per_worker, 28, 28, 1),
                                np.float32)
         self.labels = np.zeros((self.n_workers, self.per_worker), np.int32)

@@ -196,6 +196,21 @@ def _sds(shape, dtype, mesh, pspec):
                                 sharding=NamedSharding(mesh, pspec))
 
 
+def _attack_state_specs(algo: alg.AlgorithmConfig, d: int, mesh: Mesh):
+    """Abstract ``repro.adversary.AttackState`` matching ``alg.init_state``:
+    the ``[d]`` memory slots shard over the server (coordinate) axes like
+    the momentum bank; ``None`` for stateless attacks (the shared
+    ``needs_attack_state`` predicate keeps this locked to the real state)."""
+    from repro.adversary import core as adv
+    if not adv.needs_attack_state(algo.attack.name, algo.f):
+        return None
+    vec = _sds((d,), jnp.float32, mesh, P(sp.server_axes(mesh)))
+    return adv.AttackState(
+        vec=vec, mu=vec,
+        scalars=_sds((adv.NUM_SCALARS,), jnp.float32, mesh, P(None)),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
 def train_input_specs(plan: TrainPlan, mesh: Mesh):
     """(state, batch) ShapeDtypeStructs for ``jit(train_step).lower``."""
     cfg = plan.model
@@ -209,14 +224,15 @@ def train_input_specs(plan: TrainPlan, mesh: Mesh):
     mdt = jnp.dtype(plan.algo.momentum_dtype)
     bank = _sds((n, d), mdt, mesh, P(None, sp.server_axes(mesh)))
     ph = _sds((1, 1), mdt, mesh, P(None, None))
+    atk = _attack_state_specs(plan.algo, d, mesh)
     if plan.algo.name == "dasha":
         server = alg.ServerState(bank, bank,
                                  _sds((n, d), jnp.float32, mesh,
                                       P(None, sp.server_axes(mesh))),
-                                 jax.ShapeDtypeStruct((), jnp.int32))
+                                 jax.ShapeDtypeStruct((), jnp.int32), atk)
     else:
         server = alg.ServerState(bank, ph, ph,
-                                 jax.ShapeDtypeStruct((), jnp.int32))
+                                 jax.ShapeDtypeStruct((), jnp.int32), atk)
     state = TrainState(
         params=params, server=server,
         step=jax.ShapeDtypeStruct((), jnp.int32),

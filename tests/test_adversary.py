@@ -1,0 +1,477 @@
+"""Adversary subsystem: stateful attack banks, (G,B)-heterogeneity, registry.
+
+Acceptance (ISSUE 3):
+* a mixed grid of >= 6 attacks (mimic, gauss, and the adaptive spectral
+  attack included) x 3 aggregators compiles to ONE program per algorithm
+  bank, and stateful-bank trajectories match the legacy per-round
+  ``apply_attack``-style loop bit-for-bit for mimic/gauss;
+* Dirichlet partitioner label skew is monotone in alpha and the (G, B)
+  probe reports higher G for alpha=0.1 than for i.i.d. splits.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adversary import (
+    ADVERSARIES, DEFAULT_ATTACK_BANK, ScenarioSpec, attack_index, bank_entry,
+    dirichlet_mnist, expand_scenario, gb_probe, get_spec, init_attack_state,
+    is_stateful, label_histograms, label_skew, make_attack_bank,
+    partition_pool,
+)
+from repro.adversary import registry as R
+from repro.core import (
+    AggregatorConfig, AlgorithmConfig, AttackConfig, Simulator,
+    SparsifierConfig, attacks as A, grid_scenarios, init_state, plan_grid,
+    quadratic_testbed, server_round, stack_batches,
+)
+from repro.core.sweep import fused_grid_rollout, rollout_over_seeds
+
+N, F, D, STEPS = 13, 3, 32, 12
+H = N - F
+
+
+def _honest_seq(steps=STEPS, h=H, d=D, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (steps, h, d))
+
+
+def _cfg(attack="alie", agg="cwtm", ratio=0.2):
+    return AlgorithmConfig(
+        name="rosdhb", n_workers=N, f=F, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=ratio),
+        aggregator=AggregatorConfig(name=agg, f=F, pre_nnm=True),
+        attack=AttackConfig(name=attack, z=1.5 if attack == "alie" else None))
+
+
+# --------------------------------------------------------------------------
+# Adversary API + attack bank
+# --------------------------------------------------------------------------
+
+
+def test_attack_state_slab_is_uniform():
+    st = init_attack_state(7)
+    assert st.vec.shape == (7,) and st.mu.shape == (7,)
+    assert st.scalars.shape == (4,) and st.step.shape == ()
+    assert st.step.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("name", ["mimic", "gauss", "spectral", "ipm_greedy"])
+def test_bank_scan_matches_per_round_loop_bit_for_bit(name):
+    """ACCEPTANCE: the fused bank inside ``lax.scan`` reproduces the legacy
+    *execution protocol* — one jitted dispatch per round (`Adversary.step`
+    for stateful names, `apply_attack` for stateless ones) — EXACTLY: same
+    byz payloads, same carried state.  NOTE this gates fused-vs-per-round
+    execution, not pre-PR attack semantics: `mimic` on the simulator path
+    now MEANS the tracked variant (see
+    test_simulator_mimic_is_the_tracked_variant)."""
+    honest_seq = _honest_seq()
+    keys = jax.random.split(jax.random.PRNGKey(7), STEPS)
+    cfg = AttackConfig(name=name)
+    branch, coeffs = bank_entry(cfg, N, F)
+    idx = jnp.asarray(attack_index(branch), jnp.int32)
+    cvec = jnp.asarray(coeffs, jnp.float32)
+    bank = make_attack_bank(DEFAULT_ATTACK_BANK, F)
+
+    def step(state, inp):
+        h, k = inp
+        state, byz = bank(state, h, k, idx, cvec)
+        return state, byz
+
+    final, byz_scan = jax.lax.scan(step, init_attack_state(D),
+                                   (honest_seq, keys))
+
+    # legacy per-round loop: one jitted dispatch per round (the
+    # Simulator.run_per_round protocol), stateless attacks through
+    # apply_attack, stateful through the registry step
+    if is_stateful(name):
+        loop_step = jax.jit(
+            lambda st, h, k: ADVERSARIES[name].step(st, h, F, k, cvec))
+    else:
+        loop_step = jax.jit(
+            lambda st, h, k: (st._replace(step=st.step + 1),
+                              A.apply_attack(cfg, h, F, key=k)))
+    state = init_attack_state(D)
+    byz_loop = []
+    for t in range(STEPS):
+        state, byz = loop_step(state, honest_seq[t], keys[t])
+        byz_loop.append(np.asarray(byz))
+
+    np.testing.assert_array_equal(np.asarray(byz_scan),
+                                  np.stack(byz_loop), err_msg=name)
+    assert int(final.step) == STEPS
+
+
+def test_bank_linear_branch_matches_apply_attack():
+    """The linear branch with alie coefficients == stateless alie."""
+    x = _honest_seq(1)[0]
+    cfg = AttackConfig(name="alie", z=1.5)
+    branch, coeffs = bank_entry(cfg, N, F)
+    bank = make_attack_bank(DEFAULT_ATTACK_BANK, F)
+    _, byz = bank(init_attack_state(D), x, jax.random.PRNGKey(0),
+                  jnp.asarray(attack_index(branch), jnp.int32),
+                  jnp.asarray(coeffs, jnp.float32))
+    np.testing.assert_allclose(np.asarray(byz),
+                               np.asarray(A.alie(x, F, z=1.5)),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_mimic_tracks_the_outlier_worker():
+    """Under heterogeneity the tracked mimic should lock onto the honest
+    worker that dominates the update variance, not worker 0."""
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(STEPS, H, D)).astype(np.float32) * 0.05
+    direction = np.zeros(D, np.float32)
+    direction[3] = 1.0
+    base[:, 5, :] += 4.0 * direction  # worker 5 is the persistent outlier
+    honest_seq = jnp.asarray(base)
+    state = init_attack_state(D)
+    step = ADVERSARIES["mimic"].step
+    for t in range(STEPS):
+        state, byz = step(state, honest_seq[t], F, jax.random.PRNGKey(t),
+                          jnp.zeros(2))
+    np.testing.assert_array_equal(np.asarray(byz[0]),
+                                  np.asarray(honest_seq[-1][5]))
+    assert byz.shape == (F, D)
+
+
+def test_spectral_power_iteration_finds_top_direction():
+    """The carried power iteration converges to the planted top covariance
+    direction, and the payload shifts the honest mean along it."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(STEPS, H, D)).astype(np.float32)
+    x[..., 0] *= 6.0  # dominant variance along e0
+    state = init_attack_state(D)
+    step = ADVERSARIES["spectral"].step
+    coeffs = jnp.asarray([1.5, 0.0])
+    for t in range(STEPS):
+        state, byz = step(state, jnp.asarray(x[t]), F, jax.random.PRNGKey(t),
+                          coeffs)
+    v = np.asarray(state.vec)
+    assert abs(v[0]) / (np.linalg.norm(v) + 1e-12) > 0.9
+    mu = x[-1].mean(0)
+    shift = np.asarray(byz[0]) - mu
+    cos = abs(shift @ v) / (np.linalg.norm(shift) * np.linalg.norm(v) + 1e-12)
+    assert cos > 0.99
+
+
+def test_ipm_greedy_state_and_payload():
+    """Epsilon-greedy IPM sends -scale * honest mean with scale in the arm
+    set, remembers the honest mean, and updates arm values."""
+    honest_seq = _honest_seq(8)
+    coeffs = jnp.asarray([0.5, 5.0])
+    state = init_attack_state(D)
+    step = ADVERSARIES["ipm_greedy"].step
+    for t in range(8):
+        state, byz = step(state, honest_seq[t], F, jax.random.PRNGKey(t),
+                          coeffs)
+        mu = np.asarray(honest_seq[t].mean(0))
+        ratios = np.asarray(byz[0]) / np.where(np.abs(mu) > 1e-9, mu, 1.0)
+        scale = -np.median(ratios)
+        assert np.isclose(scale, 0.5, rtol=1e-4) or np.isclose(
+            scale, 5.0, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(state.mu), mu, rtol=1e-6)
+    vals = np.asarray(state.scalars[:2])
+    assert np.all(np.isfinite(vals)) and vals.max() > 0.0
+
+
+def test_make_attack_bank_rejects_unknown_entries():
+    with pytest.raises(ValueError, match="unknown attack-bank"):
+        make_attack_bank(("linear", "bogus"), F)
+    with pytest.raises(ValueError, match="not a branch"):
+        attack_index("mimic", ("linear", "gauss"))
+
+
+# --------------------------------------------------------------------------
+# Simulator integration: stateful attacks in the scan carry / fused banks
+# --------------------------------------------------------------------------
+
+
+def test_simulator_mimic_is_the_tracked_variant():
+    """DELIBERATE semantic change (PR 3): ``AttackConfig(name='mimic')`` on
+    the simulator/server_round path now runs the *tracked* mimic (online
+    power-iteration target), not ``attacks.mimic``'s fixed target 0 —
+    pre-PR mimic trajectories are not reproducible by design.  The
+    stateless fixed-target variant remains available as ``attacks.mimic`` /
+    ``apply_attack``."""
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(H, D)).astype(np.float32) * 0.05
+    base[5] += 3.0  # worker 5 dominates the variance; target 0 does not
+    honest = jnp.asarray(base)
+    cfg = _cfg("mimic")
+    st = init_state(cfg, D)
+    wire = jnp.concatenate([jnp.zeros((F, D)), honest])
+    grads = wire  # rosdhb with ratio-1 sparsifier would distort; use robust_dgd
+    cfg_raw = dataclasses.replace(cfg, name="robust_dgd")
+    _, new_st, _ = server_round(cfg_raw, st, grads, jax.random.PRNGKey(0))
+    assert int(new_st.attack.step) == 1  # tracked state advanced
+    tracked = ADVERSARIES["mimic"].step(
+        init_attack_state(D), honest, F, jax.random.PRNGKey(0),
+        jnp.zeros(2))[1]
+    legacy = A.apply_attack(A.AttackConfig(name="mimic"), honest, F)
+    np.testing.assert_array_equal(np.asarray(tracked[0]),
+                                  np.asarray(honest[5]))
+    np.testing.assert_array_equal(np.asarray(legacy[0]),
+                                  np.asarray(honest[0]))
+    assert not np.array_equal(np.asarray(tracked), np.asarray(legacy))
+
+
+def test_stateful_static_attack_threads_state_through_scan():
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(N, D)
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=_cfg("mimic"))
+    state, metrics = sim.rollout(sim.init(0), batch_fn, STEPS)
+    assert int(state.server.attack.step) == STEPS
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+    # stateless configs keep the legacy (leafless) attack slot
+    sim2 = Simulator(loss_fn=loss_fn, params0=params0, cfg=_cfg("alie"))
+    assert sim2.init(0).server.attack is None
+
+
+def test_plan_grid_fuses_stateful_attacks_into_bank():
+    scenarios = grid_scenarios(["rosdhb"], ["alie", "mimic", "gauss"],
+                               ["cwtm"], n_honest=10, f=3)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1 and not plan.singles
+    bank = plan.banks[0]
+    assert bank.cfg.attack.name == "bank"
+    assert bank.cfg.attack.bank == ("linear", "mimic", "gauss")
+    assert bank.attack_idx == (0, 1, 2)
+
+
+def test_mixed_stateful_grid_is_one_program_and_matches_per_scenario():
+    """ACCEPTANCE core: 6 attacks (mimic, gauss, spectral included) x 3
+    aggregators -> ONE compiled program whose cells match the per-scenario
+    (statically configured) rollouts."""
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(N, D)
+    scenarios = grid_scenarios(
+        ["rosdhb"], ["alie", "signflip", "foe", "mimic", "gauss", "spectral"],
+        ["cwtm", "median", "geomed"], n_honest=H, f=F, ratio=0.2)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1 and plan.banks[0].n_cells == 18
+    bank = plan.banks[0]
+    seeds = [0, 1]
+    batches = stack_batches(batch_fn, STEPS)
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    states, metrics = fused_grid_rollout(sim, bank.scenario_params(), seeds,
+                                         batches, shard=False)
+    assert sim.round_traces == 1  # ONE compiled program for the whole bank
+    for c, sc in enumerate(bank.scenarios):
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg)
+        ref_states, ref_metrics = rollout_over_seeds(ref, seeds, batches)
+        np.testing.assert_allclose(
+            np.asarray(states.params_flat[c]),
+            np.asarray(ref_states.params_flat),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"][c]), np.asarray(ref_metrics["loss"]),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+
+
+def test_stateful_attack_without_state_raises_clearly():
+    """A stateful attack on a server state missing the memory slab must
+    fail loudly at trace time, not with an AttributeError deep inside."""
+    cfg = _cfg("mimic")
+    st = init_state(cfg, D)._replace(attack=None)
+    with pytest.raises(ValueError, match="memory slab"):
+        server_round(cfg, st, jnp.ones((N, D)), jax.random.PRNGKey(0))
+
+
+def _load_launch_steps():
+    """Import repro/launch/steps.py WITHOUT the package __init__ —
+    repro.launch.__init__ pulls in mesh.py, which needs jax.sharding.AxisType
+    (absent on the 0.4.x jax in CI; steps.py itself is 0.4.x-clean)."""
+    import importlib.util
+    import os
+    import sys
+    path = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
+                        "launch", "steps.py")
+    spec = importlib.util.spec_from_file_location("_launch_steps_test", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod  # dataclass annotation resolution needs it
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_launch_attack_state_specs_match_init_state():
+    """The launch path's abstract input specs must mirror init_state's
+    attack slab (stateful attacks train at LLM scale too)."""
+    from jax.sharding import Mesh
+    steps = _load_launch_steps()
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    specs = steps._attack_state_specs(_cfg("mimic"), 16, mesh)
+    real = init_state(_cfg("mimic"), 16).attack
+    assert specs is not None
+    s_leaves = jax.tree_util.tree_leaves(specs)
+    r_leaves = jax.tree_util.tree_leaves(real)
+    assert len(s_leaves) == len(r_leaves)
+    for s, r in zip(s_leaves, r_leaves):
+        assert s.shape == r.shape and s.dtype == r.dtype
+    # stateless attacks keep the leafless slot on both paths
+    assert steps._attack_state_specs(_cfg("alie"), 16, mesh) is None
+    assert init_state(_cfg("alie"), 16).attack is None
+
+
+def test_rosdhb_resists_stateful_attacks():
+    """CWTM+NNM keeps RoSDHB near the honest optimum under the new
+    stateful adversaries too."""
+    loss_fn, params0, batch_fn, targets = quadratic_testbed(N, D)
+    honest_opt = np.asarray(targets[F:]).mean(0)
+    batches = stack_batches(batch_fn, 250)
+    for attack in ("mimic", "spectral", "ipm_greedy"):
+        sim = Simulator(loss_fn=loss_fn, params0=params0,
+                        cfg=dataclasses.replace(_cfg(attack), gamma=0.1))
+        state, _ = sim.rollout(sim.init(3), batches)
+        params = np.asarray(state.params_flat[:D])
+        assert np.linalg.norm(params - honest_opt) < 0.5, attack
+
+
+# --------------------------------------------------------------------------
+# Heterogeneity: Dirichlet partitioners + the (G, B) probe
+# --------------------------------------------------------------------------
+
+
+def test_dirichlet_label_skew_monotone_in_alpha():
+    """ACCEPTANCE: skew(alpha=0.1) > skew(alpha=1) > skew(iid)."""
+    skews = {}
+    for alpha in (0.1, 1.0, None):
+        ds = dirichlet_mnist(n_workers=8, alpha=alpha, per_worker=300, seed=0)
+        skews[alpha] = label_skew(label_histograms(ds.labels, ds.n_classes))
+    assert skews[0.1] > skews[1.0] > skews[None]
+    assert skews[None] < 0.1  # iid split is near-uniform
+    assert skews[0.1] > 0.4  # strong concentration
+
+
+def test_partition_pool_is_a_partition_and_skewed():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, size=4000)
+    parts = partition_pool(np.random.default_rng(1), labels, 8, alpha=0.1)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)  # disjoint cover
+    hists = np.stack([
+        np.bincount(labels[p], minlength=10) / max(len(p), 1) for p in parts])
+    iid_parts = partition_pool(np.random.default_rng(1), labels, 8,
+                               alpha=1e6)
+    iid_hists = np.stack([
+        np.bincount(labels[p], minlength=10) / max(len(p), 1)
+        for p in iid_parts])
+    assert label_skew(hists) > label_skew(iid_hists)
+
+
+def _linear_testbed(alpha, n_workers=8, per_worker=120, bs=48, seed=0):
+    ds = dirichlet_mnist(n_workers=n_workers, alpha=alpha,
+                         per_worker=per_worker, seed=seed)
+    batch = ds.worker_batches(bs)(0)
+
+    def loss_fn(params, b):
+        x = b["images"].reshape((b["images"].shape[0], -1))
+        logits = x @ params["w"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(
+            logp, b["labels"][:, None], axis=1))
+
+    params0 = {"w": jnp.zeros((28 * 28, ds.n_classes))}
+    return loss_fn, params0, batch
+
+
+def test_gb_probe_reports_higher_G_under_heterogeneity():
+    """ACCEPTANCE: the empirical (G, B) probe sees more gradient
+    dissimilarity on a Dirichlet(0.1) split than on the i.i.d. split."""
+    loss_fn, params0, batch_het = _linear_testbed(alpha=0.1)
+    _, _, batch_iid = _linear_testbed(alpha=None)
+    est_het = gb_probe(loss_fn, params0, batch_het, n_probes=6, radius=0.05)
+    est_iid = gb_probe(loss_fn, params0, batch_iid, n_probes=6, radius=0.05)
+    assert est_het.G > est_iid.G
+    assert est_het.G > 0.0
+    assert np.all(est_het.dissimilarity >= 0.0)
+    assert est_het.B >= 0.0 and est_iid.B >= 0.0
+
+
+def test_gb_probe_zero_for_identical_workers():
+    """Identical worker data -> zero dissimilarity -> G = B = 0."""
+    batch = {"target": jnp.ones((6, D))}
+
+    def loss_fn(params, b):
+        return 0.5 * jnp.sum(jnp.square(params["w"] - b["target"]))
+
+    est = gb_probe(loss_fn, {"w": jnp.zeros(D)}, batch, n_probes=4,
+                   radius=0.5)
+    assert est.G == 0.0 and est.B == 0.0
+    with pytest.raises(ValueError, match="at least 2"):
+        gb_probe(loss_fn, {"w": jnp.zeros(D)}, batch, n_probes=1)
+
+
+# --------------------------------------------------------------------------
+# Scenario registry + CLI name validation (satellite)
+# --------------------------------------------------------------------------
+
+
+def test_registry_expands_named_scenarios():
+    cells = expand_scenario("mixed-attacks")
+    assert len(cells) == 18  # 6 attacks x 3 aggregators
+    assert all(c.label.startswith("mixed-attacks/") for c in cells)
+    attacks = {c.cfg.attack.name for c in cells}
+    assert {"mimic", "gauss", "spectral"} <= attacks
+    # the acceptance property: the whole named scenario is ONE program
+    assert plan_grid(cells).n_programs == 1
+
+
+def test_registry_byz_fraction_axis():
+    cells = expand_scenario("byz-fraction")
+    fs = sorted({c.cfg.f for c in cells})
+    assert fs == [1, 2, 3, 4]
+    assert all(c.cfg.n_workers == 13 for c in cells)
+    assert all(f"/f{c.cfg.f}/" in c.label for c in cells)
+    # one bank per f (aggregator f is baked into compiled branches)
+    assert plan_grid(cells).n_programs == len(fs)
+
+
+def test_registry_heterogeneous_specs_carry_alpha():
+    assert get_spec("mimic-dirichlet01").alpha_het == 0.1
+    assert get_spec("mimic-iid").alpha_het is None
+    assert get_spec("mimic-dirichlet01").testbed == "mnist"
+
+
+def test_registry_unknown_name_lists_known():
+    with pytest.raises(ValueError, match="mixed-attacks"):
+        get_spec("not-a-scenario")
+
+
+def test_registry_register_roundtrip():
+    spec = ScenarioSpec("tmp-test", "temporary", attacks=("alie", "mimic"))
+    R.register(spec)
+    try:
+        assert get_spec("tmp-test") is spec
+        assert len(spec.expand()) == 2
+    finally:
+        del R.REGISTRY["tmp-test"]
+    bad = ScenarioSpec("tmp-bad", "bad f", byz_f=(99,))
+    with pytest.raises(ValueError, match="byz_f"):
+        bad.expand()
+
+
+def test_grid_scenarios_unknown_names_raise_with_known_lists():
+    """Satellite: the sweep CLI fails fast with the known-name list instead
+    of deep inside plan_grid/tracing."""
+    with pytest.raises(ValueError, match=r"unknown attack: 'bogus'.*mimic"):
+        grid_scenarios(["rosdhb"], ["bogus"], ["cwtm"])
+    with pytest.raises(ValueError,
+                       match=r"unknown algorithm: 'sgd'.*rosdhb"):
+        grid_scenarios(["sgd"], ["alie"], ["cwtm"])
+    with pytest.raises(ValueError,
+                       match=r"unknown aggregator: 'trimmed'.*cwtm"):
+        grid_scenarios(["rosdhb"], ["alie"], ["trimmed"])
+
+
+def test_sweep_cli_scenario_plan(capsys):
+    from repro.core import sweep
+    rows = sweep.main(["--scenario", "stateful-core", "--plan"])
+    assert rows == []
+    out = capsys.readouterr().out
+    assert "1 programs" in out
+    sweep.main(["--list-scenarios"])
+    out = capsys.readouterr().out
+    assert "mixed-attacks" in out and "byz-fraction" in out

@@ -1,4 +1,7 @@
-"""Sparsifier properties: unbiasedness, variance envelope, payload, masks."""
+"""Sparsifier properties: unbiasedness, variance envelope, payload, masks —
+under both static-config and traced keep-ratios (the fused grid axis)."""
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -76,9 +79,27 @@ def test_payload_counts(d, ratio):
     assert 1 <= k <= d
     # global sparsification sends no index bits (shared PRNG)
     assert C.payload_bytes(d, cfg, with_mask_indices=True) == 4 * k
+    # local sparsification charges ceil(log2(d)/8) bytes per index — NOT a
+    # flat 4 — so comm-to-threshold curves stay honest for small models
     loc = C.SparsifierConfig(kind="randk", ratio=ratio, local=True)
-    expected = 8 * k if ratio < 1.0 else 4 * k
+    idx = max(1, math.ceil(math.log2(d) / 8.0))
+    expected = (4 + idx) * k if ratio < 1.0 else 4 * k
     assert C.payload_bytes(d, loc, with_mask_indices=True) == expected
+
+
+def test_index_bytes_scales_with_log_dimension():
+    assert C.index_bytes(1) == 1
+    assert C.index_bytes(200) == 1
+    assert C.index_bytes(256) == 1  # 8 bits address 0..255
+    assert C.index_bytes(257) == 2
+    assert C.index_bytes(11_800) == 2  # the paper's CNN scale
+    assert C.index_bytes(1 << 16) == 2
+    assert C.index_bytes((1 << 16) + 1) == 3
+    assert C.index_bytes(1 << 26) == 4  # LLM scale: 4 bytes, the old flat rate
+    # small-d local payloads are strictly cheaper than the old accounting
+    loc = C.SparsifierConfig(kind="randk", ratio=0.25, local=True)
+    k = C.payload_floats(200, loc)
+    assert C.payload_bytes(200, loc, with_mask_indices=True) == 5 * k < 8 * k
 
 
 def test_compress_none_identity():
@@ -120,6 +141,92 @@ def test_natural_compression_unbiased_and_bounded():
     assert second <= 9 / 8 * float(jnp.sum(jnp.square(g))) * 1.05
     # wire cost ~9 bits/coordinate
     assert C.payload_bytes(1024, cfg) < 1024 * 4 / 3
+
+
+# --------------------------------------------------------------------------
+# Compressor contracts under static AND traced keep-ratios (satellite):
+# the fused grid axis feeds the ratio in as data, so the keep-ratio,
+# unbiasedness, and contraction properties must hold on both paths.
+# --------------------------------------------------------------------------
+
+
+@given(ratio=st.floats(0.1, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_traced_ratio_mask_matches_static(ratio):
+    """Contract: a traced ratio reproduces the static-config mask exactly
+    (same key), so fusing the ratio axis cannot change trajectories."""
+    d = 192
+    for kind in C.TRACED_RATIO_KINDS:
+        cfg = C.SparsifierConfig(kind=kind, ratio=ratio, block_size=8)
+        neutral = C.SparsifierConfig(kind=kind, ratio=1.0, block_size=8)
+        key = jax.random.PRNGKey(int(ratio * 1e6))
+        m_static = C.make_mask(key, d, cfg)
+        m_traced = C.make_mask(key, d, neutral, ratio=jnp.float32(ratio))
+        np.testing.assert_array_equal(np.asarray(m_static),
+                                      np.asarray(m_traced), err_msg=kind)
+
+
+@given(ratio=st.floats(0.1, 0.9))
+@settings(max_examples=5, deadline=None)
+def test_keep_ratio_static_and_traced(ratio):
+    """E[k]/d ~= ratio for the Bernoulli-family sparsifiers, on both the
+    static and the traced path."""
+    d = 256
+    for kind in C.TRACED_RATIO_KINDS:
+        cfg = C.SparsifierConfig(kind=kind, ratio=ratio, block_size=8)
+        keys = jax.random.split(jax.random.PRNGKey(3), 400)
+        dens_s = jax.vmap(lambda k: jnp.mean(C.make_mask(k, d, cfg)))(keys)
+        dens_t = jax.vmap(lambda k: jnp.mean(C.make_mask(
+            k, d, C.SparsifierConfig(kind=kind, ratio=1.0, block_size=8),
+            ratio=jnp.float32(ratio))))(keys)
+        assert abs(float(jnp.mean(dens_s)) - ratio) < 0.05, kind
+        assert abs(float(jnp.mean(dens_t)) - ratio) < 0.05, kind
+
+
+def test_randk_exact_keep_ratio_property():
+    """randk's k is exact (not just in expectation) for every ratio/d."""
+    for d in (17, 64, 201):
+        for ratio in (0.1, 0.33, 0.8):
+            cfg = C.SparsifierConfig(kind="randk", ratio=ratio)
+            m = C.make_mask(jax.random.PRNGKey(d), d, cfg)
+            assert int(np.asarray(m).sum()) == cfg.k(d)
+
+
+@pytest.mark.parametrize("kind", C.TRACED_RATIO_KINDS)
+def test_unbiasedness_under_traced_ratio(kind):
+    """E[(1/r)(g o mask)] = g when the ratio arrives as traced data."""
+    d, ratio = 64, 0.25
+    neutral = C.SparsifierConfig(kind=kind, ratio=1.0, block_size=8)
+    g = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    keys = jax.random.split(jax.random.PRNGKey(42), 4000)
+    r = jnp.float32(ratio)
+    est = jax.vmap(lambda k: C.compress(
+        g, C.make_mask(k, d, neutral, ratio=r), neutral, ratio=r))(keys)
+    mean = jnp.mean(est, axis=0)
+    assert float(jnp.max(jnp.abs(mean - g))) < 0.15 * float(
+        jnp.max(jnp.abs(g)) + 0.3)
+
+
+@pytest.mark.parametrize("traced", [False, True])
+def test_bernoulli_contraction_envelope(traced):
+    """E||C(g) - g||^2 = (1/r - 1)||g||^2 for Bernoulli masks (the alpha-
+    scaled variance bound of the paper's omega-compressor class), identical
+    on the static and traced paths."""
+    d, ratio = 80, 0.2
+    g = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    keys = jax.random.split(jax.random.PRNGKey(9), 4000)
+    if traced:
+        cfg = C.SparsifierConfig(kind="bernoulli", ratio=1.0)
+        r = jnp.float32(ratio)
+        est = jax.vmap(lambda k: C.compress(
+            g, C.make_mask(k, d, cfg, ratio=r), cfg, ratio=r))(keys)
+    else:
+        cfg = C.SparsifierConfig(kind="bernoulli", ratio=ratio)
+        est = jax.vmap(
+            lambda k: C.compress(g, C.make_mask(k, d, cfg), cfg))(keys)
+    var = float(jnp.mean(jnp.sum(jnp.square(est - g[None]), axis=1)))
+    bound = (1.0 / ratio - 1.0) * float(jnp.sum(jnp.square(g)))
+    assert 0.85 * bound <= var <= 1.15 * bound
 
 
 def test_clip_norm_bounds_worker_rows():

@@ -55,22 +55,23 @@ def test_plan_grid_fuses_attack_x_aggregator_per_algorithm():
     assert sorted(b.cfg.name for b in plan.banks) == ["dasha", "rosdhb"]
     assert all(b.n_cells == 6 for b in plan.banks)
     assert plan.n_cells == len(scenarios)
-    # executable bank configs: traced attack + restricted switch bank
+    # executable bank configs: traced attack bank + restricted switch bank
     for b in plan.banks:
-        assert b.cfg.attack.name == "linear"
+        assert b.cfg.attack.name == "bank"
+        assert b.cfg.attack.bank == ("linear",)  # only linear-family cells
         assert b.cfg.aggregator.name == "bank"
         assert set(b.cfg.aggregator.bank) == {("cwtm", True),
                                               ("median", True)}
 
 
-def test_plan_grid_nonlinear_attacks_and_singletons_fall_back():
-    scenarios = grid_scenarios(["rosdhb"], ["alie", "mimic", "gauss"],
+def test_plan_grid_none_attacks_and_singletons_fall_back():
+    # stateful attacks (mimic/gauss) now fuse — see test_adversary.py; only
+    # 'none' attacks and singleton groups stay per-scenario programs
+    scenarios = grid_scenarios(["rosdhb"], ["alie", "none"],
                                ["cwtm"], n_honest=10, f=3)
     plan = plan_grid(scenarios)
-    # mimic/gauss are outside the mean/std family; alie alone is a
-    # singleton group -> everything stays a per-scenario program
-    assert not plan.banks and len(plan.singles) == 3
-    assert plan_grid(scenarios, fuse=False).n_programs == 3
+    assert not plan.banks and len(plan.singles) == 2
+    assert plan_grid(scenarios, fuse=False).n_programs == 2
 
 
 def test_plan_grid_traces_ratio_only_for_traceable_kinds():
