@@ -1,6 +1,6 @@
 """One-program grid engine: fused/sharded sweep vs sequential Simulator runs.
 
-Four claims are measured (and all but the last gated):
+Five claims are measured (and all but the sharding one gated):
 
 1. **Attack fusion**: a 4-seed x 3-attack grid through ``repro.core.sweep``
    must be >= 1.2x faster wall-clock than sequential ``Simulator.run`` calls
@@ -23,7 +23,18 @@ Four claims are measured (and all but the last gated):
    cell matching its per-scenario (statically configured) rollout. This is
    the ISSUE-3 acceptance gate: adversary memory lives in the scan carry,
    so statefulness no longer breaks fusion.
-4. **Device sharding**: the same bank laid out over all visible devices
+4. **Cross-algorithm bank** (the ISSUE-4 Table-1 acceptance gate): the
+   paper's full algorithm axis — rosdhb, Byz-DASHA-PAGE, robust DGD, plain
+   DGD — x 3 attacks x 2 aggregators x 4 seeds must plan to ONE bank
+   (``lax.switch`` algorithm branches over the unified ``ServerState``,
+   per-cell hyperparameters as traced data) and trace the round body
+   exactly once, where the legacy per-algorithm partition
+   (``plan_grid(cross_algo=False)``) pays one compile per algorithm. Every
+   cell must match its per-algorithm-bank trajectory (single-algorithm
+   banks are bit-for-bit equal — pinned in tests/test_algo_bank.py; inside
+   the multi-branch switch XLA may fuse across branches and drift by an
+   ulp, so the gate compares at rtol=1e-5).
+5. **Device sharding**: the same bank laid out over all visible devices
    (``--shard`` path, ``repro.sharding.sweep_mesh``) must match the
    single-device rows exactly; the speedup is reported (force virtual CPU
    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` —
@@ -60,6 +71,9 @@ ATTACKS = ("alie", "foe", "signflip")
 GRID_ATTACKS = ("alie", "signflip", "ipm", "foe", "zero")
 GRID_AGGS = ("cwtm", "median", "geomed")
 STATEFUL_ATTACKS = ("alie", "signflip", "foe", "mimic", "gauss", "spectral")
+CROSS_ALGOS = ("rosdhb", "dasha", "robust_dgd", "dgd")
+CROSS_ATTACKS = ("alie", "foe", "signflip")
+CROSS_AGGS = ("cwtm", "median")
 
 
 def _attack_fusion_gate(loss_fn, params0, batch_fn, batches, scenarios):
@@ -234,8 +248,63 @@ def _stateful_grid(loss_fn, params0, batches):
             "speedup": t_seq / t_bank}
 
 
+def _cross_algo_grid(loss_fn, params0, batches):
+    """Claim 4 (ISSUE-4 Table-1 acceptance): 4 algorithms x 3 attacks x 2
+    aggregators = ONE compiled program matching the per-algorithm banks."""
+    scenarios = grid_scenarios(CROSS_ALGOS, CROSS_ATTACKS, CROSS_AGGS,
+                               n_honest=10, f=3, ratio=0.1, gamma=0.05)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1 and plan.banks[0].n_cells == len(scenarios), \
+        plan.describe()
+    bank = plan.banks[0]
+    assert set(bank.cfg.bank) == set(CROSS_ALGOS)
+
+    t0 = time.perf_counter()
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    _, metrics = fused_grid_rollout(
+        sim, bank.scenario_params(), SEEDS, batches, shard=False)
+    jax.block_until_ready(metrics["loss"])
+    t_bank = time.perf_counter() - t0
+    assert sim.round_traces == 1, (
+        f"cross-algorithm bank traced the round body {sim.round_traces}x; "
+        "expected ONE compiled program for the whole Table-1 grid")
+    fused_loss = {sc.label: np.asarray(metrics["loss"][c])
+                  for c, sc in enumerate(bank.scenarios)}
+
+    # baseline: the legacy per-algorithm banks — one compile per algorithm
+    per_plan = plan_grid(scenarios, cross_algo=False)
+    assert per_plan.n_programs == len(CROSS_ALGOS), per_plan.describe()
+    t0 = time.perf_counter()
+    traces = 0
+    for b in per_plan.banks:
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=b.cfg)
+        _, ref_metrics = fused_grid_rollout(
+            ref, b.scenario_params(), SEEDS, batches, shard=False)
+        jax.block_until_ready(ref_metrics["loss"])
+        traces += ref.round_traces
+        for c, sc in enumerate(b.scenarios):
+            np.testing.assert_allclose(
+                fused_loss[sc.label], np.asarray(ref_metrics["loss"][c]),
+                rtol=1e-5, atol=1e-7, err_msg=sc.label)
+    t_per = time.perf_counter() - t0
+    assert traces == len(CROSS_ALGOS), traces
+
+    n_cells = len(scenarios)
+    emit("sweep/cross_algo_one_program",
+         t_bank * 1e6 / (n_cells * len(SEEDS)),
+         f"total={t_bank:.2f}s compiles=1 cells={n_cells} "
+         f"algos={len(CROSS_ALGOS)}")
+    emit("sweep/cross_algo_per_algo_banks",
+         t_per * 1e6 / (n_cells * len(SEEDS)),
+         f"total={t_per:.2f}s compiles={traces} "
+         f"speedup_fused={t_per / t_bank:.1f}x")
+    return {"bank_s": t_bank, "per_algo_s": t_per,
+            "bank_compiles": sim.round_traces, "per_algo_compiles": traces,
+            "n_cells": n_cells, "speedup": t_per / t_bank}
+
+
 def _sharded_grid(loss_fn, params0, batches):
-    """Claim 4: the bank sharded across devices matches single-device."""
+    """Claim 5: the bank sharded across devices matches single-device."""
     n_dev = len(jax.devices())
     scenarios = grid_scenarios(["rosdhb"], GRID_ATTACKS, GRID_AGGS,
                                n_honest=10, f=3, ratio=0.1, gamma=0.05)
@@ -303,6 +372,8 @@ def run(out: str = "results/BENCH_sweep.json"):
            lambda: _one_program_grid(loss_fn, params0, batches))
     record("stateful_grid",
            lambda: _stateful_grid(loss_fn, params0, batches))
+    record("cross_algo_grid",
+           lambda: _cross_algo_grid(loss_fn, params0, batches))
     record("sharded", lambda: _sharded_grid(loss_fn, params0, batches))
     return results
 

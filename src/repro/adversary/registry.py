@@ -12,8 +12,12 @@
 
 plus the aggregator/algorithm grid, and expands into labelled
 ``repro.core.sweep.Scenario`` cells that ``plan_grid`` fuses into
-one-program banks.  The sweep CLI exposes the registry as
-``--scenario NAME`` / ``--list-scenarios``:
+one-program banks.  The *algorithm* axis fuses too (the ``lax.switch``
+algorithm bank over the unified server state, ``repro.core.algorithms``),
+so Table-1-style algo x attack x aggregator compositions — ``table1``,
+``table1-mini``, ``table1-cross-algo`` — compile to literally ONE XLA
+program.  The sweep CLI exposes the registry as ``--scenario NAME`` /
+``--list-scenarios``:
 
     PYTHONPATH=src python -m repro.core.sweep --scenario mixed-attacks
 
@@ -137,9 +141,24 @@ for _spec in (
         attacks=("alie",), byz_f=(1, 2, 3, 4)),
     ScenarioSpec(
         "table1-cross-algo",
-        "all four algorithms x {alie, foe}: the Table-1-style comparison",
+        "all four algorithms x {alie, foe}: the Table-1-style comparison"
+        " (ONE compiled program via the algorithm bank)",
         algos=("rosdhb", "dasha", "robust_dgd", "dgd"),
         attacks=("alie", "foe")),
+    ScenarioSpec(
+        "table1",
+        "the full Table-1 grid: 4 algorithms x 3 attacks x 2 robust rules,"
+        " fused into ONE compiled cross-algorithm program",
+        algos=("rosdhb", "dasha", "robust_dgd", "dgd"),
+        attacks=("alie", "foe", "signflip"),
+        aggregators=("cwtm", "median")),
+    ScenarioSpec(
+        "table1-mini",
+        "quickstart-sized Table-1 cut: 4 algorithms x {alie, foe} x"
+        " CWTM+NNM, 2 of 10 workers Byzantine, as one program"
+        " (examples/quickstart.py)",
+        algos=("rosdhb", "dasha", "robust_dgd", "dgd"),
+        attacks=("alie", "foe"), byz_f=(2,), n_workers=10),
     ScenarioSpec(
         "mimic-dirichlet01",
         "tracked mimic + alie on a strongly heterogeneous Dirichlet(0.1)"

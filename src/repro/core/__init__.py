@@ -23,10 +23,14 @@ from repro.core.aggregators import (
 )
 from repro.core.attacks import AttackConfig, apply_attack
 from repro.core.algorithms import (
+    ALGO_BANK,
     AlgorithmConfig,
     ScenarioParams,
     ServerState,
+    algo_index,
+    algo_payload_bytes,
     init_state,
+    make_algorithm_bank,
     server_round,
     apply_direction,
     theorem1_hparams,
@@ -35,7 +39,8 @@ from repro.core.simulator import Simulator, SimState, stack_batches
 from repro.core.sweep import (
     Scenario, GridPlan, FusedBank, KNOWN_ALGORITHMS, grid_scenarios,
     plan_grid, execute_plan, rollout_over_seeds, fused_attack_rollout,
-    fused_grid_rollout, run_scenarios, bytes_to_threshold, quadratic_testbed,
+    fused_grid_rollout, fused_grid_eval, run_scenarios, bytes_to_threshold,
+    quadratic_testbed,
 )
 
 __all__ = [
@@ -44,12 +49,13 @@ __all__ = [
     "AggregatorConfig", "make_aggregator", "make_aggregator_bank",
     "bank_index", "DEFAULT_BANK",
     "AttackConfig", "apply_attack",
-    "AlgorithmConfig", "ScenarioParams", "ServerState", "init_state",
+    "ALGO_BANK", "AlgorithmConfig", "ScenarioParams", "ServerState",
+    "algo_index", "algo_payload_bytes", "init_state", "make_algorithm_bank",
     "server_round", "apply_direction", "theorem1_hparams",
     "Simulator", "SimState", "stack_batches",
     "Scenario", "GridPlan", "FusedBank", "KNOWN_ALGORITHMS",
     "grid_scenarios", "plan_grid",
     "execute_plan", "rollout_over_seeds", "fused_attack_rollout",
-    "fused_grid_rollout", "run_scenarios",
+    "fused_grid_rollout", "fused_grid_eval", "run_scenarios",
     "bytes_to_threshold", "quadratic_testbed",
 ]

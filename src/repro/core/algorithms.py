@@ -15,17 +15,24 @@ Algorithms:
                        corner, [3]).
   * ``dgd``          — plain compressed DGD, non-robust (SOTA-without-
                        robustness corner, [1]).
+  * ``bank``         — the switch-based **algorithm bank**
+                       (:func:`make_algorithm_bank`): a ``lax.switch`` over
+                       the four update rules above, selected per grid cell by
+                       the traced ``ScenarioParams.algo_idx`` — the paper's
+                       whole Table-1 cross-algorithm comparison as ONE
+                       compiled XLA program (see ``repro.core.sweep``).
 
 The Byzantine adversary is simulated *on the wire quantity* each algorithm
 actually transmits: compressed gradients for rosdhb/dgd, raw gradients for
 robust_dgd, compressed differences (applied at the mirror level) for dasha.
+:func:`algo_payload_bytes` accounts for those wire formats individually.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +52,9 @@ class AlgorithmConfig:
     """Full specification of a Byzantine-robust compressed training run.
 
     Attributes:
-      name: ``rosdhb`` | ``dasha`` | ``robust_dgd`` | ``dgd``.
+      name: ``rosdhb`` | ``dasha`` | ``robust_dgd`` | ``dgd`` | ``bank``
+        (the switch-based algorithm bank; branch selected per grid cell by a
+        traced ``ScenarioParams.algo_idx``, see :func:`make_algorithm_bank`).
       n_workers: total workers n.
       f: number of Byzantine workers (the first ``f`` indices).
       gamma: learning rate.
@@ -61,6 +70,10 @@ class AlgorithmConfig:
       server_compute_dtype: dtype the server does its momentum/aggregation
         math in (f32 default; bf16 halves the per-round transient at LLM
         scale — a beyond-paper optimization ablated in EXPERIMENTS §Perf).
+      bank: algorithm-branch tuple when ``name='bank'`` (``None`` means the
+        full :data:`ALGO_BANK`). Per-cell hyperparameters (momentum beta,
+        DASHA's ``a``, the step size) then arrive as traced
+        ``ScenarioParams`` data, not from this config.
     """
 
     name: str = "rosdhb"
@@ -79,6 +92,7 @@ class AlgorithmConfig:
     momentum_dtype: str = "float32"
     server_compute_dtype: str = "float32"
     clip_norm: Optional[float] = None  # per-worker L2 clip before compression
+    bank: Optional[Tuple[str, ...]] = None
 
     @property
     def honest(self) -> int:
@@ -94,6 +108,12 @@ class AlgorithmConfig:
                 f"gamma={self.gamma} too large for Theorem-1 beta schedule "
                 f"(needs gamma <= 1/(24 L) = {1.0 / (24 * self.smoothness_L)})")
         return math.sqrt(val)
+
+    def resolved_mvr_a(self) -> float:
+        """DASHA's MVR coefficient ``a`` (defaults to ``1 - beta``)."""
+        if self.mvr_a is not None:
+            return self.mvr_a
+        return 1.0 - (self.beta if self.beta is not None else 0.9)
 
 
 def theorem1_hparams(L: float, ratio: float,
@@ -132,28 +152,52 @@ class ScenarioParams(NamedTuple):
       (``aggregators.make_aggregator_bank``) replacing the static rule.
     ``ratio``: scalar keep-ratio replacing ``cfg.sparsifier.ratio``
       (only for ``compression.TRACED_RATIO_KINDS``).
+    ``algo_idx``: scalar int32 branch index into the **algorithm bank**
+      (:func:`make_algorithm_bank`; requires ``cfg.name == 'bank'``) — the
+      cross-algorithm fusion axis.
+    ``hparams``: ``[4]`` per-cell algorithm hyperparameters
+      ``(beta, mvr_a, 1-beta, 1-mvr_a)`` — the RoSDHB momentum coefficient
+      and DASHA's MVR coefficient as traced data (branches read the slots
+      they use and ignore the rest). The complements are carried
+      *precomputed* (double-precision at plan time) so the traced branches
+      consume exactly the constants the static path folds in — that is what
+      keeps bank and standalone trajectories bit-for-bit equal.
+    ``gamma``: scalar step size, consumed by the *simulator*'s parameter
+      update (``apply_direction``), so cells with different learning rates
+      share one compiled program too.
     """
 
     attack_coeffs: Optional[jnp.ndarray] = None
     attack_idx: Optional[jnp.ndarray] = None
     agg_idx: Optional[jnp.ndarray] = None
     ratio: Optional[jnp.ndarray] = None
+    algo_idx: Optional[jnp.ndarray] = None
+    hparams: Optional[jnp.ndarray] = None
+    gamma: Optional[jnp.ndarray] = None
 
 
 class ServerState(NamedTuple):
-    """Server-side algorithm state.
+    """Server-side algorithm state — ONE uniform shape for every algorithm.
 
     ``momentum``: RoSDHB per-worker momentum bank ``[n, D]`` (Algorithm 1,
       step 5) — also reused as DASHA's MVR momentum.
-    ``mirror``: DASHA's server-side gradient mirrors ``h_i`` ``[n, D]``
-      (zeros-shaped [1, 1] placeholder for other algorithms).
-    ``prev_grad``: previous-round per-worker gradients for DASHA's MVR
-      correction (placeholder otherwise).
+    ``mirror``: DASHA's server-side gradient mirrors ``h_i`` ``[n, D]``.
+    ``prev_grad``: previous-round per-worker gradients ``[n, D]`` for
+      DASHA's MVR correction.
     ``step``: iteration counter t.
     ``attack``: the adversary's carried memory
       (``repro.adversary.AttackState``) for stateful attacks and attack
       banks; ``None`` (no pytree leaves) for stateless attacks, so legacy
       configs keep their exact state structure.
+
+    The ``mirror``/``prev_grad`` slots are *padded but inert* for
+    rosdhb/dgd/robust_dgd: their update rules pass both through bit-for-bit
+    untouched (property-tested in tests/test_algo_bank.py), exactly like the
+    unused slots of the ``AttackState`` slab. The uniform shape is what lets
+    :func:`make_algorithm_bank` switch between algorithms on *traced* data —
+    the whole Table-1 algorithm axis in one compiled program — at a known
+    memory cost of ``n*D`` momentum-dtype + ``n*D`` f32 extra floats per
+    non-dasha trajectory (see ROADMAP).
     """
 
     momentum: jnp.ndarray
@@ -181,14 +225,15 @@ def _init_attack_state(cfg: AlgorithmConfig, d: int) -> Optional[Any]:
 
 def init_state(cfg: AlgorithmConfig, d: int) -> ServerState:
     n = cfg.n_workers
+    if cfg.name != "bank" and cfg.name not in ALGO_STEPS:
+        raise ValueError(
+            f"unknown algorithm: {cfg.name!r} (expected one of "
+            f"{'|'.join(ALGO_BANK)} or 'bank')")
     mdt = jnp.dtype(cfg.momentum_dtype)
     zeros = jnp.zeros((n, d), mdt)
     atk = _init_attack_state(cfg, d)
-    if cfg.name == "dasha":
-        return ServerState(zeros, zeros, jnp.zeros((n, d), jnp.float32),
-                           jnp.zeros((), jnp.int32), atk)
-    ph = jnp.zeros((1, 1), mdt)
-    return ServerState(zeros, ph, ph, jnp.zeros((), jnp.int32), atk)
+    return ServerState(zeros, zeros, jnp.zeros((n, d), jnp.float32),
+                       jnp.zeros((), jnp.int32), atk)
 
 
 # --------------------------------------------------------------------------
@@ -248,6 +293,245 @@ def _byzantine_overwrite(cfg: AlgorithmConfig, atk_state: Optional[Any],
     return jnp.concatenate([byz.astype(wire.dtype), honest], axis=0), atk_state
 
 
+# --------------------------------------------------------------------------
+# Per-algorithm update branches (uniform signature — the algorithm bank
+# switches between these on a traced index; the static path calls the same
+# functions directly, so bank and standalone rounds share ONE code path)
+# --------------------------------------------------------------------------
+
+# step(cfg, agg, state, grads, mask_key, atk_key, hparams, attack_params,
+#      attack_idx, ratio) -> (direction [D], new ServerState).
+# ``hparams`` is indexable as (beta, mvr_a, 1-beta, 1-mvr_a) — a tuple of
+# python floats on the static path, a traced [4] vector inside a bank; each
+# branch reads the slots it uses. Every branch preserves the uniform
+# ServerState structure and leaves the slots it does not own bit-for-bit
+# untouched.
+AlgoStepFn = Callable[..., Tuple[jnp.ndarray, ServerState]]
+
+
+def _rosdhb_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
+                 attack_params, attack_idx, ratio):
+    # Steps 1-4: masks (global or local) + unbiased reconstruction.
+    n, d = grads.shape
+    sp = cfg.sparsifier
+    masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype, ratio=ratio)
+    g_tilde = C.compress(grads, masks, sp, ratio=ratio)
+    g_tilde, atk = _byzantine_overwrite(cfg, state.attack, g_tilde, atk_key,
+                                        attack_params, attack_idx)
+    # Step 5: per-worker server momentum (math dtype configurable — bf16
+    # halves the per-round transient at LLM scale, EXPERIMENTS §Perf).
+    beta, one_m_beta = hparams[0], hparams[2]
+    cdt = jnp.dtype(cfg.server_compute_dtype)
+    m = (beta * state.momentum.astype(cdt)
+         + one_m_beta * g_tilde.astype(cdt))
+    # Step 6: robust aggregation of momenta.
+    r = agg(m)
+    new = state._replace(momentum=m.astype(jnp.dtype(cfg.momentum_dtype)),
+                         step=state.step + 1, attack=atk)
+    return r, new
+
+
+def _dgd_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
+              attack_params, attack_idx, ratio):
+    # Compressed DGD, non-robust: plain mean of unbiased estimates (the
+    # defining non-robust corner — the aggregator config is ignored).
+    n, d = grads.shape
+    sp = cfg.sparsifier
+    masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype, ratio=ratio)
+    g_tilde = C.compress(grads, masks, sp, ratio=ratio)
+    g_tilde, atk = _byzantine_overwrite(cfg, state.attack, g_tilde, atk_key,
+                                        attack_params, attack_idx)
+    r = jnp.mean(g_tilde, axis=0)
+    return r, state._replace(step=state.step + 1, attack=atk)
+
+
+def _robust_dgd_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
+                     attack_params, attack_idx, ratio):
+    # Robust DGD without compression: aggregate raw gradients (the
+    # sparsifier config is ignored).
+    g, atk = _byzantine_overwrite(cfg, state.attack, grads, atk_key,
+                                  attack_params, attack_idx)
+    r = agg(g)
+    return r, state._replace(step=state.step + 1, attack=atk)
+
+
+def _dasha_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
+                attack_params, attack_idx, ratio):
+    # Byz-DASHA-PAGE, p=1 branch.
+    #   MVR momentum: m_i^t = g_i^t + (1-a)(m_i^{t-1} - g_i^{t-1})
+    #   wire:         c_i^t = C((m_i^t - m_i^{t-1})
+    #                          + b (m_i^{t-1} - h_i^{t-1}))
+    #                 — compressed momentum difference plus DASHA's
+    #                 mirror-drift correction with b = 1/(2 alpha), which
+    #                 contracts E[h - m] at rate b while keeping the
+    #                 alpha-scaled compression variance bounded.
+    #   mirror:       h_i^t = h_i^{t-1} + c_i^t
+    #   direction:    R^t = F(h_1^t ... h_n^t)
+    n, d = grads.shape
+    # Byz-DASHA-PAGE runs an INDEPENDENT unbiased compressor per worker
+    # (the analysis of [29] requires independent randomness; there is no
+    # coordinated-mask trick — that is RoSDHB's contribution), so each
+    # worker draws its own mask regardless of the grid-shared sparsifier's
+    # ``local`` flag. algo_payload_bytes prices the matching wire format:
+    # k values + coordinate indices.
+    sp = dataclasses.replace(cfg.sparsifier, local=True)
+    one_m_a = hparams[3]
+    first = state.step == 0
+    m_prev = state.momentum.astype(jnp.float32)
+    h_prev = state.mirror.astype(jnp.float32)
+    g32 = grads.astype(jnp.float32)
+    m = jnp.where(first, g32, g32 + one_m_a * (m_prev - state.prev_grad))
+    masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype, ratio=ratio)
+    alpha = (1.0 / ratio) if ratio is not None else sp.alpha
+    b = 1.0 / (2.0 * alpha)
+    diff = C.compress((m - m_prev) + b * (m_prev - h_prev), masks, sp,
+                      ratio=ratio)
+    h = h_prev + diff
+    h, atk = _byzantine_overwrite(cfg, state.attack, h, atk_key,
+                                  attack_params, attack_idx)
+    r = agg(h)
+    mdt = jnp.dtype(cfg.momentum_dtype)
+    new = ServerState(momentum=m.astype(mdt), mirror=h.astype(mdt),
+                      prev_grad=g32, step=state.step + 1, attack=atk)
+    return r, new
+
+
+#: Branch order of the full algorithm bank (and the set of known algorithms).
+ALGO_BANK: Tuple[str, ...] = ("rosdhb", "dasha", "robust_dgd", "dgd")
+
+ALGO_STEPS = {
+    "rosdhb": _rosdhb_step,
+    "dasha": _dasha_step,
+    "robust_dgd": _robust_dgd_step,
+    "dgd": _dgd_step,
+}
+
+
+def algo_index(name: str, entries: Optional[Sequence[str]] = None) -> int:
+    """Branch index of algorithm ``name`` inside ``entries`` (default the
+    full :data:`ALGO_BANK`)."""
+    entries = tuple(entries) if entries is not None else ALGO_BANK
+    try:
+        return entries.index(name)
+    except ValueError:
+        raise ValueError(
+            f"algorithm {name!r} is not a branch of the algorithm bank "
+            f"{entries}") from None
+
+
+def static_hparams(cfg: AlgorithmConfig) -> Tuple[float, float, float, float]:
+    """The ``(beta, mvr_a, 1-beta, 1-mvr_a)`` hyperparameter vector of a
+    statically configured algorithm — the values a fused bank carries as its
+    traced ``ScenarioParams.hparams`` cell vector. Slots an algorithm does
+    not use are 0/1 (inert). The complements are computed here in python
+    double precision so the traced branches see the exact f32 constants the
+    static path folds in (bank == standalone bit-for-bit)."""
+    beta = cfg.resolved_beta() if cfg.name == "rosdhb" else 0.0
+    a = cfg.resolved_mvr_a() if cfg.name == "dasha" else 0.0
+    return (beta, a, 1.0 - beta, 1.0 - a)
+
+
+def make_algorithm_bank(cfg: AlgorithmConfig,
+                        entries: Optional[Sequence[str]] = None):
+    """Build the switch-based algorithm bank
+    ``step(state, grads, mask_key, atk_key, agg, algo_idx, hparams, ...)``.
+
+    A ``lax.switch`` over uniformly-shaped algorithm branches — every branch
+    maps the shared :class:`ServerState` + per-worker gradients to a descent
+    direction + the same state shape — selected by the *traced* integer
+    ``algo_idx``. Per-branch hyperparameters (RoSDHB's momentum ``beta``,
+    DASHA's MVR ``a``) arrive as the traced ``hparams`` ``[4]`` vector, so
+    the paper's entire cross-algorithm Table-1 comparison compiles to ONE
+    XLA program per fused bank (see ``repro.core.sweep.plan_grid``).
+
+    ``entries`` (default ``cfg.bank`` or the full :data:`ALGO_BANK`) is the
+    branch set; as with the attack/aggregator banks, under ``vmap`` a switch
+    computes every branch per lane — restrict ``entries`` to the algorithms
+    the grid actually uses. Static config (sparsifier kind, aggregator
+    ``f``, dtypes, ``n_workers``/``f``) is shared by every branch.
+    """
+    entries = tuple(entries if entries is not None
+                    else (cfg.bank or ALGO_BANK))
+    if not entries:
+        raise ValueError("algorithm bank needs at least one entry")
+    unknown = [e for e in entries if e not in ALGO_STEPS]
+    if unknown:
+        raise ValueError(
+            f"unknown algorithm-bank entries {unknown} (known algorithms: "
+            f"{'|'.join(ALGO_BANK)})")
+
+    def apply(state: ServerState, grads: jnp.ndarray, mask_key: jax.Array,
+              atk_key: jax.Array, agg, algo_idx: jnp.ndarray,
+              hparams: jnp.ndarray,
+              attack_params: Optional[jnp.ndarray] = None,
+              attack_idx: Optional[jnp.ndarray] = None,
+              ratio: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, ServerState]:
+        branches = tuple(
+            (lambda step: lambda st, g: step(
+                cfg, agg, st, g, mask_key, atk_key, hparams,
+                attack_params, attack_idx, ratio))(ALGO_STEPS[e])
+            for e in entries)
+        if len(branches) == 1:
+            return branches[0](state, grads)
+        return jax.lax.switch(algo_idx, branches, state, grads)
+
+    return apply
+
+
+# --------------------------------------------------------------------------
+# Per-algorithm uplink accounting
+# --------------------------------------------------------------------------
+
+
+def algo_payload_bytes(cfg: AlgorithmConfig, d: int,
+                       bytes_per_value: int = 4) -> int:
+    """Per-worker uplink bytes per round under ``cfg``'s ACTUAL wire format.
+
+    The four algorithms transmit different quantities, so a shared formula
+    misprices the comparison:
+
+    * ``rosdhb`` / ``dgd`` — the sparsified gradient: ``k`` values; index
+      bytes only for *local* masks (the coordinated global mask is a shared
+      PRNG draw, RoSDHB's headline communication trick).
+    * ``robust_dgd`` — the raw uncompressed gradient: ``d`` values, no
+      indices.
+    * ``dasha`` — the compressed per-worker momentum *difference*
+      (Byz-DASHA-PAGE): each worker runs its own independent compressor (the
+      analysis of [29] requires independent unbiasedness; there is no shared
+      coordinated mask — ``_dasha_step`` simulates per-worker masks to
+      match), so the wire always carries the ``k`` values PLUS their
+      coordinate indices (``compression.index_bytes`` each).
+    """
+    sp = cfg.sparsifier
+    if cfg.name == "robust_dgd":
+        return d * bytes_per_value
+    if cfg.name in ("rosdhb", "dgd"):
+        return C.payload_bytes(d, sp, bytes_per_value=bytes_per_value,
+                               with_mask_indices=True)
+    if cfg.name == "dasha":
+        return C.payload_bytes(d, dataclasses.replace(sp, local=True),
+                               bytes_per_value=bytes_per_value,
+                               with_mask_indices=True)
+    raise ValueError(
+        f"no single wire format for algorithm {cfg.name!r} — a bank config "
+        "mixes algorithms; account per cell with each cell's own config")
+
+
+def _bank_payload_floats(entries: Sequence[str], d: int,
+                         sp: C.SparsifierConfig,
+                         ratio: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Traced ``[n_entries]`` per-branch payload-float counts (the bank's
+    per-round aux must stay uniform across branches)."""
+    if ratio is not None:
+        k = jnp.maximum(1.0, jnp.round(ratio * d))
+    else:
+        k = float(C.payload_floats(d, sp))
+    vals = [jnp.asarray(float(d) if e == "robust_dgd" else k, jnp.float32)
+            for e in entries]
+    return jnp.stack(vals)
+
+
 def server_round(cfg: AlgorithmConfig, state: ServerState,
                  grads: jnp.ndarray, key: jax.Array,
                  attack_params: Optional[jnp.ndarray] = None,
@@ -269,10 +553,11 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
         axis. Its ``attack_coeffs`` supersede ``attack_params``;
         ``attack_idx`` selects the attack-bank branch
         (``attack.name='bank'``); ``agg_idx`` switches the aggregator bank;
-        ``ratio`` overrides the sparsifier keep-ratio. Static config fills
-        in whatever is ``None``. Stateful adversaries carry their memory in
-        ``state.attack`` (threaded through the scan like every other
-        server-state component).
+        ``ratio`` overrides the sparsifier keep-ratio; ``algo_idx`` selects
+        the algorithm-bank branch (``cfg.name='bank'``) with per-cell
+        ``hparams``. Static config fills in whatever is ``None``. Stateful
+        adversaries carry their memory in ``state.attack`` (threaded
+        through the scan like every other server-state component).
 
     Returns:
       (direction R [D] to descend, next state, aux dict).
@@ -284,12 +569,13 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
                                 keepdims=True)
         scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norms, 1e-12))
         grads = (grads * scale.astype(grads.dtype))
-    ratio = attack_idx = None
+    ratio = attack_idx = hparams = None
     if scenario is not None:
         if scenario.attack_coeffs is not None:
             attack_params = scenario.attack_coeffs
         attack_idx = scenario.attack_idx
         ratio = scenario.ratio
+        hparams = scenario.hparams
     mask_key, atk_key = jax.random.split(key)
     if scenario is not None and scenario.agg_idx is not None:
         bank = G.make_aggregator_bank(cfg.aggregator)
@@ -297,84 +583,43 @@ def server_round(cfg: AlgorithmConfig, state: ServerState,
     else:
         agg = G.make_aggregator(cfg.aggregator)
     sp = cfg.sparsifier
-    mdt = jnp.dtype(cfg.momentum_dtype)
-    aux = {"payload_floats_per_worker": C.payload_floats(d, sp)}
 
-    if cfg.name == "rosdhb":
-        # Steps 1-4: masks (global or local) + unbiased reconstruction.
-        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype,
-                             ratio=ratio)
-        g_tilde = C.compress(grads, masks, sp, ratio=ratio)
-        g_tilde, atk = _byzantine_overwrite(cfg, state.attack, g_tilde,
-                                            atk_key, attack_params,
-                                            attack_idx)
-        # Step 5: per-worker server momentum (math dtype configurable —
-        # bf16 halves the per-round transient at LLM scale, EXPERIMENTS
-        # section Perf).
-        beta = cfg.resolved_beta()
-        cdt = jnp.dtype(cfg.server_compute_dtype)
-        m = (beta * state.momentum.astype(cdt)
-             + (1.0 - beta) * g_tilde.astype(cdt))
-        # Step 6: robust aggregation of momenta.
-        r = agg(m)
-        new = state._replace(momentum=m.astype(mdt), step=state.step + 1,
-                             attack=atk)
-        return r, new, aux
+    if cfg.name == "bank":
+        # The cross-algorithm fusion axis: lax.switch over update rules on
+        # the traced algo_idx, per-cell hyperparameters as traced data.
+        if scenario is None or scenario.algo_idx is None:
+            raise ValueError(
+                "algorithm bank needs a traced branch selector: pass a "
+                "ScenarioParams with algo_idx (and hparams) — see "
+                "sweep.FusedBank.scenario_params")
+        if hparams is None:
+            raise ValueError(
+                "algorithm bank needs per-cell hyperparameters: pass a "
+                "ScenarioParams with hparams=[beta, mvr_a, 1-beta, 1-mvr_a] "
+                "(see algorithms.static_hparams)")
+        entries = tuple(cfg.bank or ALGO_BANK)
+        r, new = make_algorithm_bank(cfg, entries)(
+            state, grads, mask_key, atk_key, agg, scenario.algo_idx,
+            hparams, attack_params, attack_idx, ratio)
+        payload = _bank_payload_floats(entries, d, sp,
+                                       ratio)[scenario.algo_idx]
+        return r, new, {"payload_floats_per_worker": payload}
 
-    if cfg.name == "dgd":
-        # Compressed DGD, non-robust: plain mean of unbiased estimates.
-        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype,
-                             ratio=ratio)
-        g_tilde = C.compress(grads, masks, sp, ratio=ratio)
-        g_tilde, atk = _byzantine_overwrite(cfg, state.attack, g_tilde,
-                                            atk_key, attack_params,
-                                            attack_idx)
-        r = jnp.mean(g_tilde, axis=0)
-        return r, state._replace(step=state.step + 1, attack=atk), aux
-
-    if cfg.name == "robust_dgd":
-        # Robust DGD without compression: aggregate raw gradients.
-        g, atk = _byzantine_overwrite(cfg, state.attack, grads, atk_key,
-                                      attack_params, attack_idx)
-        aux["payload_floats_per_worker"] = d
-        r = agg(g)
-        return r, state._replace(step=state.step + 1, attack=atk), aux
-
-    if cfg.name == "dasha":
-        # Byz-DASHA-PAGE, p=1 branch.
-        #   MVR momentum: m_i^t = g_i^t + (1-a)(m_i^{t-1} - g_i^{t-1})
-        #   wire:         c_i^t = C((m_i^t - m_i^{t-1})
-        #                          + b (m_i^{t-1} - h_i^{t-1}))
-        #                 — compressed momentum difference plus DASHA's
-        #                 mirror-drift correction with b = 1/(2 alpha), which
-        #                 contracts E[h - m] at rate b while keeping the
-        #                 alpha-scaled compression variance bounded.
-        #   mirror:       h_i^t = h_i^{t-1} + c_i^t
-        #   direction:    R^t = F(h_1^t ... h_n^t)
-        a = cfg.mvr_a if cfg.mvr_a is not None else (1.0 - (cfg.beta or 0.9))
-        first = state.step == 0
-        m_prev = state.momentum.astype(jnp.float32)
-        h_prev = state.mirror.astype(jnp.float32)
-        m = jnp.where(first, grads,
-                      grads + (1.0 - a) * (m_prev - state.prev_grad))
-        masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype,
-                             ratio=ratio)
-        alpha = (1.0 / ratio) if ratio is not None else sp.alpha
-        b = 1.0 / (2.0 * alpha)
-        diff = C.compress((m - m_prev) + b * (m_prev - h_prev), masks, sp,
-                          ratio=ratio)
-        h = h_prev + diff
-        h, atk = _byzantine_overwrite(cfg, state.attack, h, atk_key,
-                                      attack_params, attack_idx)
-        r = agg(h)
-        new = ServerState(momentum=m.astype(mdt), mirror=h.astype(mdt),
-                          prev_grad=grads, step=state.step + 1, attack=atk)
-        return r, new, aux
-
-    raise ValueError(f"unknown algorithm: {cfg.name!r}")
+    try:
+        step = ALGO_STEPS[cfg.name]
+    except KeyError:
+        raise ValueError(f"unknown algorithm: {cfg.name!r}") from None
+    if hparams is None:
+        hparams = static_hparams(cfg)
+    r, new = step(cfg, agg, state, grads, mask_key, atk_key, hparams,
+                  attack_params, attack_idx, ratio)
+    aux = {"payload_floats_per_worker": (d if cfg.name == "robust_dgd"
+                                         else C.payload_floats(d, sp))}
+    return r, new, aux
 
 
 def apply_direction(params_flat: jnp.ndarray, r: jnp.ndarray,
-                    gamma: float) -> jnp.ndarray:
-    """Step 7: theta^t = theta^{t-1} - gamma R^t."""
+                    gamma) -> jnp.ndarray:
+    """Step 7: theta^t = theta^{t-1} - gamma R^t (``gamma`` may be a traced
+    per-cell scalar inside a fused bank)."""
     return params_flat - gamma * r

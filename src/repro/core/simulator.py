@@ -33,7 +33,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import algorithms as alg
-from repro.core import compression as C
 from repro.utils import tree as T
 
 
@@ -106,8 +105,11 @@ class Simulator:
                                               mask_key,
                                               attack_params=attack_params,
                                               scenario=scenario)
-            new_flat = alg.apply_direction(state.params_flat, r,
-                                           self.cfg.gamma)
+            # per-cell step size: a fused bank carries gamma as traced data
+            gamma = self.cfg.gamma
+            if scenario is not None and scenario.gamma is not None:
+                gamma = scenario.gamma
+            new_flat = alg.apply_direction(state.params_flat, r, gamma)
             metrics = {
                 "loss": jnp.mean(losses[self.cfg.f:]),  # honest mean loss
                 "grad_norm": jnp.linalg.norm(jnp.mean(grads[self.cfg.f:],
@@ -172,12 +174,16 @@ class Simulator:
         return T.tree_unravel(state.params_flat, self.spec)
 
     def payload_bytes_per_round(self) -> int:
-        """Total honest uplink bytes per round (the paper's comm-cost metric).
+        """Total uplink bytes per round (the paper's comm-cost metric) under
+        this algorithm's ACTUAL wire format
+        (:func:`repro.core.algorithms.algo_payload_bytes`: rosdhb/dgd send
+        sparsified gradients, dasha compressed differences with indices,
+        robust_dgd raw gradients).
 
         The paper counts communication of all n workers (the server cannot
-        know who is honest); we follow that convention."""
-        per = C.payload_bytes(self.d, self.cfg.sparsifier, bytes_per_value=4,
-                              with_mask_indices=True)
+        know who is honest); we follow that convention. Raises ``ValueError``
+        for bank configs — a bank mixes wire formats; account per cell."""
+        per = alg.algo_payload_bytes(self.cfg, self.d, bytes_per_value=4)
         return per * self.cfg.n_workers
 
     def rollout(self, state: SimState, batches: Any,

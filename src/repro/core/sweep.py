@@ -8,22 +8,31 @@ the grid is collapsed into as few compiled programs as the scenario set
 allows, in two stages:
 
 * **plan** (:func:`plan_grid`): partition the scenarios into maximal fusible
-  banks — per algorithm, every cell whose attack has an attack-bank branch
+  banks — every cell whose attack has an attack-bank branch
   (``repro.adversary.bank_entry``: the stateless mean/std family AND the
   stateful mimic/gauss/spectral/ipm_greedy adversaries) joins one bank; its
   attack-bank branch index + parameter vector, aggregator-bank branch index
-  (``aggregators.make_aggregator_bank``) and, for ratio-traceable
-  sparsifiers (``compression.TRACED_RATIO_KINDS``), its keep-ratio become
-  *traced data* (``algorithms.ScenarioParams``). Stateful adversaries carry
-  their memory (``repro.adversary.AttackState``) inside the scan like any
-  other server state. What cannot fuse (``none`` attacks, singleton groups)
-  stays a classic per-scenario vmapped scan.
+  (``aggregators.make_aggregator_bank``), the *algorithm* as an
+  algorithm-bank branch index + per-cell hyperparameters
+  (``algorithms.make_algorithm_bank``: rosdhb/dasha/robust_dgd/dgd over the
+  uniformly-shaped ``ServerState``, beta / DASHA's ``a`` / the step size as
+  data) and, for ratio-traceable sparsifiers
+  (``compression.TRACED_RATIO_KINDS``), its keep-ratio become *traced data*
+  (``algorithms.ScenarioParams``). Stateful adversaries carry their memory
+  (``repro.adversary.AttackState``) inside the scan like any other server
+  state. What cannot fuse (``none`` attacks, singleton groups) stays a
+  classic per-scenario vmapped scan. ``cross_algo=False`` restores the
+  legacy one-bank-per-algorithm partition (the equivalence baseline for the
+  cross-algorithm gate in benchmarks/bench_sweep.py).
 * **execute** (:func:`execute_plan` / :func:`fused_grid_rollout`): each bank
   runs as ONE compiled XLA program — ``lax.scan`` over rounds, one flat
   ``vmap`` axis of size ``n_cells * n_seeds`` — laid out over mesh devices
   with ``jax.sharding`` (``NamedSharding`` over the batch dim via
   ``repro.sharding.sweep_mesh``). The flat axis is padded to a multiple of
-  the device count and pad rows are masked out of the results table.
+  the device count and pad rows are masked out of the results table. Eval
+  is fused too (:func:`fused_grid_eval`): the bank's final states are
+  evaluated in ONE vmapped ``eval_fn`` call over the same sharded flat
+  axis, instead of one call per cell.
 
 Early stopping is handled post-hoc from the stacked on-device metrics
 (:func:`bytes_to_threshold`), matching the paper's comm-bytes-to-tau
@@ -69,8 +78,9 @@ class Scenario:
     cfg: alg.AlgorithmConfig
 
 
-#: Algorithms the grid runner knows how to build.
-KNOWN_ALGORITHMS: Tuple[str, ...] = ("rosdhb", "dasha", "robust_dgd", "dgd")
+#: Algorithms the grid runner knows how to build (= the algorithm bank's
+#: branch set).
+KNOWN_ALGORITHMS: Tuple[str, ...] = alg.ALGO_BANK
 
 
 def _validate_grid_names(algos: Sequence[str], attacks: Sequence[str],
@@ -107,19 +117,24 @@ def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
 
     ``f`` is fixed across the grid so every scenario shares the worker count
     (and therefore one stacked batch pytree). ``dgd`` pairs with plain mean
-    (its defining non-robust corner) regardless of ``aggregators``. Unknown
-    algorithm/attack/aggregator names raise ``ValueError`` listing the
-    known names.
+    (its defining non-robust corner) regardless of ``aggregators``. The
+    sparsifier config is shared by every algorithm so the whole
+    algo x attack x aggregator product fuses into ONE cross-algorithm bank
+    (``robust_dgd``'s update rule ignores it — it transmits raw gradients,
+    and :func:`repro.core.algorithms.algo_payload_bytes` accounts for that
+    wire format). Unknown algorithm/attack/aggregator names raise
+    ``ValueError`` listing the known names.
     """
     _validate_grid_names(algos, attacks, aggregators)
     out = []
+    sparsifier = C.SparsifierConfig(kind="randk", ratio=ratio, local=local)
     for algo, attack, agg in itertools.product(algos, attacks, aggregators):
-        aggregator = (G.AggregatorConfig(name="mean") if algo == "dgd"
+        # dgd's mean carries the grid's f so its (inert) aggregator config
+        # stays key-compatible with the robust cells' bank branches
+        aggregator = (G.AggregatorConfig(name="mean", f=max(f, 1))
+                      if algo == "dgd"
                       else G.AggregatorConfig(name=agg, f=max(f, 1),
                                               pre_nnm=pre_nnm))
-        sparsifier = C.SparsifierConfig(
-            kind="randk", ratio=1.0 if algo == "robust_dgd" else ratio,
-            local=local)
         cfg = alg.AlgorithmConfig(
             name=algo, n_workers=n_honest + f, f=f, gamma=gamma, beta=beta,
             sparsifier=sparsifier, aggregator=aggregator,
@@ -266,7 +281,12 @@ class FusedBank:
     restricted to the adversaries the group actually uses, stateless linear
     family and stateful attacks alike) and ``aggregator.name='bank'`` with
     the rule set restricted likewise (under vmap a switch computes every
-    branch per lane, so smaller banks are cheaper).
+    branch per lane, so smaller banks are cheaper). Cross-algorithm banks
+    additionally set ``cfg.name='bank'`` (``algorithms.make_algorithm_bank``
+    restricted to the algorithms the group uses) and carry per-cell
+    ``algo_idx`` / ``hparams`` (beta, DASHA's ``a``) / ``gammas`` as traced
+    data; per-algorithm banks (``plan_grid(cross_algo=False)``) leave those
+    ``None`` and keep the legacy static-config path.
     """
 
     cfg: alg.AlgorithmConfig
@@ -275,6 +295,10 @@ class FusedBank:
     attack_idx: Tuple[int, ...]
     agg_idx: Tuple[int, ...]
     ratios: Optional[Tuple[float, ...]]  # None -> ratio stays static config
+    algo_idx: Optional[Tuple[int, ...]] = None
+    #: per-cell (beta, mvr_a, 1-beta, 1-mvr_a) — see algorithms.static_hparams
+    hparams: Optional[Tuple[Tuple[float, float, float, float], ...]] = None
+    gammas: Optional[Tuple[float, ...]] = None
 
     @property
     def n_cells(self) -> int:
@@ -287,7 +311,13 @@ class FusedBank:
             attack_idx=jnp.asarray(self.attack_idx, jnp.int32),
             agg_idx=jnp.asarray(self.agg_idx, jnp.int32),
             ratio=(jnp.asarray(self.ratios, jnp.float32)
-                   if self.ratios is not None else None))
+                   if self.ratios is not None else None),
+            algo_idx=(jnp.asarray(self.algo_idx, jnp.int32)
+                      if self.algo_idx is not None else None),
+            hparams=(jnp.asarray(self.hparams, jnp.float32)
+                     if self.hparams is not None else None),
+            gamma=(jnp.asarray(self.gammas, jnp.float32)
+                   if self.gammas is not None else None))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -313,8 +343,10 @@ class GridPlan:
     def describe(self) -> str:
         parts = [f"{self.n_cells} scenarios -> {self.n_programs} programs"]
         for b in self.banks:
+            name = ("+".join(b.cfg.bank or alg.ALGO_BANK)
+                    if b.cfg.name == "bank" else b.cfg.name)
             parts.append(
-                f"  bank[{b.cfg.name}] x{b.n_cells}: "
+                f"  bank[{name}] x{b.n_cells}: "
                 + ", ".join(sc.label for sc in b.scenarios))
         for sc in self.singles:
             parts.append(f"  single: {sc.label}")
@@ -322,19 +354,25 @@ class GridPlan:
 
 
 def plan_grid(scenarios: Sequence[Scenario], *,
-              fuse: bool = True) -> GridPlan:
+              fuse: bool = True, cross_algo: bool = True) -> GridPlan:
     """Partition ``scenarios`` into maximal fusible banks.
 
-    Cells fuse when they share an algorithm and every static field of its
-    config, and differ only along traced axes: the attack — stateless
-    mean/std family *and* stateful adversaries (mimic/gauss/spectral/
-    ipm_greedy) alike, as an attack-bank branch index + parameter vector
+    Cells fuse when they share every static field of their config and
+    differ only along traced axes: the attack — stateless mean/std family
+    *and* stateful adversaries (mimic/gauss/spectral/ipm_greedy) alike, as
+    an attack-bank branch index + parameter vector
     (``repro.adversary.bank_entry``) — the aggregator rule +/- NNM (bank
-    branch index), and, for
-    :data:`repro.core.compression.TRACED_RATIO_KINDS` sparsifiers, the
-    keep-ratio. The aggregator's ``f``/``geomed_iters`` and everything else
-    must match (they are baked into the compiled branches). Groups of one
+    branch index), the **algorithm** (algorithm-bank branch index with
+    per-cell beta / DASHA ``a`` / step-size hyperparameters as traced
+    data), and, for :data:`repro.core.compression.TRACED_RATIO_KINDS`
+    sparsifiers, the keep-ratio. The aggregator's ``f``/``geomed_iters``,
+    the worker counts, dtypes, and the sparsifier (up to a traceable ratio)
+    must match — they are baked into the compiled branches. Groups of one
     and non-bankable attacks (``none``) fall back to per-scenario programs.
+
+    ``cross_algo=False`` keeps the algorithm (and its beta/``a``/gamma) a
+    static config axis — the legacy one-bank-per-algorithm partition, kept
+    as the equivalence baseline for the cross-algorithm compile-count gate.
     """
     from repro.adversary import core as adv  # local: core <-> adversary cycle
     singles: List[Scenario] = []
@@ -356,6 +394,13 @@ def plan_grid(scenarios: Sequence[Scenario], *,
                                            pre_nnm=False, bank=None),
             sparsifier=(dataclasses.replace(sp, ratio=1.0)
                         if sp.kind in C.TRACED_RATIO_KINDS else sp))
+        if cross_algo:
+            # the algorithm and its per-cell hyperparameters become traced
+            # data (algo_idx / hparams / gamma), so normalise them out of
+            # the grouping key; resolved_beta() is evaluated per cell below
+            key = dataclasses.replace(
+                key, name="bank", bank=None, beta=0.0, smoothness_L=1.0,
+                mvr_a=None, gamma=0.0)
         groups.setdefault(key, []).append((sc, entry))
 
     banks: List[FusedBank] = []
@@ -365,6 +410,7 @@ def plan_grid(scenarios: Sequence[Scenario], *,
             continue
         entries: List[Tuple[str, bool]] = []
         attack_entries: List[str] = []
+        algos: List[str] = []
         for sc, (branch, _) in group:
             a = sc.cfg.aggregator
             e = (a.name, bool(a.pre_nnm) and a.name != "mean")
@@ -372,6 +418,8 @@ def plan_grid(scenarios: Sequence[Scenario], *,
                 entries.append(e)
             if branch not in attack_entries:
                 attack_entries.append(branch)
+            if sc.cfg.name not in algos:
+                algos.append(sc.cfg.name)
         bank_agg = dataclasses.replace(
             group[0][0].cfg.aggregator, name="bank", pre_nnm=False,
             bank=tuple(entries))
@@ -381,6 +429,9 @@ def plan_grid(scenarios: Sequence[Scenario], *,
                        in C.TRACED_RATIO_KINDS and len(set(ratios)) > 1)
         exec_cfg = dataclasses.replace(
             group[0][0].cfg, attack=bank_attack, aggregator=bank_agg)
+        if cross_algo:
+            exec_cfg = dataclasses.replace(exec_cfg, name="bank",
+                                           bank=tuple(algos))
         banks.append(FusedBank(
             cfg=exec_cfg,
             scenarios=tuple(sc for sc, _ in group),
@@ -388,7 +439,13 @@ def plan_grid(scenarios: Sequence[Scenario], *,
             attack_idx=tuple(attack_entries.index(b) for _, (b, _) in group),
             agg_idx=tuple(G.bank_index(sc.cfg.aggregator, tuple(entries))
                           for sc, _ in group),
-            ratios=ratios if trace_ratio else None))
+            ratios=ratios if trace_ratio else None,
+            algo_idx=(tuple(algos.index(sc.cfg.name) for sc, _ in group)
+                      if cross_algo else None),
+            hparams=(tuple(alg.static_hparams(sc.cfg) for sc, _ in group)
+                     if cross_algo else None),
+            gammas=(tuple(sc.cfg.gamma for sc, _ in group)
+                    if cross_algo else None)))
     return GridPlan(banks=tuple(banks), singles=tuple(singles))
 
 
@@ -403,6 +460,50 @@ def eval_over_seeds(sim: Simulator, states: SimState,
         sim._sweep_cache["eval_vmap"] = jax.jit(
             jax.vmap(one, in_axes=(0, None)))
     return sim._sweep_cache["eval_vmap"](states.params_flat, eval_batch)
+
+
+def fused_grid_eval(sim: Simulator, states: SimState, eval_batch: Any, *,
+                    shard: bool = True,
+                    devices: Optional[Sequence[Any]] = None
+                    ) -> Dict[str, jnp.ndarray]:
+    """Evaluate a whole bank's final states as ONE vmapped, sharded program.
+
+    ``states`` is the :func:`fused_grid_rollout` output with leading
+    ``[n_cells, n_seeds]`` axes; the eval is one ``vmap(eval_fn)`` call over
+    the re-flattened ``[n_cells * n_seeds]`` axis, laid out over the same
+    ``sweep_mesh`` device layout as the rollout (pad rows repeated and
+    sliced back off). Replaces the legacy one-``eval_over_seeds``-per-cell
+    loop, so eval of a 100-cell bank is also one compiled program.
+
+    Returns a metrics dict with leading ``[n_cells, n_seeds]`` axes.
+    """
+    assert sim.eval_fn is not None, "Simulator has no eval_fn"
+    flat = states.params_flat
+    if flat.ndim < 3:
+        raise ValueError(
+            "fused_grid_eval expects fused_grid_rollout output with leading "
+            f"[n_cells, n_seeds] axes, got params_flat shape {flat.shape}")
+    n_c, n_s = flat.shape[:2]
+    n_rows = n_c * n_s
+    rows = flat.reshape((n_rows,) + flat.shape[2:])
+    mesh = S.sweep_mesh(devices) if shard else None
+    if mesh is not None and mesh.size > 1:
+        pad = (-n_rows) % mesh.size
+        if pad:
+            rows = jnp.concatenate(
+                [rows, jnp.repeat(rows[-1:], pad, axis=0)], axis=0)
+        rows = jax.device_put(rows, S.grid_sharding(mesh))
+        eval_batch = jax.device_put(eval_batch, S.replicated_sharding(mesh))
+    if "grid_eval" not in sim._sweep_cache:
+        def one(flat_p, batch):
+            return sim.eval_fn(T.tree_unravel(flat_p, sim.spec), batch)
+
+        sim._sweep_cache["grid_eval"] = jax.jit(
+            jax.vmap(one, in_axes=(0, None)))
+    out = sim._sweep_cache["grid_eval"](rows, eval_batch)
+    unflatten = lambda l: l[:n_rows].reshape(  # noqa: E731
+        (n_c, n_s) + l.shape[1:])
+    return jax.tree_util.tree_map(unflatten, out)
 
 
 def bytes_to_threshold(values: np.ndarray, per_round_bytes: int,
@@ -432,10 +533,11 @@ def bytes_to_threshold(values: np.ndarray, per_round_bytes: int,
 def _result_rows(sc: Scenario, sim: Simulator, seeds: Sequence[int],
                  loss: np.ndarray, emet: Dict[str, Any],
                  n_steps: int) -> List[Dict[str, Any]]:
-    # byte accounting from the CELL's own config — inside a traced-ratio
-    # bank the executing sim's static sparsifier is not this cell's
-    per_round = C.payload_bytes(sim.d, sc.cfg.sparsifier, bytes_per_value=4,
-                                with_mask_indices=True) * sc.cfg.n_workers
+    # byte accounting from the CELL's own config AND algorithm: inside a
+    # bank the executing sim's static config is not this cell's, and each
+    # algorithm has its own wire format (dasha's compressed differences
+    # carry indices, robust_dgd sends raw gradients — algo_payload_bytes)
+    per_round = alg.algo_payload_bytes(sc.cfg, sim.d) * sc.cfg.n_workers
     total_bytes = per_round * n_steps
     rows = []
     for i, seed in enumerate(seeds):
@@ -444,7 +546,10 @@ def _result_rows(sc: Scenario, sim: Simulator, seeds: Sequence[int],
             "algo": sc.cfg.name,
             "attack": sc.cfg.attack.name,
             "aggregator": sc.cfg.aggregator.name,
-            "ratio": sc.cfg.sparsifier.ratio,
+            # robust_dgd ignores the (grid-shared) sparsifier — report its
+            # effective no-compression ratio, not the config's
+            "ratio": (1.0 if sc.cfg.name == "robust_dgd"
+                      else sc.cfg.sparsifier.ratio),
             "f": sc.cfg.f,
             "seed": int(seed),
             "final_loss": float(loss[i, -1]),
@@ -469,7 +574,9 @@ def execute_plan(plan: GridPlan, *,
 
     Each bank is one compiled program over its flat cells x seeds axis,
     sharded across ``devices`` when ``shard`` is set
-    (:func:`fused_grid_rollout`); singles run as per-scenario vmapped scans.
+    (:func:`fused_grid_rollout`), and its eval is one vmapped program over
+    the same sharded axis (:func:`fused_grid_eval`); singles run as
+    per-scenario vmapped scans.
     """
     batches = ensure_stacked(batches, steps)
     n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
@@ -481,11 +588,13 @@ def execute_plan(plan: GridPlan, *,
             sim, bank.scenario_params(), seeds, batches,
             shard=shard, devices=devices)
         loss = np.asarray(metrics["loss"])  # [n_cells, n_seeds, steps]
+        emet_grid = (fused_grid_eval(sim, states, eval_batch, shard=shard,
+                                     devices=devices)
+                     if eval_fn is not None and eval_batch is not None
+                     else {})
+        emet_grid = {k: np.asarray(v) for k, v in emet_grid.items()}
         for c, sc in enumerate(bank.scenarios):
-            st_c = jax.tree_util.tree_map(lambda l: l[c], states)
-            emet = (eval_over_seeds(sim, st_c, eval_batch)
-                    if eval_fn is not None and eval_batch is not None
-                    else {})
+            emet = {k: v[c] for k, v in emet_grid.items()}
             rows_by_scenario[id(sc)] = _result_rows(
                 sc, sim, seeds, loss[c], emet, n_steps)
     for sc in plan.singles:
@@ -507,24 +616,28 @@ def run_scenarios(scenarios: Sequence[Scenario], *,
                   eval_fn: Optional[Callable[[Any, Any], Dict]] = None,
                   eval_batch: Any = None,
                   fuse_attacks: bool = True,
+                  cross_algo: bool = True,
                   shard: bool = True,
                   devices: Optional[Sequence[Any]] = None
                   ) -> List[Dict[str, Any]]:
     """Run every scenario x seed cell; return the flat results table.
 
     Plan/execute: the grid is partitioned into maximal fusible banks
-    (:func:`plan_grid` — attack coefficients, aggregator-bank index, and
-    traceable keep-ratios become vmapped data) and each bank executes as
-    ONE compiled program laid out over mesh devices
-    (:func:`fused_grid_rollout`). Everything else pays one vmapped-scan
+    (:func:`plan_grid` — attack coefficients, aggregator-bank index,
+    algorithm-bank index + hyperparameters, and traceable keep-ratios
+    become vmapped data) and each bank executes as ONE compiled program
+    laid out over mesh devices (:func:`fused_grid_rollout`), eval included
+    (:func:`fused_grid_eval`). Everything else pays one vmapped-scan
     compile per scenario. Rows carry the scenario label/config fields, the
-    seed, final/min loss, total honest uplink bytes, and (when ``eval_fn``
+    seed, final/min loss, total uplink bytes under each algorithm's actual
+    wire format (``algorithms.algo_payload_bytes``), and (when ``eval_fn``
     is given) final eval metrics.
 
-    ``fuse_attacks=False`` disables fusion entirely (the equivalence
-    baseline); ``shard=False`` keeps every program on the default device.
+    ``fuse_attacks=False`` disables fusion entirely; ``cross_algo=False``
+    keeps one bank per algorithm (both are equivalence baselines);
+    ``shard=False`` keeps every program on the default device.
     """
-    plan = plan_grid(scenarios, fuse=fuse_attacks)
+    plan = plan_grid(scenarios, fuse=fuse_attacks, cross_algo=cross_algo)
     rows_by_scenario = execute_plan(
         plan, loss_fn=loss_fn, params0=params0, batches=batches, seeds=seeds,
         steps=steps, eval_fn=eval_fn, eval_batch=eval_batch, shard=shard,
@@ -594,9 +707,15 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
                    choices=["quadratic", "mnist"])
     p.add_argument("--fuse", action=argparse.BooleanOptionalAction,
                    default=True,
-                   help="fuse linear-family attack / aggregator / ratio axes "
-                        "into per-algorithm banks (--no-fuse: one program "
-                        "per scenario)")
+                   help="fuse the attack / aggregator / algorithm / ratio "
+                        "axes into banks (--no-fuse: one program per "
+                        "scenario)")
+    p.add_argument("--cross-algo", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="fuse the ALGORITHM axis too (lax.switch algorithm "
+                        "bank over the unified server state — a Table-1 "
+                        "algo x attack x agg grid = ONE program; "
+                        "--no-cross-algo: one bank per algorithm)")
     p.add_argument("--shard", action=argparse.BooleanOptionalAction,
                    default=True,
                    help="lay each bank's flat cells x seeds axis over all "
@@ -627,7 +746,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
         n = args.n_honest + args.f
         testbed = args.testbed
     if args.plan:
-        print(plan_grid(scenarios, fuse=args.fuse).describe())
+        print(plan_grid(scenarios, fuse=args.fuse,
+                        cross_algo=args.cross_algo).describe())
         return []
     seeds = list(range(args.seeds))
     if testbed == "quadratic":
@@ -639,7 +759,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
     rows = run_scenarios(scenarios, loss_fn=loss_fn, params0=params0,
                          batches=batch_fn, seeds=seeds, steps=args.steps,
                          eval_fn=eval_fn, eval_batch=eval_batch,
-                         fuse_attacks=args.fuse, shard=args.shard)
+                         fuse_attacks=args.fuse, cross_algo=args.cross_algo,
+                         shard=args.shard)
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:

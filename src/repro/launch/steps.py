@@ -222,17 +222,16 @@ def train_input_specs(plan: TrainPlan, mesh: Mesh):
 
     n, d = plan.n_workers, plan.flat_spec.padded_size
     mdt = jnp.dtype(plan.algo.momentum_dtype)
+    # the unified ServerState shape (see alg.init_state): every algorithm
+    # carries the full [n, d] momentum/mirror/prev_grad banks, all sharded
+    # over the server (coordinate) axes — mirror/prev_grad are padded but
+    # inert for non-dasha algorithms
     bank = _sds((n, d), mdt, mesh, P(None, sp.server_axes(mesh)))
-    ph = _sds((1, 1), mdt, mesh, P(None, None))
     atk = _attack_state_specs(plan.algo, d, mesh)
-    if plan.algo.name == "dasha":
-        server = alg.ServerState(bank, bank,
-                                 _sds((n, d), jnp.float32, mesh,
-                                      P(None, sp.server_axes(mesh))),
-                                 jax.ShapeDtypeStruct((), jnp.int32), atk)
-    else:
-        server = alg.ServerState(bank, ph, ph,
-                                 jax.ShapeDtypeStruct((), jnp.int32), atk)
+    server = alg.ServerState(bank, bank,
+                             _sds((n, d), jnp.float32, mesh,
+                                  P(None, sp.server_axes(mesh))),
+                             jax.ShapeDtypeStruct((), jnp.int32), atk)
     state = TrainState(
         params=params, server=server,
         step=jax.ShapeDtypeStruct((), jnp.int32),

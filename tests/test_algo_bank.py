@@ -1,0 +1,342 @@
+"""Algorithm-bank tests (the one-program Table-1 tentpole).
+
+The ``lax.switch`` algorithm bank over the unified ``ServerState`` must
+reproduce every per-algorithm compiled program cell for cell; non-dasha
+branches must leave the padded ``mirror``/``prev_grad`` slots bit-for-bit
+untouched across a scan; the fused sharded eval must match the per-cell
+eval; and each algorithm's uplink must be priced under its own wire format.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALGO_BANK, AlgorithmConfig, AggregatorConfig, AttackConfig,
+    ScenarioParams, Simulator, SparsifierConfig, algo_index,
+    algo_payload_bytes, grid_scenarios, init_state, plan_grid,
+    quadratic_testbed, rollout_over_seeds, run_scenarios, server_round,
+    stack_batches,
+)
+from repro.core import compression as C
+from repro.core.sweep import fused_grid_eval, fused_grid_rollout
+
+N, F, D, STEPS = 13, 3, 24, 10
+SEEDS = (0, 1)
+
+
+def _testbed():
+    return quadratic_testbed(N, D)
+
+
+def _cfg(algo, attack="alie", agg="cwtm", ratio=0.2):
+    return AlgorithmConfig(
+        name=algo, n_workers=N, f=F, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=ratio),
+        aggregator=AggregatorConfig(name=agg, f=F, pre_nnm=True),
+        attack=AttackConfig(name=attack, z=1.5 if attack == "alie" else None))
+
+
+def _grid(algos, attacks=("alie", "foe"), aggs=("cwtm", "median")):
+    return grid_scenarios(algos, attacks, aggs, n_honest=N - F, f=F,
+                          ratio=0.2, gamma=0.05)
+
+
+# --------------------------------------------------------------------------
+# unified state
+# --------------------------------------------------------------------------
+
+
+def test_init_state_is_uniformly_shaped_across_algorithms():
+    """Every algorithm (and the bank itself) carries the same state shape —
+    the precondition for switching between them on traced data (and for the
+    launch path's abstract input specs, which build ONE spec for all)."""
+    ref = jax.tree_util.tree_map(
+        lambda l: (l.shape, l.dtype), init_state(_cfg("rosdhb"), D))
+    for algo in ALGO_BANK:
+        got = jax.tree_util.tree_map(
+            lambda l: (l.shape, l.dtype), init_state(_cfg(algo), D))
+        assert got == ref, algo
+    bank_cfg = dataclasses.replace(_cfg("rosdhb"), name="bank",
+                                   bank=ALGO_BANK)
+    got = jax.tree_util.tree_map(
+        lambda l: (l.shape, l.dtype), init_state(bank_cfg, D))
+    assert got == ref
+    st = init_state(_cfg("dgd"), D)
+    assert st.mirror.shape == st.momentum.shape == (N, D)
+    assert st.prev_grad.shape == (N, D) and st.prev_grad.dtype == jnp.float32
+
+
+def test_init_state_rejects_unknown_algorithm():
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        init_state(dataclasses.replace(_cfg("rosdhb"), name="sgd"), D)
+
+
+@pytest.mark.parametrize("algo", ["rosdhb", "dgd", "robust_dgd"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_padded_slots_inert_across_standalone_scan(algo, seed):
+    """Property: non-dasha update rules leave the padded mirror/prev_grad
+    slots bit-for-bit untouched across a whole scan."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=_cfg(algo))
+    st0 = sim.init(seed)
+    st, _ = sim.rollout(st0, batch_fn, steps=STEPS)
+    assert int(st.server.step) == STEPS
+    if algo == "rosdhb":  # sanity: the slots rosdhb owns DO move
+        assert not np.array_equal(np.asarray(st.server.momentum),
+                                  np.asarray(st0.server.momentum))
+    np.testing.assert_array_equal(np.asarray(st.server.mirror),
+                                  np.asarray(st0.server.mirror))
+    np.testing.assert_array_equal(np.asarray(st.server.prev_grad),
+                                  np.asarray(st0.server.prev_grad))
+
+
+def test_padded_slots_inert_inside_fused_bank():
+    """The same property through the lax.switch bank: non-dasha cells of a
+    cross-algorithm program keep exact zeros in mirror/prev_grad while the
+    dasha cell actually uses them."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    scenarios = _grid(ALGO_BANK, attacks=("alie",), aggs=("cwtm",))
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1
+    bank = plan.banks[0]
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    batches = stack_batches(batch_fn, STEPS)
+    states, _ = fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                   batches, shard=False)
+    mirror = np.asarray(states.server.mirror)      # [cells, seeds, n, d]
+    prev = np.asarray(states.server.prev_grad)
+    for c, sc in enumerate(bank.scenarios):
+        if sc.cfg.name == "dasha":
+            assert np.any(mirror[c] != 0.0) and np.any(prev[c] != 0.0)
+        else:
+            np.testing.assert_array_equal(mirror[c],
+                                          np.zeros_like(mirror[c]),
+                                          err_msg=sc.label)
+            np.testing.assert_array_equal(prev[c], np.zeros_like(prev[c]),
+                                          err_msg=sc.label)
+
+
+# --------------------------------------------------------------------------
+# bank vs standalone parity (ISSUE acceptance core)
+# --------------------------------------------------------------------------
+
+
+def test_cross_algo_bank_matches_standalone_all_four_algorithms():
+    """All four algorithms x 2 attacks x 2 aggregators execute as ONE
+    compiled program whose cells match the standalone per-scenario
+    rollouts."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    scenarios = _grid(ALGO_BANK)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1 and plan.banks[0].n_cells == 16
+    bank = plan.banks[0]
+    assert bank.cfg.name == "bank" and set(bank.cfg.bank) == set(ALGO_BANK)
+    batches = stack_batches(batch_fn, STEPS)
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    states, metrics = fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                         batches, shard=False)
+    assert sim.round_traces == 1  # ONE compiled program for Table 1
+    for c, sc in enumerate(bank.scenarios):
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg)
+        ref_states, ref_metrics = rollout_over_seeds(ref, SEEDS, batches)
+        np.testing.assert_allclose(
+            np.asarray(states.params_flat[c]),
+            np.asarray(ref_states.params_flat),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"][c]), np.asarray(ref_metrics["loss"]),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+
+
+def test_cross_algo_bank_matches_per_algorithm_banks():
+    """Cross-algorithm fusion == the legacy per-algorithm banks on the same
+    grid (the bench_sweep gate's equivalence baseline, in miniature)."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    scenarios = _grid(("rosdhb", "dasha"), attacks=("alie", "signflip"),
+                      aggs=("cwtm",))
+    batches = stack_batches(batch_fn, STEPS)
+
+    def losses(plan):
+        out = {}
+        for bank in plan.banks:
+            sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+            _, metrics = fused_grid_rollout(sim, bank.scenario_params(),
+                                            SEEDS, batches, shard=False)
+            for c, sc in enumerate(bank.scenarios):
+                out[sc.label] = np.asarray(metrics["loss"][c])
+        return out
+
+    cross = plan_grid(scenarios)
+    per_algo = plan_grid(scenarios, cross_algo=False)
+    assert cross.n_programs == 1 and per_algo.n_programs == 2
+    got, want = losses(cross), losses(per_algo)
+    assert got.keys() == want.keys()
+    for label in got:
+        np.testing.assert_allclose(got[label], want[label], rtol=1e-5,
+                                   atol=1e-7, err_msg=label)
+
+
+@pytest.mark.parametrize("algo", ALGO_BANK)
+def test_single_algo_bank_is_bitwise_equal_to_legacy_bank(algo):
+    """A single-algorithm cross bank (1-entry switch, traced
+    hparams/gamma) reproduces the legacy per-algorithm bank BIT-FOR-BIT —
+    the precomputed hparams complements make the traced constants exactly
+    the ones the static path folds in. (Multi-branch switches may drift by
+    an ulp where XLA fuses across branches; see bench_sweep's gate.)"""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    scenarios = _grid((algo,), attacks=("alie", "foe"), aggs=("cwtm",))
+    batches = stack_batches(batch_fn, STEPS)
+
+    def run(plan):
+        bank = plan.banks[0]
+        sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+        st, m = fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                   batches, shard=False)
+        return {sc.label: np.asarray(st.params_flat[c])
+                for c, sc in enumerate(bank.scenarios)}
+
+    cross = run(plan_grid(scenarios))
+    legacy = run(plan_grid(scenarios, cross_algo=False))
+    for label in cross:
+        np.testing.assert_array_equal(cross[label], legacy[label],
+                                      err_msg=label)
+
+
+def test_traced_gamma_matches_static_gamma():
+    """Mixed step sizes join the fusion axis: per-cell traced gamma must
+    reproduce the static-config runs."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    batches = stack_batches(batch_fn, STEPS)
+    cells = [dataclasses.replace(_cfg("rosdhb"), gamma=g)
+             for g in (0.02, 0.08)]
+    from repro.core.sweep import Scenario
+    scenarios = [Scenario(label=f"g{c.gamma}", cfg=c) for c in cells]
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1
+    bank = plan.banks[0]
+    assert bank.gammas == (0.02, 0.08)
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    _, metrics = fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                    batches, shard=False)
+    for c, sc in enumerate(bank.scenarios):
+        ref = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg)
+        _, ref_metrics = rollout_over_seeds(ref, SEEDS, batches)
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"][c]), np.asarray(ref_metrics["loss"]),
+            rtol=1e-5, atol=1e-7, err_msg=sc.label)
+
+
+def test_bank_requires_traced_selectors():
+    """Loud errors: a bank config without the traced algo_idx/hparams must
+    fail fast, not silently fall back."""
+    cfg = dataclasses.replace(_cfg("rosdhb", attack="none"), name="bank",
+                              bank=("rosdhb", "dgd"), f=0)
+    st = init_state(cfg, 8)
+    grads = jnp.ones((N, 8))
+    with pytest.raises(ValueError, match="algorithm bank needs a traced"):
+        server_round(cfg, st, grads, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="hyperparameters"):
+        server_round(cfg, st, grads, jax.random.PRNGKey(0),
+                     scenario=ScenarioParams(
+                         algo_idx=jnp.zeros((), jnp.int32)))
+    with pytest.raises(ValueError, match="not a branch"):
+        algo_index("sgd")
+
+
+# --------------------------------------------------------------------------
+# fused sharded eval
+# --------------------------------------------------------------------------
+
+
+def test_fused_grid_eval_matches_per_cell_eval():
+    loss_fn, params0, batch_fn, tg = _testbed()
+    opt = np.asarray(tg[F:]).mean(0)
+    eval_fn = lambda p, b: {"dist": jnp.linalg.norm(p["w"] - b["opt"])}  # noqa: E731
+    eval_batch = {"opt": jnp.asarray(opt)}
+    scenarios = _grid(("rosdhb", "dgd"), attacks=("alie",), aggs=("cwtm",))
+    bank = plan_grid(scenarios).banks[0]
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg,
+                    eval_fn=eval_fn)
+    batches = stack_batches(batch_fn, STEPS)
+    states, _ = fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                   batches, shard=False)
+    emet = fused_grid_eval(sim, states, eval_batch, shard=False)
+    assert emet["dist"].shape == (2, len(SEEDS))
+    # reference: evaluate each final state individually
+    from repro.utils import tree as T
+    for c in range(2):
+        for s in range(len(SEEDS)):
+            params = T.tree_unravel(states.params_flat[c, s], sim.spec)
+            want = eval_fn(params, eval_batch)["dist"]
+            np.testing.assert_allclose(np.asarray(emet["dist"][c, s]),
+                                       np.asarray(want), rtol=1e-6)
+
+
+def test_run_scenarios_fused_eval_matches_unfused_rows():
+    loss_fn, params0, batch_fn, tg = _testbed()
+    opt = np.asarray(tg[F:]).mean(0)
+    eval_fn = lambda p, b: {"dist": jnp.linalg.norm(p["w"] - b["opt"])}  # noqa: E731
+    scenarios = _grid(("rosdhb", "dasha"), attacks=("alie",), aggs=("cwtm",))
+    kw = dict(loss_fn=loss_fn, params0=params0, batches=batch_fn,
+              seeds=[0, 1], steps=STEPS, eval_fn=eval_fn,
+              eval_batch={"opt": jnp.asarray(opt)}, shard=False)
+    fused = run_scenarios(scenarios, fuse_attacks=True, **kw)
+    unfused = run_scenarios(scenarios, fuse_attacks=False, **kw)
+    assert [(r["scenario"], r["seed"]) for r in fused] == \
+        [(r["scenario"], r["seed"]) for r in unfused]
+    for rf, ru in zip(fused, unfused):
+        np.testing.assert_allclose(rf["dist"], ru["dist"], rtol=1e-5,
+                                   err_msg=rf["scenario"])
+
+
+# --------------------------------------------------------------------------
+# per-algorithm uplink accounting
+# --------------------------------------------------------------------------
+
+
+def test_algo_payload_bytes_wire_formats():
+    d, ratio = 1000, 0.1
+    k = max(1, int(round(ratio * d)))
+    idx_b = C.index_bytes(d)
+    global_sp = SparsifierConfig(kind="randk", ratio=ratio, local=False)
+    local_sp = SparsifierConfig(kind="randk", ratio=ratio, local=True)
+
+    def cfg(algo, sp):
+        return dataclasses.replace(_cfg(algo), sparsifier=sp)
+
+    # rosdhb/dgd: k values; coordinated global mask = shared PRNG, no indices
+    assert algo_payload_bytes(cfg("rosdhb", global_sp), d) == 4 * k
+    assert algo_payload_bytes(cfg("dgd", global_sp), d) == 4 * k
+    # local sparsification must identify its coordinates
+    assert algo_payload_bytes(cfg("rosdhb", local_sp), d) == (4 + idx_b) * k
+    # robust_dgd: raw gradients, sparsifier irrelevant
+    assert algo_payload_bytes(cfg("robust_dgd", global_sp), d) == 4 * d
+    assert algo_payload_bytes(cfg("robust_dgd", local_sp), d) == 4 * d
+    # dasha: independent per-worker compressors -> always indices
+    assert algo_payload_bytes(cfg("dasha", global_sp), d) == (4 + idx_b) * k
+    assert algo_payload_bytes(cfg("dasha", local_sp), d) == (4 + idx_b) * k
+    # bank configs have no single wire format
+    with pytest.raises(ValueError, match="no single wire format"):
+        algo_payload_bytes(dataclasses.replace(cfg("rosdhb", global_sp),
+                                               name="bank"), d)
+
+
+def test_result_rows_use_per_algorithm_wire_format():
+    """Inside one fused Table-1 bank, every cell's comm_bytes must follow
+    ITS algorithm's wire format, not a shared formula."""
+    loss_fn, params0, batch_fn, _ = _testbed()
+    scenarios = _grid(ALGO_BANK, attacks=("alie",), aggs=("cwtm",))
+    assert plan_grid(scenarios).n_programs == 1
+    rows = run_scenarios(scenarios, loss_fn=loss_fn, params0=params0,
+                         batches=batch_fn, seeds=[0], steps=4, shard=False)
+    by_algo = {r["algo"]: r for r in rows}
+    k = max(1, int(round(0.2 * D)))
+    assert by_algo["rosdhb"]["comm_bytes"] == 4 * k * N * 4
+    assert by_algo["dgd"]["comm_bytes"] == by_algo["rosdhb"]["comm_bytes"]
+    assert by_algo["robust_dgd"]["comm_bytes"] == 4 * D * N * 4
+    assert by_algo["dasha"]["comm_bytes"] == (4 + C.index_bytes(D)) * k * N * 4
+    assert by_algo["robust_dgd"]["ratio"] == 1.0  # effective, not config

@@ -45,23 +45,49 @@ def _cfg(algo="rosdhb", attack="alie", agg="cwtm", ratio=0.2, kind="randk",
 # --------------------------------------------------------------------------
 
 
-def test_plan_grid_fuses_attack_x_aggregator_per_algorithm():
+def test_plan_grid_fuses_algo_x_attack_x_aggregator():
     scenarios = grid_scenarios(
         ["rosdhb", "dasha"], ["alie", "signflip", "foe"], ["cwtm", "median"],
         n_honest=10, f=3, ratio=0.1)
     plan = plan_grid(scenarios)
-    # one maximal bank per algorithm, every cell fused
+    # the whole cross-algorithm product is ONE maximal bank
+    assert plan.n_programs == 1 and not plan.singles
+    b = plan.banks[0]
+    assert b.n_cells == len(scenarios) == plan.n_cells == 12
+    # executable bank config: algorithm bank + attack bank + switch bank,
+    # each restricted to the branches the grid actually uses
+    assert b.cfg.name == "bank"
+    assert b.cfg.bank == ("rosdhb", "dasha")
+    assert b.cfg.attack.name == "bank"
+    assert b.cfg.attack.bank == ("linear",)  # only linear-family cells
+    assert b.cfg.aggregator.name == "bank"
+    assert set(b.cfg.aggregator.bank) == {("cwtm", True), ("median", True)}
+    # per-cell traced algorithm data: branch index + hyperparameters + gamma
+    assert set(b.algo_idx) == {0, 1}
+    assert all(hp[0] == 0.9 and hp[1] == 0.0
+               for hp, i in zip(b.hparams, b.algo_idx)
+               if i == 0)  # rosdhb cells carry beta, inert mvr_a
+    assert all(hp[0] == 0.0 and hp[1] == pytest.approx(0.1)
+               for hp, i in zip(b.hparams, b.algo_idx) if i == 1)  # dasha: a
+    assert all(hp[2] == 1.0 - hp[0] and hp[3] == 1.0 - hp[1]
+               for hp in b.hparams)  # precomputed complements
+    assert b.gammas == (0.05,) * 12
+
+
+def test_plan_grid_cross_algo_false_keeps_per_algorithm_banks():
+    """The legacy one-bank-per-algorithm partition survives as the
+    equivalence baseline (cross_algo=False)."""
+    scenarios = grid_scenarios(
+        ["rosdhb", "dasha"], ["alie", "signflip", "foe"], ["cwtm", "median"],
+        n_honest=10, f=3, ratio=0.1)
+    plan = plan_grid(scenarios, cross_algo=False)
     assert plan.n_programs == 2 and not plan.singles
     assert sorted(b.cfg.name for b in plan.banks) == ["dasha", "rosdhb"]
     assert all(b.n_cells == 6 for b in plan.banks)
-    assert plan.n_cells == len(scenarios)
-    # executable bank configs: traced attack bank + restricted switch bank
     for b in plan.banks:
+        assert b.algo_idx is None and b.hparams is None and b.gammas is None
         assert b.cfg.attack.name == "bank"
-        assert b.cfg.attack.bank == ("linear",)  # only linear-family cells
         assert b.cfg.aggregator.name == "bank"
-        assert set(b.cfg.aggregator.bank) == {("cwtm", True),
-                                              ("median", True)}
 
 
 def test_plan_grid_none_attacks_and_singletons_fall_back():
@@ -364,6 +390,28 @@ SHARD_SCRIPT = textwrap.dedent("""
                                    batches, shard=True)
     assert sim.round_traces == 1
     assert np.asarray(states.params_flat).shape[:2] == (6, 3)
+    # cross-algorithm bank + fused sharded eval: 4 algos x 2 attacks x
+    # 3 seeds = 24 rows over 4 devices, sharded == single-device rows
+    import jax.numpy as jnp
+    opt = None
+    loss_fn, params0, batch_fn, tg = quadratic_testbed(13, 16)
+    opt = np.asarray(tg[3:]).mean(0)
+    eval_fn = lambda p, b: {"dist": jnp.linalg.norm(p["w"] - b["opt"])}
+    xalgo = grid_scenarios(["rosdhb", "dasha", "robust_dgd", "dgd"],
+                           ["alie", "foe"], ["cwtm"], n_honest=10, f=3,
+                           ratio=0.1)
+    assert plan_grid(xalgo).n_programs == 1
+    kw = dict(loss_fn=loss_fn, params0=params0, batches=batch_fn,
+              seeds=[0, 1, 2], steps=10, eval_fn=eval_fn,
+              eval_batch={"opt": jnp.asarray(opt)})
+    sharded = run_scenarios(xalgo, shard=True, **kw)
+    single = run_scenarios(xalgo, shard=False, **kw)
+    assert len(sharded) == len(single) == 24
+    for rs, r1 in zip(sharded, single):
+        assert rs["scenario"] == r1["scenario"]
+        np.testing.assert_allclose(rs["final_loss"], r1["final_loss"],
+                                   rtol=1e-5, err_msg=rs["scenario"])
+        np.testing.assert_allclose(rs["dist"], r1["dist"], rtol=1e-5)
     print("SHARDED-SWEEP-OK")
 """)
 
