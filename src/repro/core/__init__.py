@@ -27,14 +27,17 @@ from repro.core.algorithms import (
     AlgorithmConfig,
     ScenarioParams,
     ServerState,
+    StateLayout,
     algo_index,
     algo_payload_bytes,
     init_state,
     make_algorithm_bank,
     server_round,
+    server_state_bytes,
     apply_direction,
     theorem1_hparams,
 )
+from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.simulator import Simulator, SimState, stack_batches
 from repro.core.sweep import (
     Scenario, GridPlan, FusedBank, KNOWN_ALGORITHMS, grid_scenarios,
@@ -50,8 +53,11 @@ __all__ = [
     "bank_index", "DEFAULT_BANK",
     "AttackConfig", "apply_attack",
     "ALGO_BANK", "AlgorithmConfig", "ScenarioParams", "ServerState",
+    "StateLayout",
     "algo_index", "algo_payload_bytes", "init_state", "make_algorithm_bank",
-    "server_round", "apply_direction", "theorem1_hparams",
+    "server_round", "server_state_bytes", "apply_direction",
+    "theorem1_hparams",
+    "CostModel", "DEFAULT_COST_MODEL",
     "Simulator", "SimState", "stack_batches",
     "Scenario", "GridPlan", "FusedBank", "KNOWN_ALGORITHMS",
     "grid_scenarios", "plan_grid",

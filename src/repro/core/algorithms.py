@@ -48,6 +48,49 @@ from repro.core import compression as C
 
 
 @dataclasses.dataclass(frozen=True)
+class StateLayout:
+    """Which optional ``ServerState`` slots a program's carry materialises.
+
+    The ``mirror``/``prev_grad`` banks exist only for DASHA's
+    variance-reduction state (Byz-DASHA-PAGE carries a server-side gradient
+    mirror h_i and the previous-round gradients for its MVR correction);
+    RoSDHB and the DGD variants never read them. Carrying them anyway costs
+    ``n*D`` momentum-dtype + ``n*D`` f32 floats per trajectory — exactly the
+    per-client memory overhead the paper's comparison charges DASHA and NOT
+    RoSDHB — so the plan layer prunes the slots whenever a program provably
+    contains no dasha cell (:meth:`for_algorithms`), and keeps the full
+    width for mixed banks. Pruned slots are ``None`` in the state pytree
+    (no leaves), which is bit-for-bit neutral: the non-dasha update rules
+    pass the slots through untouched either way (property-tested in
+    tests/test_state_layout.py).
+    """
+
+    mirror: bool = True
+    prev_grad: bool = True
+
+    @classmethod
+    def full(cls) -> "StateLayout":
+        """Every slot materialised (the pre-specialisation padded layout)."""
+        return cls(mirror=True, prev_grad=True)
+
+    @classmethod
+    def pruned(cls) -> "StateLayout":
+        """The dasha-free layout: mirror/prev_grad dropped from the carry."""
+        return cls(mirror=False, prev_grad=False)
+
+    @classmethod
+    def for_algorithms(cls, names: Sequence[str]) -> "StateLayout":
+        """The minimal layout for a program running exactly ``names``:
+        full width iff any branch is dasha."""
+        needs = "dasha" in tuple(names)
+        return cls(mirror=needs, prev_grad=needs)
+
+    @property
+    def is_full(self) -> bool:
+        return self.mirror and self.prev_grad
+
+
+@dataclasses.dataclass(frozen=True)
 class AlgorithmConfig:
     """Full specification of a Byzantine-robust compressed training run.
 
@@ -74,6 +117,12 @@ class AlgorithmConfig:
         full :data:`ALGO_BANK`). Per-cell hyperparameters (momentum beta,
         DASHA's ``a``, the step size) then arrive as traced
         ``ScenarioParams`` data, not from this config.
+      state_layout: explicit :class:`StateLayout` override, or ``None``
+        (default) for the plan-time automatic layout — pruned
+        mirror/prev_grad slots whenever this config provably runs no dasha
+        branch (:meth:`resolved_state_layout`). Forcing
+        ``StateLayout.full()`` reproduces the legacy padded carry exactly
+        (the parity baseline for the specialisation property tests).
     """
 
     name: str = "rosdhb"
@@ -93,10 +142,26 @@ class AlgorithmConfig:
     server_compute_dtype: str = "float32"
     clip_norm: Optional[float] = None  # per-worker L2 clip before compression
     bank: Optional[Tuple[str, ...]] = None
+    state_layout: Optional[StateLayout] = None
 
     @property
     def honest(self) -> int:
         return self.n_workers - self.f
+
+    def algorithms(self) -> Tuple[str, ...]:
+        """The algorithm branches this config can execute: the bank's entry
+        set for ``name='bank'``, else the single static algorithm."""
+        if self.name == "bank":
+            return tuple(self.bank) if self.bank else ALGO_BANK
+        return (self.name,)
+
+    def resolved_state_layout(self) -> StateLayout:
+        """The carry layout this config runs under: the explicit
+        ``state_layout`` if set, else the minimal layout for its algorithm
+        branches (mirror/prev_grad pruned when no branch is dasha)."""
+        if self.state_layout is not None:
+            return self.state_layout
+        return StateLayout.for_algorithms(self.algorithms())
 
     def resolved_beta(self) -> float:
         if self.beta is not None:
@@ -177,32 +242,36 @@ class ScenarioParams(NamedTuple):
 
 
 class ServerState(NamedTuple):
-    """Server-side algorithm state — ONE uniform shape for every algorithm.
+    """Server-side algorithm state — ONE shape per *program* (carry layout
+    chosen at plan time, uniform across every cell the program runs).
 
     ``momentum``: RoSDHB per-worker momentum bank ``[n, D]`` (Algorithm 1,
       step 5) — also reused as DASHA's MVR momentum.
-    ``mirror``: DASHA's server-side gradient mirrors ``h_i`` ``[n, D]``.
+    ``mirror``: DASHA's server-side gradient mirrors ``h_i`` ``[n, D]``;
+      ``None`` (no pytree leaves) under a pruned :class:`StateLayout`.
     ``prev_grad``: previous-round per-worker gradients ``[n, D]`` for
-      DASHA's MVR correction.
+      DASHA's MVR correction; ``None`` under a pruned layout.
     ``step``: iteration counter t.
     ``attack``: the adversary's carried memory
       (``repro.adversary.AttackState``) for stateful attacks and attack
       banks; ``None`` (no pytree leaves) for stateless attacks, so legacy
       configs keep their exact state structure.
 
-    The ``mirror``/``prev_grad`` slots are *padded but inert* for
-    rosdhb/dgd/robust_dgd: their update rules pass both through bit-for-bit
-    untouched (property-tested in tests/test_algo_bank.py), exactly like the
-    unused slots of the ``AttackState`` slab. The uniform shape is what lets
-    :func:`make_algorithm_bank` switch between algorithms on *traced* data —
-    the whole Table-1 algorithm axis in one compiled program — at a known
-    memory cost of ``n*D`` momentum-dtype + ``n*D`` f32 extra floats per
-    non-dasha trajectory (see ROADMAP).
+    When a program DOES carry ``mirror``/``prev_grad`` (any dasha branch
+    present, or ``StateLayout.full()`` forced), the slots are *padded but
+    inert* for rosdhb/dgd/robust_dgd: their update rules pass both through
+    bit-for-bit untouched (property-tested in tests/test_algo_bank.py),
+    exactly like the unused slots of the ``AttackState`` slab — which is
+    also why pruning them for dasha-free programs cannot change a
+    trajectory (tests/test_state_layout.py pins that bit-for-bit). The
+    full-width cost, charged only where DASHA actually needs it, is
+    ``n*D`` momentum-dtype + ``n*D`` f32 floats per trajectory
+    (:func:`server_state_bytes`).
     """
 
     momentum: jnp.ndarray
-    mirror: jnp.ndarray
-    prev_grad: jnp.ndarray
+    mirror: Optional[jnp.ndarray]
+    prev_grad: Optional[jnp.ndarray]
     step: jnp.ndarray
     attack: Optional[Any] = None
 
@@ -224,16 +293,33 @@ def _init_attack_state(cfg: AlgorithmConfig, d: int) -> Optional[Any]:
 
 
 def init_state(cfg: AlgorithmConfig, d: int) -> ServerState:
+    """Initial server state under ``cfg``'s resolved :class:`StateLayout`:
+    dasha-free configs (standalone or bank) get the specialised carry with
+    ``mirror``/``prev_grad`` pruned to ``None``; any config that can run a
+    dasha branch materialises the full width. A pruned layout forced onto a
+    dasha-capable config raises loudly (the branch cannot run without its
+    variance-reduction state)."""
     n = cfg.n_workers
     if cfg.name != "bank" and cfg.name not in ALGO_STEPS:
         raise ValueError(
             f"unknown algorithm: {cfg.name!r} (expected one of "
             f"{'|'.join(ALGO_BANK)} or 'bank')")
+    layout = cfg.resolved_state_layout()
+    if "dasha" in cfg.algorithms() and not layout.is_full:
+        raise ValueError(
+            "state layout prunes mirror/prev_grad but the config can run a "
+            f"dasha branch (algorithms={cfg.algorithms()}): dasha's MVR "
+            "mirror state cannot be pruned — use StateLayout.full() or drop "
+            "dasha from the bank")
     mdt = jnp.dtype(cfg.momentum_dtype)
     zeros = jnp.zeros((n, d), mdt)
     atk = _init_attack_state(cfg, d)
-    return ServerState(zeros, zeros, jnp.zeros((n, d), jnp.float32),
-                       jnp.zeros((), jnp.int32), atk)
+    return ServerState(
+        momentum=zeros,
+        mirror=zeros if layout.mirror else None,
+        prev_grad=jnp.zeros((n, d), jnp.float32) if layout.prev_grad
+        else None,
+        step=jnp.zeros((), jnp.int32), attack=atk)
 
 
 # --------------------------------------------------------------------------
@@ -367,6 +453,11 @@ def _dasha_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
     #                 alpha-scaled compression variance bounded.
     #   mirror:       h_i^t = h_i^{t-1} + c_i^t
     #   direction:    R^t = F(h_1^t ... h_n^t)
+    if state.mirror is None or state.prev_grad is None:
+        raise ValueError(
+            "dasha needs the mirror/prev_grad state slots but the carry was "
+            "built with a pruned StateLayout: init the state with a config "
+            "whose algorithms() include 'dasha' (or StateLayout.full())")
     n, d = grads.shape
     # Byz-DASHA-PAGE runs an INDEPENDENT unbiased compressor per worker
     # (the analysis of [29] requires independent randomness; there is no
@@ -448,7 +539,10 @@ def make_algorithm_bank(cfg: AlgorithmConfig,
     branch set; as with the attack/aggregator banks, under ``vmap`` a switch
     computes every branch per lane — restrict ``entries`` to the algorithms
     the grid actually uses. Static config (sparsifier kind, aggregator
-    ``f``, dtypes, ``n_workers``/``f``) is shared by every branch.
+    ``f``, dtypes, ``n_workers``/``f``) is shared by every branch, and so is
+    the carry's :class:`StateLayout`: a dasha-free entry set runs on the
+    pruned (mirror/prev_grad-less) state; any dasha entry requires the full
+    width (validated here, loudly).
     """
     entries = tuple(entries if entries is not None
                     else (cfg.bank or ALGO_BANK))
@@ -459,6 +553,11 @@ def make_algorithm_bank(cfg: AlgorithmConfig,
         raise ValueError(
             f"unknown algorithm-bank entries {unknown} (known algorithms: "
             f"{'|'.join(ALGO_BANK)})")
+    if "dasha" in entries and not cfg.resolved_state_layout().is_full:
+        raise ValueError(
+            "algorithm bank contains a dasha branch but cfg's StateLayout "
+            "prunes mirror/prev_grad — dasha's variance-reduction state "
+            "cannot be pruned (use StateLayout.full() or drop dasha)")
 
     def apply(state: ServerState, grads: jnp.ndarray, mask_key: jax.Array,
               atk_key: jax.Array, agg, algo_idx: jnp.ndarray,
@@ -480,8 +579,34 @@ def make_algorithm_bank(cfg: AlgorithmConfig,
 
 
 # --------------------------------------------------------------------------
-# Per-algorithm uplink accounting
+# Per-algorithm uplink + state-memory accounting
 # --------------------------------------------------------------------------
+
+
+def server_state_bytes(cfg: AlgorithmConfig, d: int) -> int:
+    """Bytes of the ``[n, D]`` server banks one trajectory carries under
+    ``cfg``'s resolved :class:`StateLayout` (momentum, plus mirror/prev_grad
+    when materialised; the O(1) step counter and the attack slab are
+    excluded).
+
+    This is the paper's per-client *memory* comparison made executable:
+    RoSDHB keeps one momentum vector per worker, while Byz-DASHA-PAGE
+    additionally carries the gradient mirror h_i and the previous gradient
+    for its MVR correction — so a dasha(-capable) config costs
+    ``n*D*(2*momentum_dtype + 4)`` bytes against RoSDHB's ``n*D*dtype``
+    (3x at f32). The carry specialisation makes the engine charge each
+    algorithm exactly its own footprint instead of padding everyone to
+    DASHA's width.
+    """
+    n = cfg.n_workers
+    layout = cfg.resolved_state_layout()
+    mdt_bytes = jnp.dtype(cfg.momentum_dtype).itemsize
+    total = n * d * mdt_bytes                      # momentum bank
+    if layout.mirror:
+        total += n * d * mdt_bytes                 # dasha mirrors h_i
+    if layout.prev_grad:
+        total += n * d * 4                         # f32 previous gradients
+    return total
 
 
 def algo_payload_bytes(cfg: AlgorithmConfig, d: int,

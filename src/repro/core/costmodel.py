@@ -1,0 +1,174 @@
+"""Measured cost model for ``plan_grid``'s fusion-vs-partition decision.
+
+Fusing a cross-algorithm grid into one ``lax.switch`` program saves
+compiles but is not free at runtime: under ``vmap`` a switch computes every
+branch for every lane, so a W-branch bank pays roughly W branches of work
+per cell per round, where the per-algorithm partition pays one branch per
+cell but W compiles. Which side wins depends on the grid (rows = cells x
+seeds), the trajectory length (rounds), and two machine-dependent rates —
+compile cost and warm per-cell-round cost. PR 4 shipped the fused default
+unconditionally and the Table-1 grid regressed to 0.52x warm
+(results/BENCH_sweep.json, cross_algo_grid); this module makes the choice
+*measured* instead of assumed.
+
+:class:`CostModel` is four calibrated scalars:
+
+* ``compile_s`` + ``compile_s_per_branch``: compile cost of one bank
+  program as an affine function of its algorithm-branch count.
+* ``cell_round_us`` + ``cell_round_us_per_branch``: warm execution cost of
+  one (cell x seed) row for one round, again affine in the branch count
+  (the per-branch term is the switch-divergence price).
+
+``benchmarks/bench_sweep.py``'s calibration pass measures a 1-branch and a
+W-branch probe bank cold+warm and persists the fit to
+``results/COST_MODEL.json`` (:meth:`CostModel.fit` / :meth:`save`);
+``plan_grid(cost_model=..., rounds=..., n_seeds=...)`` then compares
+:meth:`fused_s` against :meth:`partitioned_s` per candidate bank and
+partitions exactly when the model predicts the fused program is slower.
+Decisions are pure arithmetic over the pinned JSON — deterministic, and
+property-tested in tests/test_costmodel.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+#: Canonical on-disk location of the calibrated model (written by the
+#: bench_sweep calibration pass, read by CLI/users via ``CostModel.load``).
+DEFAULT_PATH = "results/COST_MODEL.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Calibrated compile/warm cost rates for fused-bank programs.
+
+    All rates are machine-specific; ``source`` records where they came from
+    (the pinned default vs. a calibration run). The model is intentionally
+    tiny — two affine laws — because its only job is a *binary* plan
+    decision with a ~2x gap on the wrong side; see the module docstring.
+    """
+
+    compile_s: float               # base compile cost of one bank program
+    compile_s_per_branch: float    # extra compile cost per algorithm branch
+    cell_round_us: float           # warm us per (cell x seed) row per round
+    cell_round_us_per_branch: float  # extra warm us per row-round per extra branch
+    source: str = "pinned-default"
+
+    def program_s(self, *, branches: int, rows: int, rounds: int) -> float:
+        """Predicted total seconds (compile + warm execution) of ONE bank
+        program with ``branches`` algorithm branches over ``rows`` =
+        cells x seeds flat lanes for ``rounds`` scan steps."""
+        if branches < 1:
+            raise ValueError(f"branches must be >= 1, got {branches}")
+        if rows < 0 or rounds < 0:
+            raise ValueError(f"rows/rounds must be >= 0, got {rows}/{rounds}")
+        compile_cost = self.compile_s + self.compile_s_per_branch * branches
+        row_round_us = (self.cell_round_us
+                        + self.cell_round_us_per_branch * (branches - 1))
+        return compile_cost + row_round_us * 1e-6 * rows * rounds
+
+    def fused_s(self, cells_per_algo: Dict[str, int], n_seeds: int,
+                rounds: int) -> float:
+        """Predicted cost of running the whole group as ONE cross-algorithm
+        bank (branch count = number of distinct algorithms)."""
+        rows = sum(cells_per_algo.values()) * n_seeds
+        return self.program_s(branches=len(cells_per_algo), rows=rows,
+                              rounds=rounds)
+
+    def partitioned_s(self, cells_per_algo: Dict[str, int], n_seeds: int,
+                      rounds: int) -> float:
+        """Predicted cost of the per-algorithm partition: one single-branch
+        bank program (its own compile) per algorithm."""
+        return sum(
+            self.program_s(branches=1, rows=c * n_seeds, rounds=rounds)
+            for c in cells_per_algo.values())
+
+    def prefer_fused(self, cells_per_algo: Dict[str, int], n_seeds: int,
+                     rounds: int) -> bool:
+        """The plan decision: fuse iff the fused program is predicted no
+        slower than the per-algorithm partition (ties fuse — fewer
+        programs)."""
+        return (self.fused_s(cells_per_algo, n_seeds, rounds)
+                <= self.partitioned_s(cells_per_algo, n_seeds, rounds))
+
+    # -- calibration ------------------------------------------------------
+
+    @classmethod
+    def fit(cls, *, single_cold_s: float, single_warm_s: float,
+            single_rows: int, fused_cold_s: float, fused_warm_s: float,
+            fused_rows: int, branches: int, rounds: int,
+            source: str = "calibration") -> "CostModel":
+        """Fit the four rates from one 1-branch and one ``branches``-branch
+        probe, each timed cold (first call, compile included) and warm
+        (cached program). Pure arithmetic — same measurements, same model.
+
+        Rates are clamped at zero: on a noisy host a warm probe can beat its
+        own cold run, and a negative rate would make the decision grow
+        *fonder* of the congested side as grids scale.
+        """
+        if branches < 2:
+            raise ValueError("fit needs a multi-branch probe (branches >= 2)")
+        if min(single_rows, fused_rows, rounds) <= 0:
+            raise ValueError("probe rows/rounds must be positive")
+        rate_1 = max(0.0, single_warm_s * 1e6 / (single_rows * rounds))
+        rate_w = max(0.0, fused_warm_s * 1e6 / (fused_rows * rounds))
+        per_branch_us = max(0.0, (rate_w - rate_1) / (branches - 1))
+        compile_1 = max(0.0, single_cold_s - single_warm_s)
+        compile_w = max(0.0, fused_cold_s - fused_warm_s)
+        per_branch_s = max(0.0, (compile_w - compile_1) / (branches - 1))
+        return cls(compile_s=max(0.0, compile_1 - per_branch_s),
+                   compile_s_per_branch=per_branch_s,
+                   cell_round_us=rate_1,
+                   cell_round_us_per_branch=per_branch_us,
+                   source=source)
+
+    # -- persistence ------------------------------------------------------
+
+    def save(self, path: str = DEFAULT_PATH) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(dataclasses.asdict(self), fh, indent=2)
+            fh.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str = DEFAULT_PATH) -> "CostModel":
+        """Load a pinned model; unknown keys are rejected loudly so a stale
+        or hand-edited file cannot silently change plan decisions."""
+        with open(path) as fh:
+            raw = json.load(fh)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(raw) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown cost-model keys {unknown} in {path} "
+                f"(expected a subset of {sorted(known)})")
+        return cls(**raw)
+
+    @classmethod
+    def load_or_default(cls, path: Optional[str] = None) -> "CostModel":
+        """The calibrated file if present, else the pinned
+        :data:`DEFAULT_COST_MODEL` — so plan decisions exist (and are
+        deterministic) before any calibration pass has run on this host."""
+        p = path or DEFAULT_PATH
+        if os.path.exists(p):
+            return cls.load(p)
+        return DEFAULT_COST_MODEL
+
+
+#: Pinned fallback rates, measured on the 8-core CPU dev/CI host that also
+#: produced results/BENCH_sweep.json (quadratic testbed, D=64, n=13). The
+#: absolute numbers matter less than the ratio structure: a 4-branch switch
+#: runs every branch per vmap lane (~4-5x the single-branch warm rate), and
+#: one bank compile costs seconds — so small/short grids fuse, large/long
+#: grids partition. Recalibrate with `python -m benchmarks.bench_sweep`.
+DEFAULT_COST_MODEL = CostModel(
+    compile_s=1.3,
+    compile_s_per_branch=0.55,
+    cell_round_us=120.0,
+    cell_round_us_per_branch=100.0,
+    source="pinned-default",
+)

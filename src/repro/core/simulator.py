@@ -164,6 +164,11 @@ class Simulator:
         self._sweep_cache: dict = {}
 
     def init(self, seed: int = 0) -> SimState:
+        """Fresh :class:`SimState`; the server carry takes the shape of
+        ``cfg.resolved_state_layout()`` — dasha-free configs scan a
+        momentum-only ``ServerState`` (no mirror/prev_grad leaves), so the
+        rollout never pays DASHA's state width for algorithms that don't
+        use it (:func:`repro.core.algorithms.server_state_bytes`)."""
         return SimState(
             params_flat=T.tree_ravel(self.params0, self.spec),
             server=alg.init_state(self.cfg, self.spec.padded_size),
@@ -172,6 +177,16 @@ class Simulator:
 
     def params(self, state: SimState) -> Any:
         return T.tree_unravel(state.params_flat, self.spec)
+
+    def state_layout(self) -> alg.StateLayout:
+        """The carry layout this simulator scans (see :meth:`init`)."""
+        return self.cfg.resolved_state_layout()
+
+    def server_state_bytes(self) -> int:
+        """On-device bytes of the scanned ``ServerState`` banks under the
+        resolved layout — the per-algorithm memory accounting behind the
+        paper's RoSDHB-vs-Byz-DASHA-PAGE claim."""
+        return alg.server_state_bytes(self.cfg, self.spec.padded_size)
 
     def payload_bytes_per_round(self) -> int:
         """Total uplink bytes per round (the paper's comm-cost metric) under

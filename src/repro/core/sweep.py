@@ -14,16 +14,22 @@ allows, in two stages:
   attack-bank branch index + parameter vector, aggregator-bank branch index
   (``aggregators.make_aggregator_bank``), the *algorithm* as an
   algorithm-bank branch index + per-cell hyperparameters
-  (``algorithms.make_algorithm_bank``: rosdhb/dasha/robust_dgd/dgd over the
-  uniformly-shaped ``ServerState``, beta / DASHA's ``a`` / the step size as
-  data) and, for ratio-traceable sparsifiers
+  (``algorithms.make_algorithm_bank``: rosdhb/dasha/robust_dgd/dgd over a
+  ``ServerState`` whose carry layout is specialised to the bank —
+  ``algorithms.StateLayout`` prunes the mirror/prev_grad slots from
+  dasha-free banks, beta / DASHA's ``a`` / the step size stay data) and,
+  for ratio-traceable sparsifiers
   (``compression.TRACED_RATIO_KINDS``), its keep-ratio become *traced data*
   (``algorithms.ScenarioParams``). Stateful adversaries carry their memory
   (``repro.adversary.AttackState``) inside the scan like any other server
   state. What cannot fuse (``none`` attacks, singleton groups) stays a
   classic per-scenario vmapped scan. ``cross_algo=False`` restores the
   legacy one-bank-per-algorithm partition (the equivalence baseline for the
-  cross-algorithm gate in benchmarks/bench_sweep.py).
+  cross-algorithm gate in benchmarks/bench_sweep.py). With a measured
+  :class:`repro.core.costmodel.CostModel` the fuse-vs-partition choice per
+  multi-algorithm bank is made by predicted runtime (a fused switch pays
+  every branch per vmap lane; a partition pays extra compiles), so the
+  chosen plan is never slower than the best static choice.
 * **execute** (:func:`execute_plan` / :func:`fused_grid_rollout`): each bank
   runs as ONE compiled XLA program — ``lax.scan`` over rounds, one flat
   ``vmap`` axis of size ``n_cells * n_seeds`` — laid out over mesh devices
@@ -53,6 +59,7 @@ named attack x heterogeneity x byzantine-fraction compositions):
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -66,6 +73,7 @@ from repro.core import aggregators as G
 from repro.core import algorithms as alg
 from repro.core import attacks as A
 from repro.core import compression as C
+from repro.core.costmodel import CostModel
 from repro.core.simulator import SimState, Simulator, ensure_stacked
 from repro.utils import tree as T
 
@@ -127,6 +135,7 @@ def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
     """
     _validate_grid_names(algos, attacks, aggregators)
     out = []
+    seen_labels = set()
     sparsifier = C.SparsifierConfig(kind="randk", ratio=ratio, local=local)
     for algo, attack, agg in itertools.product(algos, attacks, aggregators):
         # dgd's mean carries the grid's f so its (inert) aggregator config
@@ -140,7 +149,14 @@ def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
             sparsifier=sparsifier, aggregator=aggregator,
             attack=A.AttackConfig(name=attack,
                                   z=alie_z if attack == "alie" else None))
-        out.append(Scenario(label=f"{algo}/{attack}/{aggregator.name}", cfg=cfg))
+        label = f"{algo}/{attack}/{aggregator.name}"
+        # dgd collapses every aggregator to mean, so multi-aggregator grids
+        # would repeat the identical dgd cell once per rule — emit it once
+        # (duplicate labels are a hard error in plan_grid: they key rows)
+        if label in seen_labels:
+            continue
+        seen_labels.add(label)
+        out.append(Scenario(label=label, cfg=cfg))
     return out
 
 
@@ -331,6 +347,8 @@ class GridPlan:
 
     banks: Tuple[FusedBank, ...]
     singles: Tuple[Scenario, ...]
+    #: human-readable plan decisions (cost-model fuse/partition verdicts)
+    notes: Tuple[str, ...] = ()
 
     @property
     def n_cells(self) -> int:
@@ -345,16 +363,83 @@ class GridPlan:
         for b in self.banks:
             name = ("+".join(b.cfg.bank or alg.ALGO_BANK)
                     if b.cfg.name == "bank" else b.cfg.name)
+            layout = b.cfg.resolved_state_layout()
             parts.append(
-                f"  bank[{name}] x{b.n_cells}: "
+                f"  bank[{name}] x{b.n_cells}"
+                + ("" if layout.is_full else " [pruned carry]") + ": "
                 + ", ".join(sc.label for sc in b.scenarios))
         for sc in self.singles:
             parts.append(f"  single: {sc.label}")
+        for note in self.notes:
+            parts.append(f"  note: {note}")
         return "\n".join(parts)
 
 
+_GroupEntry = Tuple[Scenario, Tuple[str, Tuple[float, float]]]
+
+
+def _build_bank(group: Sequence[_GroupEntry], *,
+                cross_algo: bool) -> FusedBank:
+    """Assemble one :class:`FusedBank` from grouped (scenario, attack-entry)
+    pairs that already share a fusion key.
+
+    The bank's carry layout is part of the plan: dasha-free groups get the
+    pruned :class:`repro.core.algorithms.StateLayout` (no ``mirror`` /
+    ``prev_grad`` slots in the scanned ``ServerState``), groups with a dasha
+    branch keep the full width. An explicit per-scenario ``state_layout``
+    (shared across the group — it is part of the fusion key) wins over the
+    inferred one.
+    """
+    entries: List[Tuple[str, bool]] = []
+    attack_entries: List[str] = []
+    algos: List[str] = []
+    for sc, (branch, _) in group:
+        a = sc.cfg.aggregator
+        e = (a.name, bool(a.pre_nnm) and a.name != "mean")
+        if e not in entries:
+            entries.append(e)
+        if branch not in attack_entries:
+            attack_entries.append(branch)
+        if sc.cfg.name not in algos:
+            algos.append(sc.cfg.name)
+    bank_agg = dataclasses.replace(
+        group[0][0].cfg.aggregator, name="bank", pre_nnm=False,
+        bank=tuple(entries))
+    bank_attack = A.AttackConfig(name="bank", bank=tuple(attack_entries))
+    ratios = tuple(sc.cfg.sparsifier.ratio for sc, _ in group)
+    trace_ratio = (group[0][0].cfg.sparsifier.kind
+                   in C.TRACED_RATIO_KINDS and len(set(ratios)) > 1)
+    exec_cfg = dataclasses.replace(
+        group[0][0].cfg, attack=bank_attack, aggregator=bank_agg)
+    if cross_algo:
+        exec_cfg = dataclasses.replace(exec_cfg, name="bank",
+                                       bank=tuple(algos))
+    if exec_cfg.state_layout is None:
+        exec_cfg = dataclasses.replace(
+            exec_cfg,
+            state_layout=alg.StateLayout.for_algorithms(
+                exec_cfg.algorithms()))
+    return FusedBank(
+        cfg=exec_cfg,
+        scenarios=tuple(sc for sc, _ in group),
+        coeffs=tuple(c for _, (_, c) in group),
+        attack_idx=tuple(attack_entries.index(b) for _, (b, _) in group),
+        agg_idx=tuple(G.bank_index(sc.cfg.aggregator, tuple(entries))
+                      for sc, _ in group),
+        ratios=ratios if trace_ratio else None,
+        algo_idx=(tuple(algos.index(sc.cfg.name) for sc, _ in group)
+                  if cross_algo else None),
+        hparams=(tuple(alg.static_hparams(sc.cfg) for sc, _ in group)
+                 if cross_algo else None),
+        gammas=(tuple(sc.cfg.gamma for sc, _ in group)
+                if cross_algo else None))
+
+
 def plan_grid(scenarios: Sequence[Scenario], *,
-              fuse: bool = True, cross_algo: bool = True) -> GridPlan:
+              fuse: bool = True, cross_algo: bool = True,
+              cost_model: Optional[CostModel] = None,
+              rounds: Optional[int] = None,
+              n_seeds: int = 1) -> GridPlan:
     """Partition ``scenarios`` into maximal fusible banks.
 
     Cells fuse when they share every static field of their config and
@@ -370,16 +455,41 @@ def plan_grid(scenarios: Sequence[Scenario], *,
     must match — they are baked into the compiled branches. Groups of one
     and non-bankable attacks (``none``) fall back to per-scenario programs.
 
+    Every bank carries its :class:`repro.core.algorithms.StateLayout` in
+    ``cfg.state_layout``: dasha-free banks scan the pruned ``ServerState``
+    (no mirror/prev_grad slots — the PR-4 fused path charged every cell
+    DASHA's state width), mixed banks keep the full layout.
+
+    With a :class:`repro.core.costmodel.CostModel` (plus the grid's
+    ``rounds`` and ``n_seeds``), each multi-algorithm candidate bank is
+    kept fused only when the model predicts the fused ``lax.switch``
+    program (every branch computed per vmap lane) beats the per-algorithm
+    partition's extra compiles; otherwise the group splits into
+    single-algorithm banks (still attack/agg/ratio-fused). Decisions are
+    recorded in ``GridPlan.notes``.
+
     ``cross_algo=False`` keeps the algorithm (and its beta/``a``/gamma) a
     static config axis — the legacy one-bank-per-algorithm partition, kept
     as the equivalence baseline for the cross-algorithm compile-count gate.
+
+    Duplicate scenario labels raise ``ValueError``: labels are the stable
+    row key of :func:`execute_plan` / :func:`run_scenarios`.
     """
     from repro.adversary import core as adv  # local: core <-> adversary cycle
+    label_counts = collections.Counter(sc.label for sc in scenarios)
+    dupes = sorted(l for l, c in label_counts.items() if c > 1)
+    if dupes:
+        raise ValueError(
+            f"duplicate scenario labels {dupes}: labels key the results "
+            "table — give repeated cells distinct labels")
+    if cost_model is not None and rounds is None:
+        raise ValueError("plan_grid(cost_model=...) needs rounds= (the scan "
+                         "length) to predict per-bank runtime")
     singles: List[Scenario] = []
+    notes: List[str] = []
     if not fuse:
         return GridPlan(banks=(), singles=tuple(scenarios))
-    groups: Dict[alg.AlgorithmConfig,
-                 List[Tuple[Scenario, Tuple[str, Tuple[float, float]]]]] = {}
+    groups: Dict[alg.AlgorithmConfig, List[_GroupEntry]] = {}
     for sc in scenarios:
         cfg = sc.cfg
         entry = adv.bank_entry(cfg.attack, cfg.n_workers, cfg.f)
@@ -408,45 +518,30 @@ def plan_grid(scenarios: Sequence[Scenario], *,
         if len(group) == 1:
             singles.append(group[0][0])
             continue
-        entries: List[Tuple[str, bool]] = []
-        attack_entries: List[str] = []
-        algos: List[str] = []
-        for sc, (branch, _) in group:
-            a = sc.cfg.aggregator
-            e = (a.name, bool(a.pre_nnm) and a.name != "mean")
-            if e not in entries:
-                entries.append(e)
-            if branch not in attack_entries:
-                attack_entries.append(branch)
-            if sc.cfg.name not in algos:
-                algos.append(sc.cfg.name)
-        bank_agg = dataclasses.replace(
-            group[0][0].cfg.aggregator, name="bank", pre_nnm=False,
-            bank=tuple(entries))
-        bank_attack = A.AttackConfig(name="bank", bank=tuple(attack_entries))
-        ratios = tuple(sc.cfg.sparsifier.ratio for sc, _ in group)
-        trace_ratio = (group[0][0].cfg.sparsifier.kind
-                       in C.TRACED_RATIO_KINDS and len(set(ratios)) > 1)
-        exec_cfg = dataclasses.replace(
-            group[0][0].cfg, attack=bank_attack, aggregator=bank_agg)
-        if cross_algo:
-            exec_cfg = dataclasses.replace(exec_cfg, name="bank",
-                                           bank=tuple(algos))
-        banks.append(FusedBank(
-            cfg=exec_cfg,
-            scenarios=tuple(sc for sc, _ in group),
-            coeffs=tuple(c for _, (_, c) in group),
-            attack_idx=tuple(attack_entries.index(b) for _, (b, _) in group),
-            agg_idx=tuple(G.bank_index(sc.cfg.aggregator, tuple(entries))
-                          for sc, _ in group),
-            ratios=ratios if trace_ratio else None,
-            algo_idx=(tuple(algos.index(sc.cfg.name) for sc, _ in group)
-                      if cross_algo else None),
-            hparams=(tuple(alg.static_hparams(sc.cfg) for sc, _ in group)
-                     if cross_algo else None),
-            gammas=(tuple(sc.cfg.gamma for sc, _ in group)
-                    if cross_algo else None)))
-    return GridPlan(banks=tuple(banks), singles=tuple(singles))
+        cells = collections.Counter(sc.cfg.name for sc, _ in group)
+        if cross_algo and cost_model is not None and len(cells) > 1:
+            fused_s = cost_model.fused_s(dict(cells), n_seeds, rounds)
+            part_s = cost_model.partitioned_s(dict(cells), n_seeds, rounds)
+            verdict = "fused" if fused_s <= part_s else "partitioned"
+            notes.append(
+                f"cost-model[{cost_model.source}] {verdict} "
+                f"{'+'.join(sorted(cells))} x{len(group)} cells x{n_seeds} "
+                f"seeds x{rounds} rounds: fused {fused_s:.1f}s vs "
+                f"partitioned {part_s:.1f}s")
+            if fused_s > part_s:
+                # split by algorithm; each part keeps its attack/agg/ratio
+                # fusion (a 1-entry algorithm bank is pinned bit-for-bit
+                # equal to the legacy static-config bank)
+                for algo in cells:
+                    sub = [g for g in group if g[0].cfg.name == algo]
+                    if len(sub) == 1:
+                        singles.append(sub[0][0])
+                    else:
+                        banks.append(_build_bank(sub, cross_algo=True))
+                continue
+        banks.append(_build_bank(group, cross_algo=cross_algo))
+    return GridPlan(banks=tuple(banks), singles=tuple(singles),
+                    notes=tuple(notes))
 
 
 def eval_over_seeds(sim: Simulator, states: SimState,
@@ -568,22 +663,51 @@ def execute_plan(plan: GridPlan, *,
                  eval_fn: Optional[Callable[[Any, Any], Dict]] = None,
                  eval_batch: Any = None,
                  shard: bool = True,
-                 devices: Optional[Sequence[Any]] = None
-                 ) -> Dict[int, List[Dict[str, Any]]]:
-    """Execute a :class:`GridPlan`; return rows keyed by ``id(scenario)``.
+                 devices: Optional[Sequence[Any]] = None,
+                 sim_cache: Optional[Dict[alg.AlgorithmConfig,
+                                          Simulator]] = None
+                 ) -> Dict[str, List[Dict[str, Any]]]:
+    """Execute a :class:`GridPlan`; return rows keyed by scenario label.
 
     Each bank is one compiled program over its flat cells x seeds axis,
     sharded across ``devices`` when ``shard`` is set
     (:func:`fused_grid_rollout`), and its eval is one vmapped program over
     the same sharded axis (:func:`fused_grid_eval`); singles run as
     per-scenario vmapped scans.
+
+    Simulators are shared across cells with identical static config —
+    ``jax.jit`` caches hang off the wrapped function object, so a fresh
+    ``Simulator`` per single used to mean a fresh ``_sweep_cache`` and one
+    recompile per cell even for config-identical scenarios. Pass
+    ``sim_cache`` (a mutable dict, reused across calls) to extend that
+    sharing across ``execute_plan`` invocations — the caller must keep
+    ``loss_fn`` / ``params0`` / ``eval_fn`` fixed for a given cache, since
+    they are baked into each cached Simulator's compiled programs.
+
+    Labels are the stable row key (``id(scenario)`` was reusable after GC
+    and collided silently); duplicates raise ``ValueError``.
     """
     batches = ensure_stacked(batches, steps)
     n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
-    rows_by_scenario: Dict[int, List[Dict[str, Any]]] = {}
+    rows_by_label: Dict[str, List[Dict[str, Any]]] = {}
+    if sim_cache is None:
+        sim_cache = {}
+
+    def get_sim(cfg: alg.AlgorithmConfig) -> Simulator:
+        if cfg not in sim_cache:
+            sim_cache[cfg] = Simulator(loss_fn=loss_fn, params0=params0,
+                                       cfg=cfg, eval_fn=eval_fn)
+        return sim_cache[cfg]
+
+    def insert(sc: Scenario, rows: List[Dict[str, Any]]) -> None:
+        if sc.label in rows_by_label:
+            raise ValueError(
+                f"duplicate scenario label {sc.label!r} in plan — labels "
+                "key the results table")
+        rows_by_label[sc.label] = rows
+
     for bank in plan.banks:
-        sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg,
-                        eval_fn=eval_fn)
+        sim = get_sim(bank.cfg)
         states, metrics = fused_grid_rollout(
             sim, bank.scenario_params(), seeds, batches,
             shard=shard, devices=devices)
@@ -595,18 +719,16 @@ def execute_plan(plan: GridPlan, *,
         emet_grid = {k: np.asarray(v) for k, v in emet_grid.items()}
         for c, sc in enumerate(bank.scenarios):
             emet = {k: v[c] for k, v in emet_grid.items()}
-            rows_by_scenario[id(sc)] = _result_rows(
-                sc, sim, seeds, loss[c], emet, n_steps)
+            insert(sc, _result_rows(sc, sim, seeds, loss[c], emet, n_steps))
     for sc in plan.singles:
-        sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=sc.cfg,
-                        eval_fn=eval_fn)
+        sim = get_sim(sc.cfg)
         states, metrics = rollout_over_seeds(sim, seeds, batches)
         emet = (eval_over_seeds(sim, states, eval_batch)
                 if eval_fn is not None and eval_batch is not None
                 else {})
-        rows_by_scenario[id(sc)] = _result_rows(
-            sc, sim, seeds, np.asarray(metrics["loss"]), emet, n_steps)
-    return rows_by_scenario
+        insert(sc, _result_rows(sc, sim, seeds,
+                                np.asarray(metrics["loss"]), emet, n_steps))
+    return rows_by_label
 
 
 def run_scenarios(scenarios: Sequence[Scenario], *,
@@ -618,7 +740,10 @@ def run_scenarios(scenarios: Sequence[Scenario], *,
                   fuse_attacks: bool = True,
                   cross_algo: bool = True,
                   shard: bool = True,
-                  devices: Optional[Sequence[Any]] = None
+                  devices: Optional[Sequence[Any]] = None,
+                  cost_model: Optional[CostModel] = None,
+                  sim_cache: Optional[Dict[alg.AlgorithmConfig,
+                                           Simulator]] = None
                   ) -> List[Dict[str, Any]]:
     """Run every scenario x seed cell; return the flat results table.
 
@@ -635,15 +760,22 @@ def run_scenarios(scenarios: Sequence[Scenario], *,
 
     ``fuse_attacks=False`` disables fusion entirely; ``cross_algo=False``
     keeps one bank per algorithm (both are equivalence baselines);
-    ``shard=False`` keeps every program on the default device.
+    ``shard=False`` keeps every program on the default device. With
+    ``cost_model`` the fuse-vs-partition choice per multi-algorithm bank is
+    the model's (:func:`plan_grid`); ``sim_cache`` shares compiled
+    Simulators across calls (see :func:`execute_plan`).
     """
-    plan = plan_grid(scenarios, fuse=fuse_attacks, cross_algo=cross_algo)
-    rows_by_scenario = execute_plan(
+    batches = ensure_stacked(batches, steps)
+    rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    plan = plan_grid(scenarios, fuse=fuse_attacks, cross_algo=cross_algo,
+                     cost_model=cost_model, rounds=rounds,
+                     n_seeds=len(seeds))
+    rows_by_label = execute_plan(
         plan, loss_fn=loss_fn, params0=params0, batches=batches, seeds=seeds,
-        steps=steps, eval_fn=eval_fn, eval_batch=eval_batch, shard=shard,
-        devices=devices)
+        eval_fn=eval_fn, eval_batch=eval_batch, shard=shard,
+        devices=devices, sim_cache=sim_cache)
     # restore caller ordering regardless of fusion grouping
-    return [row for sc in scenarios for row in rows_by_scenario[id(sc)]]
+    return [row for sc in scenarios for row in rows_by_label[sc.label]]
 
 
 # --------------------------------------------------------------------------
@@ -722,10 +854,23 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
                         "visible devices (--no-shard: single device); force "
                         "virtual CPU devices with "
                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    p.add_argument("--cost-model", default=None, metavar="PATH|auto",
+                   help="decide fusion vs per-algorithm partition with a "
+                        "measured cost model: a COST_MODEL.json path, or "
+                        "'auto' for results/COST_MODEL.json falling back to "
+                        "the pinned default (calibrate with "
+                        "benchmarks/bench_sweep.py)")
     p.add_argument("--plan", action="store_true",
-                   help="print the grid plan (banks/singles) and exit")
+                   help="print the grid plan (banks/singles/cost-model "
+                        "notes) and exit")
     p.add_argument("--out", default=None, help="optional JSON output path")
     args = p.parse_args(argv)
+
+    cost_model = None
+    if args.cost_model == "auto":
+        cost_model = CostModel.load_or_default()
+    elif args.cost_model is not None:
+        cost_model = CostModel.load(args.cost_model)
 
     if args.list_scenarios:
         from repro.adversary import registry as R
@@ -747,7 +892,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
         testbed = args.testbed
     if args.plan:
         print(plan_grid(scenarios, fuse=args.fuse,
-                        cross_algo=args.cross_algo).describe())
+                        cross_algo=args.cross_algo, cost_model=cost_model,
+                        rounds=args.steps, n_seeds=args.seeds).describe())
         return []
     seeds = list(range(args.seeds))
     if testbed == "quadratic":
@@ -760,7 +906,7 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
                          batches=batch_fn, seeds=seeds, steps=args.steps,
                          eval_fn=eval_fn, eval_batch=eval_batch,
                          fuse_attacks=args.fuse, cross_algo=args.cross_algo,
-                         shard=args.shard)
+                         shard=args.shard, cost_model=cost_model)
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:

@@ -8,7 +8,16 @@ device initialisation).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # AxisType landed after jax 0.4; older runtimes use the default typing
+    from jax.sharding import AxisType
+
+    def _axis_types(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:
+    def _axis_types(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -20,13 +29,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def make_host_mesh() -> Mesh:
     """Degenerate mesh over however many devices are actually present
     (CPU tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return jax.make_mesh((n, 1), ("data", "model"), **_axis_types(2))

@@ -222,16 +222,21 @@ def train_input_specs(plan: TrainPlan, mesh: Mesh):
 
     n, d = plan.n_workers, plan.flat_spec.padded_size
     mdt = jnp.dtype(plan.algo.momentum_dtype)
-    # the unified ServerState shape (see alg.init_state): every algorithm
-    # carries the full [n, d] momentum/mirror/prev_grad banks, all sharded
-    # over the server (coordinate) axes — mirror/prev_grad are padded but
-    # inert for non-dasha algorithms
+    # the ServerState shape (see alg.init_state): the momentum bank always,
+    # mirror/prev_grad only when the resolved StateLayout carries them
+    # (dasha needs the variance-reduction slots; rosdhb/dgd/robust_dgd scan
+    # momentum-only — the paper's per-client memory gap vs Byz-DASHA-PAGE,
+    # 3x at [n, d] f32, see alg.server_state_bytes) — all sharded over the
+    # server (coordinate) axes
+    layout = plan.algo.resolved_state_layout()
     bank = _sds((n, d), mdt, mesh, P(None, sp.server_axes(mesh)))
     atk = _attack_state_specs(plan.algo, d, mesh)
-    server = alg.ServerState(bank, bank,
-                             _sds((n, d), jnp.float32, mesh,
-                                  P(None, sp.server_axes(mesh))),
-                             jax.ShapeDtypeStruct((), jnp.int32), atk)
+    server = alg.ServerState(
+        bank,
+        bank if layout.mirror else None,
+        (_sds((n, d), jnp.float32, mesh, P(None, sp.server_axes(mesh)))
+         if layout.prev_grad else None),
+        jax.ShapeDtypeStruct((), jnp.int32), atk)
     state = TrainState(
         params=params, server=server,
         step=jax.ShapeDtypeStruct((), jnp.int32),

@@ -18,8 +18,8 @@ from repro.core import (
     ALGO_BANK, AlgorithmConfig, AggregatorConfig, AttackConfig,
     ScenarioParams, Simulator, SparsifierConfig, algo_index,
     algo_payload_bytes, grid_scenarios, init_state, plan_grid,
-    quadratic_testbed, rollout_over_seeds, run_scenarios, server_round,
-    stack_batches,
+    StateLayout, quadratic_testbed, rollout_over_seeds, run_scenarios,
+    server_round, stack_batches,
 )
 from repro.core import compression as C
 from repro.core.sweep import fused_grid_eval, fused_grid_rollout
@@ -50,24 +50,38 @@ def _grid(algos, attacks=("alie", "foe"), aggs=("cwtm", "median")):
 # --------------------------------------------------------------------------
 
 
-def test_init_state_is_uniformly_shaped_across_algorithms():
-    """Every algorithm (and the bank itself) carries the same state shape —
-    the precondition for switching between them on traced data (and for the
-    launch path's abstract input specs, which build ONE spec for all)."""
+def test_init_state_is_uniformly_shaped_under_full_layout():
+    """Under the full StateLayout every algorithm (and the bank itself)
+    carries the same state shape — the precondition for switching between
+    them on traced data inside a mixed bank. By DEFAULT only dasha (and
+    banks containing it) resolves to the full layout; dasha-free configs
+    prune mirror/prev_grad to ``None`` (no pytree leaves)."""
+    full = StateLayout.full()
+
+    def full_cfg(algo):
+        return dataclasses.replace(_cfg(algo), state_layout=full)
+
     ref = jax.tree_util.tree_map(
-        lambda l: (l.shape, l.dtype), init_state(_cfg("rosdhb"), D))
+        lambda l: (l.shape, l.dtype), init_state(full_cfg("rosdhb"), D))
     for algo in ALGO_BANK:
         got = jax.tree_util.tree_map(
-            lambda l: (l.shape, l.dtype), init_state(_cfg(algo), D))
+            lambda l: (l.shape, l.dtype), init_state(full_cfg(algo), D))
         assert got == ref, algo
     bank_cfg = dataclasses.replace(_cfg("rosdhb"), name="bank",
                                    bank=ALGO_BANK)
+    assert bank_cfg.resolved_state_layout() == full  # dasha branch present
     got = jax.tree_util.tree_map(
         lambda l: (l.shape, l.dtype), init_state(bank_cfg, D))
     assert got == ref
-    st = init_state(_cfg("dgd"), D)
+    st = init_state(full_cfg("dgd"), D)
     assert st.mirror.shape == st.momentum.shape == (N, D)
     assert st.prev_grad.shape == (N, D) and st.prev_grad.dtype == jnp.float32
+    # the default layout for dasha-free configs is the pruned carry
+    for algo in ("rosdhb", "dgd", "robust_dgd"):
+        st = init_state(_cfg(algo), D)
+        assert st.mirror is None and st.prev_grad is None, algo
+        assert st.momentum.shape == (N, D)
+    assert init_state(_cfg("dasha"), D).mirror is not None
 
 
 def test_init_state_rejects_unknown_algorithm():
@@ -79,9 +93,12 @@ def test_init_state_rejects_unknown_algorithm():
 @pytest.mark.parametrize("seed", [0, 3])
 def test_padded_slots_inert_across_standalone_scan(algo, seed):
     """Property: non-dasha update rules leave the padded mirror/prev_grad
-    slots bit-for-bit untouched across a whole scan."""
+    slots bit-for-bit untouched across a whole scan (layout forced to full
+    width — the default pruned carry has no such slots at all, pinned in
+    tests/test_state_layout.py)."""
     loss_fn, params0, batch_fn, _ = _testbed()
-    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=_cfg(algo))
+    cfg = dataclasses.replace(_cfg(algo), state_layout=StateLayout.full())
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=cfg)
     st0 = sim.init(seed)
     st, _ = sim.rollout(st0, batch_fn, steps=STEPS)
     assert int(st.server.step) == STEPS
@@ -128,11 +145,12 @@ def test_padded_slots_inert_inside_fused_bank():
 def test_cross_algo_bank_matches_standalone_all_four_algorithms():
     """All four algorithms x 2 attacks x 2 aggregators execute as ONE
     compiled program whose cells match the standalone per-scenario
-    rollouts."""
+    rollouts (14 cells: dgd collapses both aggregators to its single mean
+    cell per attack)."""
     loss_fn, params0, batch_fn, _ = _testbed()
     scenarios = _grid(ALGO_BANK)
     plan = plan_grid(scenarios)
-    assert plan.n_programs == 1 and plan.banks[0].n_cells == 16
+    assert plan.n_programs == 1 and plan.banks[0].n_cells == 14
     bank = plan.banks[0]
     assert bank.cfg.name == "bank" and set(bank.cfg.bank) == set(ALGO_BANK)
     batches = stack_batches(batch_fn, STEPS)

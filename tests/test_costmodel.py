@@ -1,0 +1,203 @@
+"""Cost-model tests: calibration fit, persistence, and plan determinism.
+
+The measured model (repro.core.costmodel) decides fusion vs. per-algorithm
+partition per candidate bank in ``plan_grid``. These tests pin: the fit
+arithmetic recovers known rates; save/load round-trips (and rejects stale
+keys); decisions are DETERMINISTIC given a pinned COST_MODEL.json; the
+partitioned plan is still fully fused along the attack/aggregator/ratio
+axes and reproduces the fused plan's rows; duplicate scenario labels and a
+missing ``rounds`` fail loudly.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (
+    AlgorithmConfig, AggregatorConfig, AttackConfig, CostModel,
+    DEFAULT_COST_MODEL, SparsifierConfig, grid_scenarios, plan_grid,
+    quadratic_testbed, run_scenarios,
+)
+from repro.core.sweep import Scenario
+
+N, F, D, STEPS = 13, 3, 16, 8
+
+#: strongly prefers ONE program: branches are free at runtime, compiles
+#: are expensive
+FUSE_HAPPY = CostModel(compile_s=10.0, compile_s_per_branch=5.0,
+                       cell_round_us=100.0, cell_round_us_per_branch=0.0,
+                       source="test-fuse")
+#: strongly prefers the partition: switch divergence dominates, compiles
+#: are free
+SPLIT_HAPPY = CostModel(compile_s=0.0, compile_s_per_branch=0.0,
+                        cell_round_us=100.0,
+                        cell_round_us_per_branch=1e5, source="test-split")
+
+
+def _grid(algos=("rosdhb", "dgd"), attacks=("alie", "foe"), aggs=("cwtm",)):
+    return grid_scenarios(algos, attacks, aggs, n_honest=N - F, f=F,
+                          ratio=0.2, gamma=0.05)
+
+
+# --------------------------------------------------------------------------
+# the model itself
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(c1=st.floats(0.5, 5.0), cb=st.floats(0.1, 3.0),
+       r1=st.floats(50.0, 500.0), rb=st.floats(10.0, 400.0),
+       branches=st.integers(2, 4))
+def test_fit_recovers_the_generating_rates(c1, cb, r1, rb, branches):
+    """Property: timings synthesised from a known model fit back to it."""
+    truth = CostModel(compile_s=c1, compile_s_per_branch=cb,
+                      cell_round_us=r1, cell_round_us_per_branch=rb)
+    rows_1, rows_w, rounds = 8, 24, 50
+    warm_1 = truth.cell_round_us * 1e-6 * rows_1 * rounds
+    warm_w = (truth.cell_round_us + truth.cell_round_us_per_branch
+              * (branches - 1)) * 1e-6 * rows_w * rounds
+    got = CostModel.fit(
+        single_cold_s=warm_1 + c1 + cb, single_warm_s=warm_1,
+        single_rows=rows_1,
+        fused_cold_s=warm_w + c1 + cb * branches, fused_warm_s=warm_w,
+        fused_rows=rows_w, branches=branches, rounds=rounds)
+    assert got.compile_s == pytest.approx(c1, rel=1e-6, abs=1e-9)
+    assert got.compile_s_per_branch == pytest.approx(cb, rel=1e-6)
+    assert got.cell_round_us == pytest.approx(r1, rel=1e-6)
+    assert got.cell_round_us_per_branch == pytest.approx(rb, rel=1e-6)
+
+
+def test_fit_clamps_noisy_rates_at_zero():
+    # warm "faster" than cold and multi-branch "faster" than single: every
+    # derived rate clamps to >= 0 instead of going negative
+    m = CostModel.fit(single_cold_s=1.0, single_warm_s=2.0, single_rows=4,
+                      fused_cold_s=0.5, fused_warm_s=1.0, fused_rows=16,
+                      branches=4, rounds=10)
+    assert m.compile_s >= 0 and m.compile_s_per_branch >= 0
+    assert m.cell_round_us >= 0 and m.cell_round_us_per_branch >= 0
+
+
+def test_decision_flips_with_grid_size():
+    """The pinned default's structure: tiny/short grids amortise nothing —
+    fuse; big/long grids pay branch divergence every round — partition."""
+    cells = {"rosdhb": 4, "dasha": 4, "dgd": 2}
+    assert DEFAULT_COST_MODEL.prefer_fused(cells, n_seeds=1, rounds=5)
+    assert not DEFAULT_COST_MODEL.prefer_fused(cells, n_seeds=16,
+                                               rounds=3000)
+
+
+def test_save_load_roundtrip_and_stale_key_rejection(tmp_path):
+    path = str(tmp_path / "COST_MODEL.json")
+    saved = dataclasses.replace(DEFAULT_COST_MODEL, source="calib-test")
+    assert saved.save(path) == path
+    assert CostModel.load(path) == saved
+    with open(path) as fh:
+        raw = json.load(fh)
+    raw["warm_gain"] = 2.0  # a key from an imagined older/newer schema
+    with open(path, "w") as fh:
+        json.dump(raw, fh)
+    with pytest.raises(ValueError, match="unknown cost-model keys"):
+        CostModel.load(path)
+    # load_or_default: pinned default when nothing is on disk
+    missing = str(tmp_path / "nope" / "COST_MODEL.json")
+    assert CostModel.load_or_default(missing) == DEFAULT_COST_MODEL
+
+
+# --------------------------------------------------------------------------
+# plan_grid decisions
+# --------------------------------------------------------------------------
+
+
+def test_plan_decisions_deterministic_given_pinned_model(tmp_path):
+    """Acceptance: with a pinned COST_MODEL.json the plan (bank partition,
+    cell order, notes) is a pure function of the scenario grid."""
+    path = str(tmp_path / "COST_MODEL.json")
+    SPLIT_HAPPY.save(path)
+    scenarios = _grid(algos=("rosdhb", "dasha", "dgd"))
+    plans = [plan_grid(scenarios, cost_model=CostModel.load(path),
+                       rounds=STEPS, n_seeds=2) for _ in range(3)]
+    ref = plans[0]
+    assert ref.notes and "partitioned" in ref.notes[0]
+    for p in plans[1:]:
+        assert [b.cfg for b in p.banks] == [b.cfg for b in ref.banks]
+        assert [tuple(sc.label for sc in b.scenarios) for b in p.banks] == \
+            [tuple(sc.label for sc in b.scenarios) for b in ref.banks]
+        assert [sc.label for sc in p.singles] == \
+            [sc.label for sc in ref.singles]
+        assert p.notes == ref.notes
+
+
+def test_cost_model_partition_splits_by_algorithm_only():
+    """A partitioned group becomes per-algorithm banks that keep the
+    attack/agg axes fused (1-entry algorithm banks, traced hparams);
+    single-cell leftovers fall back to singles."""
+    scenarios = _grid(algos=("rosdhb", "dasha", "dgd"),
+                      attacks=("alie", "foe"))
+    fused = plan_grid(scenarios, cost_model=FUSE_HAPPY, rounds=STEPS,
+                      n_seeds=2)
+    assert fused.n_programs == 1 and "fused" in fused.notes[0]
+    assert fused.banks[0].cfg.bank == ("rosdhb", "dasha", "dgd")
+    split = plan_grid(scenarios, cost_model=SPLIT_HAPPY, rounds=STEPS,
+                      n_seeds=2)
+    assert "partitioned" in split.notes[0]
+    assert len(split.banks) == 3 and not split.singles
+    for b in split.banks:
+        assert b.cfg.name == "bank" and len(b.cfg.bank) == 1
+        assert b.algo_idx == (0,) * b.n_cells  # still the traced-hparam path
+        assert len({sc.cfg.name for sc in b.scenarios}) == 1
+    # dasha-free parts get the pruned carry, the dasha part keeps full width
+    by_algo = {b.cfg.bank[0]: b for b in split.banks}
+    assert not by_algo["rosdhb"].cfg.resolved_state_layout().is_full
+    assert by_algo["dasha"].cfg.resolved_state_layout().is_full
+    # a 1-cell leftover (dgd has a single mean cell per attack -> with one
+    # attack it is a singleton) drops to a classic single
+    one = plan_grid(_grid(algos=("rosdhb", "dgd"), attacks=("alie",)),
+                    cost_model=SPLIT_HAPPY, rounds=STEPS, n_seeds=2)
+    assert [sc.cfg.name for sc in one.singles] == ["rosdhb", "dgd"]
+
+
+def test_partitioned_rows_match_fused_rows():
+    """End to end: the cost-model-partitioned plan reproduces the fused
+    plan's result rows (same labels/order, near-identical numerics — the
+    multi-branch switch may drift by float-fusion ulps)."""
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(N, D)
+    scenarios = _grid()
+    kw = dict(loss_fn=loss_fn, params0=params0, batches=batch_fn,
+              seeds=[0, 1], steps=STEPS, shard=False)
+    fused = run_scenarios(scenarios, cost_model=FUSE_HAPPY, **kw)
+    split = run_scenarios(scenarios, cost_model=SPLIT_HAPPY, **kw)
+    legacy = run_scenarios(scenarios, cross_algo=False, **kw)
+    assert [(r["scenario"], r["seed"]) for r in fused] == \
+        [(r["scenario"], r["seed"]) for r in split] == \
+        [(r["scenario"], r["seed"]) for r in legacy]
+    for rf, rs, rl in zip(fused, split, legacy):
+        # 1-entry banks are bit-for-bit the legacy per-algorithm banks
+        assert rs["final_loss"] == rl["final_loss"], rs["scenario"]
+        np.testing.assert_allclose(rf["final_loss"], rs["final_loss"],
+                                   rtol=1e-5, err_msg=rf["scenario"])
+
+
+# --------------------------------------------------------------------------
+# loud failure modes
+# --------------------------------------------------------------------------
+
+
+def test_plan_grid_requires_rounds_with_cost_model():
+    with pytest.raises(ValueError, match="needs rounds"):
+        plan_grid(_grid(), cost_model=DEFAULT_COST_MODEL)
+
+
+def test_plan_grid_rejects_duplicate_labels():
+    cfg = AlgorithmConfig(
+        name="rosdhb", n_workers=N, f=F, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=0.2),
+        aggregator=AggregatorConfig(name="cwtm", f=F),
+        attack=AttackConfig(name="alie", z=1.5))
+    twice = [Scenario(label="cell", cfg=cfg), Scenario(label="cell", cfg=cfg)]
+    with pytest.raises(ValueError, match="duplicate scenario labels"):
+        plan_grid(twice)
+    with pytest.raises(ValueError, match="duplicate scenario labels"):
+        plan_grid(twice, fuse=False)

@@ -1,0 +1,220 @@
+"""Carry-specialisation property tests (the PR-6 tentpole).
+
+A dasha-free config (or bank) scans a pruned ``ServerState`` — no
+``mirror``/``prev_grad`` leaves — and must reproduce the legacy padded-state
+trajectory BIT-FOR-BIT: those slots were provably inert for non-dasha update
+rules (tests/test_algo_bank.py pins the inertness), so removing them from
+the carry cannot change a single bit of params/metrics. Mixed banks with a
+dasha branch must keep the full width, dasha with a pruned layout must fail
+loudly, and the per-algorithm state-memory accounting must show the paper's
+RoSDHB-vs-Byz-DASHA-PAGE gap (arXiv 2508.17129: RoSDHB needs less per-client
+memory — momentum only, vs momentum + mirror + prev_grad).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (
+    ALGO_BANK, AlgorithmConfig, AggregatorConfig, AttackConfig, Simulator,
+    SparsifierConfig, StateLayout, grid_scenarios, init_state, plan_grid,
+    quadratic_testbed, server_state_bytes, stack_batches,
+)
+from repro.core.sweep import fused_grid_rollout
+
+N, F, D, STEPS = 13, 3, 16, 8
+SEEDS = (0, 1)
+DASHA_FREE = ("rosdhb", "dgd", "robust_dgd")
+
+
+def _cfg(algo, attack="alie", agg="cwtm", **kw):
+    return AlgorithmConfig(
+        name=algo, n_workers=N, f=F, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=0.2),
+        aggregator=AggregatorConfig(name=agg, f=F, pre_nnm=True),
+        attack=AttackConfig(name=attack, z=1.5 if attack == "alie" else None),
+        **kw)
+
+
+def _rollout(cfg, seed, steps=STEPS):
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(N, D)
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=cfg)
+    st_, metrics = sim.rollout(sim.init(seed), batch_fn, steps=steps)
+    return sim, st_, metrics
+
+
+# --------------------------------------------------------------------------
+# layout resolution
+# --------------------------------------------------------------------------
+
+
+def test_layout_resolution_prunes_exactly_the_dasha_free_configs():
+    for algo in DASHA_FREE:
+        assert _cfg(algo).resolved_state_layout() == StateLayout.pruned()
+    assert _cfg("dasha").resolved_state_layout() == StateLayout.full()
+    mixed = dataclasses.replace(_cfg("rosdhb"), name="bank",
+                                bank=("rosdhb", "dasha"))
+    assert mixed.resolved_state_layout() == StateLayout.full()
+    free = dataclasses.replace(_cfg("rosdhb"), name="bank",
+                               bank=("rosdhb", "dgd"))
+    assert free.resolved_state_layout() == StateLayout.pruned()
+    # name='bank' with bank=None means the full ALGO_BANK — dasha included
+    allb = dataclasses.replace(_cfg("rosdhb"), name="bank", bank=None)
+    assert allb.resolved_state_layout() == StateLayout.full()
+    # an explicit layout wins over the inferred one
+    forced = dataclasses.replace(_cfg("rosdhb"),
+                                 state_layout=StateLayout.full())
+    assert forced.resolved_state_layout() == StateLayout.full()
+
+
+def test_dasha_with_pruned_layout_fails_loudly():
+    bad = dataclasses.replace(_cfg("dasha"),
+                              state_layout=StateLayout.pruned())
+    with pytest.raises(ValueError, match="prunes mirror/prev_grad"):
+        init_state(bad, D)
+    from repro.core import make_algorithm_bank
+    bad_bank = dataclasses.replace(_cfg("rosdhb"), name="bank",
+                                   bank=("rosdhb", "dasha"),
+                                   state_layout=StateLayout.pruned())
+    with pytest.raises(ValueError, match="prunes mirror/prev_grad"):
+        make_algorithm_bank(bad_bank)
+
+
+# --------------------------------------------------------------------------
+# bit-for-bit parity: pruned carry == legacy padded carry
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(algo=st.integers(0, len(DASHA_FREE) - 1), seed=st.integers(0, 31),
+       gamma=st.floats(0.01, 0.1))
+def test_pruned_state_matches_padded_trajectory_bitwise(algo, seed, gamma):
+    """Property (standalone scan): for any dasha-free algorithm, seed, and
+    step size, the default pruned carry reproduces the forced-full padded
+    carry bit-for-bit — params, momentum, and every metric."""
+    cfg = dataclasses.replace(_cfg(DASHA_FREE[algo]), gamma=gamma)
+    assert cfg.resolved_state_layout() == StateLayout.pruned()
+    _, st_p, m_p = _rollout(cfg, seed, steps=5)
+    full = dataclasses.replace(cfg, state_layout=StateLayout.full())
+    _, st_f, m_f = _rollout(full, seed, steps=5)
+    assert st_p.server.mirror is None and st_p.server.prev_grad is None
+    np.testing.assert_array_equal(np.asarray(st_p.params_flat),
+                                  np.asarray(st_f.params_flat))
+    np.testing.assert_array_equal(np.asarray(st_p.server.momentum),
+                                  np.asarray(st_f.server.momentum))
+    for k in m_p:
+        np.testing.assert_array_equal(np.asarray(m_p[k]),
+                                      np.asarray(m_f[k]), err_msg=k)
+
+
+def test_pruned_bank_matches_padded_bank_bitwise():
+    """The same property through a fused dasha-free cross-algorithm bank:
+    plan_grid prunes its carry, and the bank program's whole cells x seeds
+    grid matches the forced-full bank bit-for-bit."""
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(N, D)
+    scenarios = grid_scenarios(DASHA_FREE, ("alie", "foe"), ("cwtm",),
+                               n_honest=N - F, f=F, ratio=0.2, gamma=0.05)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1
+    bank = plan.banks[0]
+    assert bank.cfg.resolved_state_layout() == StateLayout.pruned()
+    batches = stack_batches(batch_fn, STEPS)
+
+    def run(cfg):
+        sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=cfg)
+        return fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                  batches, shard=False)
+
+    st_p, m_p = run(bank.cfg)
+    st_f, m_f = run(dataclasses.replace(bank.cfg,
+                                        state_layout=StateLayout.full()))
+    assert st_p.server.mirror is None and st_f.server.mirror is not None
+    np.testing.assert_array_equal(np.asarray(st_p.params_flat),
+                                  np.asarray(st_f.params_flat))
+    np.testing.assert_array_equal(np.asarray(m_p["loss"]),
+                                  np.asarray(m_f["loss"]))
+
+
+def test_mixed_bank_keeps_full_width_and_dasha_uses_it():
+    """A bank WITH a dasha branch must keep the full carry (plan_grid leaves
+    the layout full) and its dasha cells must actually move the slots."""
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(N, D)
+    scenarios = grid_scenarios(ALGO_BANK, ("alie",), ("cwtm",),
+                               n_honest=N - F, f=F, ratio=0.2, gamma=0.05)
+    plan = plan_grid(scenarios)
+    assert plan.n_programs == 1
+    bank = plan.banks[0]
+    assert bank.cfg.resolved_state_layout() == StateLayout.full()
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=bank.cfg)
+    states, _ = fused_grid_rollout(sim, bank.scenario_params(), SEEDS,
+                                   stack_batches(batch_fn, STEPS),
+                                   shard=False)
+    mirror = np.asarray(states.server.mirror)
+    dasha_cells = [c for c, sc in enumerate(bank.scenarios)
+                   if sc.cfg.name == "dasha"]
+    assert dasha_cells and all(np.any(mirror[c] != 0) for c in dasha_cells)
+
+
+def test_checkpoint_roundtrip_with_pruned_state(tmp_path):
+    """The pruned carry (None leaves) survives the path-based checkpoint
+    save/restore unchanged."""
+    from repro import checkpoint as ckpt
+    _, st_, _ = _rollout(_cfg("rosdhb"), seed=0, steps=3)
+    assert st_.server.mirror is None
+    path = str(tmp_path / "state.npz")
+    ckpt.save(path, st_._asdict(), step=3)
+    restored = ckpt.restore(path, st_._asdict())
+    assert restored["server"].mirror is None
+    np.testing.assert_array_equal(np.asarray(st_.server.momentum),
+                                  restored["server"].momentum)
+
+
+# --------------------------------------------------------------------------
+# memory accounting (the paper's RoSDHB vs Byz-DASHA-PAGE claim)
+# --------------------------------------------------------------------------
+
+
+def test_server_state_bytes_matches_paper_memory_gap():
+    rosdhb = server_state_bytes(_cfg("rosdhb"), D)
+    dasha = server_state_bytes(_cfg("dasha"), D)
+    assert rosdhb == N * D * 4            # momentum bank only
+    assert dasha == 3 * rosdhb            # + mirror + prev_grad, all f32
+    # a forced-full rosdhb pays dasha's footprint (the pre-specialisation
+    # engine behaviour this PR removes)
+    padded = dataclasses.replace(_cfg("rosdhb"),
+                                 state_layout=StateLayout.full())
+    assert server_state_bytes(padded, D) == dasha
+    loss_fn, params0, _, _ = quadratic_testbed(N, D)
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=_cfg("rosdhb"))
+    assert sim.server_state_bytes() == N * sim.spec.padded_size * 4
+    assert sim.state_layout() == StateLayout.pruned()
+
+
+def test_launch_train_input_specs_follow_layout():
+    """The LLM-path abstract input specs mirror init_state's layout: pruned
+    server slots are absent (None), dasha keeps them — so the lowered train
+    step's state really is momentum-only for RoSDHB at LLM scale."""
+    from repro.configs import INPUT_SHAPES, get_arch
+    from repro.launch import steps as L
+
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    spec = get_arch("gemma_2b")
+    shape = INPUT_SHAPES["train_4k"]
+
+    def server_specs(algo):
+        plan = L.make_train_plan(spec, shape, mesh,
+                                 algo_overrides={"name": algo}, n_workers=4)
+        state, _ = L.train_input_specs(plan, mesh)
+        return plan, state.server
+
+    plan, pruned = server_specs("rosdhb")
+    assert plan.algo.resolved_state_layout() == StateLayout.pruned()
+    assert pruned.mirror is None and pruned.prev_grad is None
+    assert pruned.momentum.shape[0] == 4
+    _, full = server_specs("dasha")
+    assert full.mirror is not None and full.prev_grad is not None
+    assert full.mirror.shape == full.momentum.shape
