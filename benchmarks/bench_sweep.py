@@ -408,15 +408,22 @@ def _sharded_grid(loss_fn, params0, batches):
                 "sharded_warm_s": None}
     c_shard, w_shard, loss_shard = timed(True)
     np.testing.assert_allclose(loss_shard, loss_single, rtol=1e-5, atol=1e-7)
-    # tracked regression (not yet gated): sharding the grid axis makes the
-    # COLD compile slower than single-device — SPMD partitioning overhead on
-    # the same program. Recorded so the cross-PR trajectory is visible.
+    # sharding the grid axis makes the COLD compile slower than
+    # single-device — SPMD partitioning overhead on the same program. Fold
+    # the measurement into the persisted cost model so plan_grid's
+    # fused-vs-partitioned predictions charge sharded compiles correctly.
     cold_overhead = c_shard - c_single
+    from repro.core import CostModel
+    model = CostModel.load_or_default()
+    model = dataclasses.replace(
+        model, sharded_compile_overhead_s=max(0.0, cold_overhead),
+        source=model.source.replace("+sharded", "") + "+sharded")
+    model.save("results/COST_MODEL.json")
     emit("sweep/sharded_grid", w_shard * 1e6,
          f"n_devices={n_dev} warm single={w_single:.2f}s "
          f"sharded={w_shard:.2f}s speedup={w_single / w_shard:.2f}x "
          f"(cold {c_single:.2f}s/{c_shard:.2f}s "
-         f"overhead={cold_overhead:+.2f}s)")
+         f"overhead={cold_overhead:+.2f}s -> cost model)")
     return {"n_devices": n_dev, "single_warm_s": w_single,
             "sharded_warm_s": w_shard, "single_cold_s": c_single,
             "sharded_cold_s": c_shard, "speedup": w_single / w_shard,

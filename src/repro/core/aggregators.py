@@ -21,13 +21,22 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import batchable
+
 
 Aggregator = Callable[[jnp.ndarray], jnp.ndarray]
+
+#: Rules with a Pallas TPU kernel implementation (``repro.kernels.cwtm`` /
+#: ``median`` / ``pairdist``); ``mean`` and ``geomed`` stay pure-jnp (a mean
+#: is already one fused XLA pass; Weiszfeld is a data-dependent fixed-point
+#: loop of matvecs). NNM pre-aggregation is kernel-backed through the
+#: pairwise-distance kernel regardless of the base rule.
+KERNEL_RULES: Tuple[str, ...] = ("cwtm", "median", "krum", "multikrum")
 
 #: ``(name, pre_nnm)`` branch labels of the default aggregator bank, in
 #: switch order. ``(mean, True)`` is intentionally absent — NNM composition
@@ -119,6 +128,11 @@ class AggregatorConfig:
         switch-based aggregator bank whose branch is selected per grid cell
         by a traced index (see :func:`make_aggregator_bank`). ``None`` means
         :data:`DEFAULT_BANK`.
+      use_pallas: kernel backend of the :data:`KERNEL_RULES` rules.
+        ``None`` (default) auto-selects: Pallas TPU kernels on a TPU
+        backend, the pure-jnp reference rules elsewhere. ``True`` forces
+        the kernel path (interpret mode off-TPU — slow, for parity tests);
+        ``False`` forces the jnp rules everywhere.
     """
 
     name: str = "cwtm"
@@ -126,6 +140,7 @@ class AggregatorConfig:
     pre_nnm: bool = False
     geomed_iters: int = 8
     bank: Optional[Tuple[Tuple[str, bool], ...]] = None
+    use_pallas: Optional[bool] = None
 
     def kappa_bound(self, n: int) -> float:
         """Conservative upper bound on the robustness coefficient kappa."""
@@ -153,8 +168,107 @@ class AggregatorConfig:
         return base
 
 
-def _base_rule(name: str, f: int, geomed_iters: int = 8) -> Aggregator:
-    """The named rule without NNM composition."""
+# --------------------------------------------------------------------------
+# Pallas kernel backend (repro.kernels.{cwtm,median,pairdist})
+# --------------------------------------------------------------------------
+
+
+def resolve_kernel_backend(use_pallas: Optional[bool]
+                           ) -> Optional[Dict[str, bool]]:
+    """Resolve ``AggregatorConfig.use_pallas`` against the live backend.
+
+    Returns ``None`` for the pure-jnp rules, else ``{"interpret": bool}``
+    for the kernel path — interpret mode whenever the backend is not a TPU,
+    so ``use_pallas=True`` on CPU exercises the real kernel bodies (the
+    parity-test path) instead of failing to lower.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if not use_pallas:
+        return None
+    return {"interpret": not on_tpu}
+
+
+def kernel_backend_label(use_pallas: Optional[bool]) -> str:
+    """Human-readable resolved backend: ``pallas`` | ``pallas-interpret`` |
+    ``jnp`` (surfaced by ``Simulator`` / the sweep CLI / bench_kernels)."""
+    kb = resolve_kernel_backend(use_pallas)
+    if kb is None:
+        return "jnp"
+    return "pallas-interpret" if kb["interpret"] else "pallas"
+
+
+def _kernel_pairdist(interpret: bool) -> Aggregator:
+    """The batched pairwise-squared-distance kernel as a per-lane op:
+    ``vmap`` over the fused grid axis lands on the explicit [B, n, n]
+    batched launch (see ``repro.kernels.batchable``)."""
+    from repro.kernels.pairdist import pairdist
+    fn = functools.partial(pairdist, use_pallas=True, interpret=interpret)
+    return batchable(fn, fn)
+
+
+def _kernel_nnm(f: int, interpret: bool) -> Aggregator:
+    """Kernel-backed NNM pre-aggregation: distances from the pairdist
+    kernel, then ONE [n, n] x [n, d] mixing matmul (a single memory-bound
+    pass over ``x``) instead of the jnp rule's [n, q, d] gather."""
+    pd = _kernel_pairdist(interpret)
+
+    def pre(x: jnp.ndarray) -> jnp.ndarray:
+        n = x.shape[0]
+        q = n - f
+        idx = jnp.argsort(pd(x), axis=-1)[..., :q]
+        w = jnp.sum(jax.nn.one_hot(idx, n, dtype=jnp.float32), axis=-2) / q
+        return (w @ x.astype(jnp.float32)).astype(x.dtype)
+
+    return pre
+
+
+def _kernel_base_rule(name: str, f: int,
+                      interpret: bool) -> Optional[Aggregator]:
+    """Kernel-backed version of a :data:`KERNEL_RULES` rule (``None`` for
+    rules that stay pure-jnp). Each returned rule maps the per-lane
+    ``[n, d]``; under the engine's vmap the stacked argument routes to the
+    explicitly batched ``[B, n, d]`` kernels."""
+    if name == "cwtm":
+        from repro.kernels.cwtm import cwtm as cwtm_op
+        fn = functools.partial(cwtm_op, f=f, use_pallas=True,
+                               interpret=interpret)
+        return batchable(fn, fn)
+    if name == "median":
+        from repro.kernels.median import median as median_op
+        fn = functools.partial(median_op, use_pallas=True,
+                               interpret=interpret)
+        return batchable(fn, fn)
+    if name in ("krum", "multikrum"):
+        pd = _kernel_pairdist(interpret)
+
+        def rule(x: jnp.ndarray) -> jnp.ndarray:
+            n = x.shape[0]
+            m = 1 if name == "krum" else max(1, n - f)
+            q = max(1, n - f - 2)
+            d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, pd(x))
+            scores = jnp.sum(jnp.sort(d2, axis=-1)[..., :q], axis=-1)
+            sel = jnp.argsort(scores)[:m]
+            # selection as a weight vector: ONE [n] x [n, d] matvec instead
+            # of gathering [m, d] rows and reducing
+            w = jnp.zeros((n,), jnp.float32).at[sel].add(1.0 / m)
+            return (w @ x.astype(jnp.float32)).astype(x.dtype)
+
+        return rule
+    return None
+
+
+def _base_rule(name: str, f: int, geomed_iters: int = 8,
+               kernel_backend: Optional[Dict[str, bool]] = None
+               ) -> Aggregator:
+    """The named rule without NNM composition. With ``kernel_backend``
+    (see :func:`resolve_kernel_backend`), :data:`KERNEL_RULES` rules
+    dispatch to the Pallas kernels; everything else keeps the jnp rule."""
+    if kernel_backend is not None:
+        rule = _kernel_base_rule(name, f, kernel_backend["interpret"])
+        if rule is not None:
+            return rule
     if name == "mean":
         return mean
     if name == "cwtm":
@@ -171,12 +285,20 @@ def _base_rule(name: str, f: int, geomed_iters: int = 8) -> Aggregator:
 
 
 def make_aggregator(cfg: AggregatorConfig) -> Aggregator:
-    """Build an aggregator ``[n, d] -> [d]`` from a config."""
+    """Build an aggregator ``[n, d] -> [d]`` from a config.
+
+    ``cfg.use_pallas`` selects the kernel backend (default: Pallas TPU
+    kernels on TPU, jnp rules elsewhere — :func:`resolve_kernel_backend`).
+    """
     f = cfg.f
-    base = _base_rule(cfg.name, f, cfg.geomed_iters)
+    kb = resolve_kernel_backend(cfg.use_pallas)
+    base = _base_rule(cfg.name, f, cfg.geomed_iters, kernel_backend=kb)
     if cfg.pre_nnm and cfg.name != "mean":
+        pre = (_kernel_nnm(f, kb["interpret"]) if kb is not None
+               else functools.partial(nnm, f=f))
+
         def agg(x: jnp.ndarray) -> jnp.ndarray:
-            return base(nnm(x, f))
+            return base(pre(x))
         return agg
     return base
 
@@ -224,11 +346,14 @@ def make_aggregator_bank(cfg: AggregatorConfig) -> BankAggregator:
     """
     entries = cfg.bank if cfg.bank is not None else DEFAULT_BANK
     f, iters = cfg.f, cfg.geomed_iters
+    kb = resolve_kernel_backend(cfg.use_pallas)
+    pre_nnm = (_kernel_nnm(f, kb["interpret"]) if kb is not None
+               else functools.partial(nnm, f=f))
 
     def branch(name: str, pre: bool) -> Aggregator:
-        base = _base_rule(name, f, iters)
+        base = _base_rule(name, f, iters, kernel_backend=kb)
         if pre and name != "mean":
-            return lambda x: base(nnm(x, f))
+            return lambda x: base(pre_nnm(x))
         return base
 
     branches = tuple(branch(n, p) for n, p in entries)

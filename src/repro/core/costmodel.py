@@ -11,13 +11,16 @@ unconditionally and the Table-1 grid regressed to 0.52x warm
 (results/BENCH_sweep.json, cross_algo_grid); this module makes the choice
 *measured* instead of assumed.
 
-:class:`CostModel` is four calibrated scalars:
+:class:`CostModel` is five calibrated scalars:
 
 * ``compile_s`` + ``compile_s_per_branch``: compile cost of one bank
   program as an affine function of its algorithm-branch count.
 * ``cell_round_us`` + ``cell_round_us_per_branch``: warm execution cost of
   one (cell x seed) row for one round, again affine in the branch count
   (the per-branch term is the switch-divergence price).
+* ``sharded_compile_overhead_s``: extra compile seconds per program when it
+  is laid out over a >1-device mesh, charged per program so it penalises
+  the many-program partition (measured by bench_sweep's sharded probe).
 
 ``benchmarks/bench_sweep.py``'s calibration pass measures a 1-branch and a
 W-branch probe bank cold+warm and persists the fit to
@@ -55,44 +58,59 @@ class CostModel:
     compile_s_per_branch: float    # extra compile cost per algorithm branch
     cell_round_us: float           # warm us per (cell x seed) row per round
     cell_round_us_per_branch: float  # extra warm us per row-round per extra branch
+    #: Extra compile seconds when the program is laid out over a >1-device
+    #: mesh (SPMD partitioning + per-device codegen). Measured by
+    #: bench_sweep's ``_sharded_grid`` probe (observed ~+1.4s on the 8-way
+    #: CPU mesh) and folded back into the persisted model; 0.0 until a
+    #: sharded calibration has run.
+    sharded_compile_overhead_s: float = 0.0
     source: str = "pinned-default"
 
-    def program_s(self, *, branches: int, rows: int, rounds: int) -> float:
+    def program_s(self, *, branches: int, rows: int, rounds: int,
+                  sharded: bool = False) -> float:
         """Predicted total seconds (compile + warm execution) of ONE bank
         program with ``branches`` algorithm branches over ``rows`` =
-        cells x seeds flat lanes for ``rounds`` scan steps."""
+        cells x seeds flat lanes for ``rounds`` scan steps. ``sharded``
+        adds the mesh-compile overhead (each program pays it once, so the
+        per-algorithm partition pays it once per algorithm)."""
         if branches < 1:
             raise ValueError(f"branches must be >= 1, got {branches}")
         if rows < 0 or rounds < 0:
             raise ValueError(f"rows/rounds must be >= 0, got {rows}/{rounds}")
         compile_cost = self.compile_s + self.compile_s_per_branch * branches
+        if sharded:
+            compile_cost += self.sharded_compile_overhead_s
         row_round_us = (self.cell_round_us
                         + self.cell_round_us_per_branch * (branches - 1))
         return compile_cost + row_round_us * 1e-6 * rows * rounds
 
     def fused_s(self, cells_per_algo: Dict[str, int], n_seeds: int,
-                rounds: int) -> float:
+                rounds: int, *, sharded: bool = False) -> float:
         """Predicted cost of running the whole group as ONE cross-algorithm
         bank (branch count = number of distinct algorithms)."""
         rows = sum(cells_per_algo.values()) * n_seeds
         return self.program_s(branches=len(cells_per_algo), rows=rows,
-                              rounds=rounds)
+                              rounds=rounds, sharded=sharded)
 
     def partitioned_s(self, cells_per_algo: Dict[str, int], n_seeds: int,
-                      rounds: int) -> float:
+                      rounds: int, *, sharded: bool = False) -> float:
         """Predicted cost of the per-algorithm partition: one single-branch
-        bank program (its own compile) per algorithm."""
+        bank program (its own compile — and its own mesh-compile overhead
+        when ``sharded``) per algorithm."""
         return sum(
-            self.program_s(branches=1, rows=c * n_seeds, rounds=rounds)
+            self.program_s(branches=1, rows=c * n_seeds, rounds=rounds,
+                           sharded=sharded)
             for c in cells_per_algo.values())
 
     def prefer_fused(self, cells_per_algo: Dict[str, int], n_seeds: int,
-                     rounds: int) -> bool:
+                     rounds: int, *, sharded: bool = False) -> bool:
         """The plan decision: fuse iff the fused program is predicted no
         slower than the per-algorithm partition (ties fuse — fewer
-        programs)."""
-        return (self.fused_s(cells_per_algo, n_seeds, rounds)
-                <= self.partitioned_s(cells_per_algo, n_seeds, rounds))
+        programs). Sharded compiles tilt toward fusing: the overhead is
+        per program, and the partition compiles more programs."""
+        return (self.fused_s(cells_per_algo, n_seeds, rounds, sharded=sharded)
+                <= self.partitioned_s(cells_per_algo, n_seeds, rounds,
+                                      sharded=sharded))
 
     # -- calibration ------------------------------------------------------
 

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aggregators as G
 from repro.core import algorithms as alg
 from repro.utils import tree as T
 
@@ -84,6 +85,11 @@ class Simulator:
     def __post_init__(self):
         self.spec = T.make_flat_spec(self.params0)
         self.d = self.spec.size
+        # resolved aggregation backend ("jnp" | "pallas" |
+        # "pallas-interpret") — which implementation the round body's
+        # aggregator dispatches to, surfaced for logs/benches
+        self.agg_backend = G.kernel_backend_label(
+            self.cfg.aggregator.use_pallas)
         # Number of times the round body has been traced: jit compiles trace
         # exactly once, so this counts distinct XLA programs built through
         # this Simulator (the one-program-per-grid acceptance check in

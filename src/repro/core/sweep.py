@@ -120,7 +120,8 @@ def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
                    *, n_honest: int = 10, f: int = 3, ratio: float = 0.1,
                    gamma: float = 0.05, beta: float = 0.9,
                    pre_nnm: bool = True, local: bool = False,
-                   alie_z: Optional[float] = 1.5) -> List[Scenario]:
+                   alie_z: Optional[float] = 1.5,
+                   use_pallas: Optional[bool] = None) -> List[Scenario]:
     """Enumerate the attack x aggregator x algorithm product into scenarios.
 
     ``f`` is fixed across the grid so every scenario shares the worker count
@@ -132,6 +133,12 @@ def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
     and :func:`repro.core.algorithms.algo_payload_bytes` accounts for that
     wire format). Unknown algorithm/attack/aggregator names raise
     ``ValueError`` listing the known names.
+
+    ``use_pallas`` selects the aggregation backend for every cell (None:
+    Pallas TPU kernels on TPU, jnp rules elsewhere — see
+    :func:`repro.core.aggregators.resolve_kernel_backend`). It rides the
+    shared aggregator config, so it is part of plan_grid's fusion key:
+    grids with different backends never fuse into one program.
     """
     _validate_grid_names(algos, attacks, aggregators)
     out = []
@@ -140,10 +147,12 @@ def grid_scenarios(algos: Sequence[str] = ("rosdhb",),
     for algo, attack, agg in itertools.product(algos, attacks, aggregators):
         # dgd's mean carries the grid's f so its (inert) aggregator config
         # stays key-compatible with the robust cells' bank branches
-        aggregator = (G.AggregatorConfig(name="mean", f=max(f, 1))
+        aggregator = (G.AggregatorConfig(name="mean", f=max(f, 1),
+                                         use_pallas=use_pallas)
                       if algo == "dgd"
                       else G.AggregatorConfig(name=agg, f=max(f, 1),
-                                              pre_nnm=pre_nnm))
+                                              pre_nnm=pre_nnm,
+                                              use_pallas=use_pallas))
         cfg = alg.AlgorithmConfig(
             name=algo, n_workers=n_honest + f, f=f, gamma=gamma, beta=beta,
             sparsifier=sparsifier, aggregator=aggregator,
@@ -439,7 +448,7 @@ def plan_grid(scenarios: Sequence[Scenario], *,
               fuse: bool = True, cross_algo: bool = True,
               cost_model: Optional[CostModel] = None,
               rounds: Optional[int] = None,
-              n_seeds: int = 1) -> GridPlan:
+              n_seeds: int = 1, sharded: bool = False) -> GridPlan:
     """Partition ``scenarios`` into maximal fusible banks.
 
     Cells fuse when they share every static field of their config and
@@ -466,7 +475,10 @@ def plan_grid(scenarios: Sequence[Scenario], *,
     program (every branch computed per vmap lane) beats the per-algorithm
     partition's extra compiles; otherwise the group splits into
     single-algorithm banks (still attack/agg/ratio-fused). Decisions are
-    recorded in ``GridPlan.notes``.
+    recorded in ``GridPlan.notes``. ``sharded`` tells the model the grid
+    will compile mesh-sharded (adds the measured
+    ``sharded_compile_overhead_s`` to every compile term — see
+    ``benchmarks/bench_sweep.py``'s ``_sharded_grid``).
 
     ``cross_algo=False`` keeps the algorithm (and its beta/``a``/gamma) a
     static config axis — the legacy one-bank-per-algorithm partition, kept
@@ -520,8 +532,10 @@ def plan_grid(scenarios: Sequence[Scenario], *,
             continue
         cells = collections.Counter(sc.cfg.name for sc, _ in group)
         if cross_algo and cost_model is not None and len(cells) > 1:
-            fused_s = cost_model.fused_s(dict(cells), n_seeds, rounds)
-            part_s = cost_model.partitioned_s(dict(cells), n_seeds, rounds)
+            fused_s = cost_model.fused_s(dict(cells), n_seeds, rounds,
+                                         sharded=sharded)
+            part_s = cost_model.partitioned_s(dict(cells), n_seeds, rounds,
+                                              sharded=sharded)
             verdict = "fused" if fused_s <= part_s else "partitioned"
             notes.append(
                 f"cost-model[{cost_model.source}] {verdict} "
@@ -769,7 +783,8 @@ def run_scenarios(scenarios: Sequence[Scenario], *,
     rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
     plan = plan_grid(scenarios, fuse=fuse_attacks, cross_algo=cross_algo,
                      cost_model=cost_model, rounds=rounds,
-                     n_seeds=len(seeds))
+                     n_seeds=len(seeds),
+                     sharded=shard and len(devices or jax.devices()) > 1)
     rows_by_label = execute_plan(
         plan, loss_fn=loss_fn, params0=params0, batches=batches, seeds=seeds,
         eval_fn=eval_fn, eval_batch=eval_batch, shard=shard,
@@ -854,6 +869,13 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
                         "visible devices (--no-shard: single device); force "
                         "virtual CPU devices with "
                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    p.add_argument("--kernels", default="auto",
+                   choices=["auto", "pallas", "jnp"],
+                   help="aggregation backend: 'auto' picks the Pallas TPU "
+                        "kernels on TPU and the jnp rules elsewhere; "
+                        "'pallas' forces the kernel path (interpret mode "
+                        "off-TPU — slow, parity testing only); 'jnp' forces "
+                        "the XLA reference rules")
     p.add_argument("--cost-model", default=None, metavar="PATH|auto",
                    help="decide fusion vs per-algorithm partition with a "
                         "measured cost model: a COST_MODEL.json path, or "
@@ -884,10 +906,11 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
         n = spec.n_workers
         testbed, alpha_het = spec.testbed, spec.alpha_het
     else:
+        use_pallas = {"auto": None, "pallas": True, "jnp": False}[args.kernels]
         scenarios = grid_scenarios(
             args.algos.split(","), args.attacks.split(","),
             args.aggs.split(","), n_honest=args.n_honest, f=args.f,
-            ratio=args.ratio, gamma=args.gamma)
+            ratio=args.ratio, gamma=args.gamma, use_pallas=use_pallas)
         n = args.n_honest + args.f
         testbed = args.testbed
     if args.plan:

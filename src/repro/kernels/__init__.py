@@ -1,7 +1,40 @@
 """Pallas TPU kernels for the perf-critical compute of the virtual server
-(cwtm, randk) and the attention hot loop (flash_attention).
+(the robust-aggregation families cwtm / median / pairdist plus the randk
+compressor) and the attention hot loop (flash_attention).
 
 Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), ops.py (jitted
 wrapper with TPU/XLA backend selection) and ref.py (pure-jnp oracle used by
-the interpret-mode test sweeps).
+the interpret-mode test sweeps). The aggregation kernels additionally ship
+explicitly *batched* entry points over the grid engine's fused
+``[n_cells * n_seeds]`` leading axis; :func:`batchable` routes ``jax.vmap``
+of the per-lane rule onto them.
 """
+
+from __future__ import annotations
+
+from typing import Callable
+
+from jax.custom_batching import custom_vmap
+
+
+def batchable(fn2d: Callable, fn3d: Callable) -> Callable:
+    """Route ``jax.vmap`` of a per-lane ``[n, d]`` rule onto an explicitly
+    batched ``[B, n, d]`` kernel.
+
+    The grid engine runs aggregation per vmap lane of the fused
+    ``[n_cells * n_seeds]`` axis; without this wrapper, ``vmap`` of a
+    ``pallas_call`` falls back to Pallas's generic batching rule. With it,
+    the engine's vmap lands on the hand-laid batched grid (one
+    (B, d/block_d) launch, batch as the leading grid dimension). An
+    unbatched call — or a vmap that does not map the stacked argument —
+    just runs ``fn2d``.
+    """
+    op = custom_vmap(fn2d)
+
+    @op.def_vmap
+    def _batch_rule(axis_size, in_batched, x):  # noqa: ANN001
+        if not in_batched[0]:
+            return fn2d(x), False
+        return fn3d(x), True
+
+    return op

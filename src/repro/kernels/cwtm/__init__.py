@@ -1,5 +1,8 @@
-from repro.kernels.cwtm.cwtm import cwtm_pallas
+from repro.kernels.cwtm.cwtm import (cwtm_pallas, cwtm_pallas_batched,
+                                     cwtm_weights, sort_network_compares,
+                                     sorted_weighted_batched)
 from repro.kernels.cwtm.ops import cwtm
 from repro.kernels.cwtm.ref import cwtm_ref
 
-__all__ = ["cwtm_pallas", "cwtm", "cwtm_ref"]
+__all__ = ["cwtm_pallas", "cwtm_pallas_batched", "cwtm", "cwtm_ref",
+           "cwtm_weights", "sort_network_compares", "sorted_weighted_batched"]

@@ -7,7 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cwtm.cwtm import cwtm_pallas
+from repro.kernels.cwtm.cwtm import cwtm_pallas, cwtm_pallas_batched
 from repro.kernels.cwtm.ref import cwtm_ref
 
 
@@ -15,10 +15,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("f", "use_pallas", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("f", "use_pallas", "interpret", "block_d"))
 def cwtm(x: jnp.ndarray, f: int, *, use_pallas: bool | None = None,
-         interpret: bool = False) -> jnp.ndarray:
-    """Coordinate-wise trimmed mean over axis 0.
+         interpret: bool = False, block_d: int = 2048) -> jnp.ndarray:
+    """Coordinate-wise trimmed mean over the worker axis.
+
+    Accepts the per-lane ``[n, d]`` shape and the grid engine's batched
+    ``[B, n, d]`` shape (B = n_cells * n_seeds fusion lanes) — the batched
+    layout maps to ONE kernel launch with a (B, d/block_d) grid.
 
     use_pallas=None -> Pallas on TPU, XLA reference elsewhere (the dry-run
     and CPU tests take the XLA path; kernel correctness is covered by the
@@ -26,6 +31,8 @@ def cwtm(x: jnp.ndarray, f: int, *, use_pallas: bool | None = None,
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if use_pallas:
-        return cwtm_pallas(x, f, interpret=interpret)
-    return cwtm_ref(x, f)
+    if not use_pallas:
+        return cwtm_ref(x, f)
+    if x.ndim == 3:
+        return cwtm_pallas_batched(x, f, block_d=block_d, interpret=interpret)
+    return cwtm_pallas(x, f, block_d=block_d, interpret=interpret)

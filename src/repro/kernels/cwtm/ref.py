@@ -6,9 +6,11 @@ import jax.numpy as jnp
 
 
 def cwtm_ref(x: jnp.ndarray, f: int) -> jnp.ndarray:
-    """x: [n, d] -> [d]: drop the f largest / f smallest per coordinate,
-    average the middle n - 2f."""
-    n = x.shape[0]
+    """x: [..., n, d] -> [..., d]: drop the f largest / f smallest per
+    coordinate, average the middle n - 2f (the worker axis is axis -2, so
+    the same oracle covers the batched ``[B, n, d]`` grid-engine shape)."""
+    n = x.shape[-2]
     assert n > 2 * f, (n, f)
-    xs = jnp.sort(x, axis=0)
-    return jnp.mean(xs[f:n - f].astype(jnp.float32), axis=0).astype(x.dtype)
+    xs = jnp.sort(x, axis=-2)
+    return jnp.mean(xs[..., f:n - f, :].astype(jnp.float32),
+                    axis=-2).astype(x.dtype)

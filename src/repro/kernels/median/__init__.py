@@ -1,0 +1,7 @@
+from repro.kernels.median.median import (median_pallas, median_pallas_batched,
+                                         median_weights)
+from repro.kernels.median.ops import median
+from repro.kernels.median.ref import median_ref
+
+__all__ = ["median_pallas", "median_pallas_batched", "median_weights",
+           "median", "median_ref"]

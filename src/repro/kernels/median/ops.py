@@ -1,0 +1,34 @@
+"""Jitted wrapper for the median kernel with automatic backend selection."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.median.median import median_pallas, median_pallas_batched
+from repro.kernels.median.ref import median_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_pallas", "interpret", "block_d"))
+def median(x: jnp.ndarray, *, use_pallas: bool | None = None,
+           interpret: bool = False, block_d: int = 2048) -> jnp.ndarray:
+    """Coordinate-wise median over the worker axis.
+
+    Accepts the per-lane ``[n, d]`` shape and the grid engine's batched
+    ``[B, n, d]`` shape; use_pallas=None -> Pallas on TPU, XLA reference
+    elsewhere (the pattern of ``repro.kernels.cwtm.ops``).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return median_ref(x)
+    if x.ndim == 3:
+        return median_pallas_batched(x, block_d=block_d, interpret=interpret)
+    return median_pallas(x, block_d=block_d, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the coordinate-wise median kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def median_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., n, d] -> [..., d]: per-coordinate median over the worker
+    axis (axis -2), midpoint-averaged for even n — the same rule as
+    ``repro.core.aggregators.coordinate_median``."""
+    return jnp.median(x, axis=-2)

@@ -1,0 +1,7 @@
+from repro.kernels.pairdist.ops import pairdist
+from repro.kernels.pairdist.pairdist import (pairdist_pallas,
+                                             pairdist_pallas_batched)
+from repro.kernels.pairdist.ref import pairdist_ref
+
+__all__ = ["pairdist", "pairdist_pallas", "pairdist_pallas_batched",
+           "pairdist_ref"]

@@ -1,0 +1,37 @@
+"""Jitted wrapper for the pairwise-distance kernel with backend selection."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairdist.pairdist import (pairdist_pallas,
+                                             pairdist_pallas_batched)
+from repro.kernels.pairdist.ref import pairdist_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_pallas", "interpret", "block_d"))
+def pairdist(x: jnp.ndarray, *, use_pallas: bool | None = None,
+             interpret: bool = False, block_d: int = 2048) -> jnp.ndarray:
+    """Pairwise squared distances over the worker axis (f32).
+
+    Accepts the per-lane ``[n, d]`` shape and the grid engine's batched
+    ``[B, n, d]`` shape; serves NNM pre-aggregation and (Multi-)Krum
+    scoring in ``repro.core.aggregators``. use_pallas=None -> Pallas on
+    TPU, XLA reference elsewhere.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return pairdist_ref(x)
+    if x.ndim == 3:
+        return pairdist_pallas_batched(x, block_d=block_d,
+                                       interpret=interpret)
+    return pairdist_pallas(x, block_d=block_d, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the pairwise squared-distance kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairdist_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., n, d] -> [..., n, n] clamped squared distances in f32 —
+    the ``sq_i + sq_j - 2 x x^T`` rule of
+    ``repro.core.aggregators._pairwise_sq_dists``, batched over any
+    leading axes."""
+    xf = x.astype(jnp.float32)
+    sq = jnp.sum(jnp.square(xf), axis=-1)
+    g = jnp.einsum("...nd,...md->...nm", xf, xf)
+    d2 = sq[..., :, None] + sq[..., None, :] - 2.0 * g
+    return jnp.maximum(d2, 0.0)

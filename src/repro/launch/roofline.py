@@ -1,7 +1,9 @@
 """Three-term roofline from the compiled dry-run artifact (see §Roofline).
 
-Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
-~50 GB/s/link ICI. ``cost_analysis()`` FLOPs/bytes are per-device (post-SPMD
+Hardware rates live in :class:`HardwareSpec` (default: TPU v5e — 197
+TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI); pick one by name
+via :data:`KNOWN_HARDWARE` or let :func:`detect_hardware` read the live
+backend. ``cost_analysis()`` FLOPs/bytes are per-device (post-SPMD
 partitioning), so the terms below are already per-chip seconds.
 """
 
@@ -10,9 +12,62 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
-HBM_BW = 819e9             # B/s per chip
-ICI_BW = 50e9              # B/s per link (1 link assumed per transfer)
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip peak rates of one accelerator generation."""
+
+    name: str
+    peak_flops: float  # bf16 FLOP/s per chip
+    hbm_bw: float      # HBM B/s per chip
+    ici_bw: float      # B/s per interconnect link (1 link per transfer)
+
+
+TPU_V5E = HardwareSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                       ici_bw=50e9)
+
+#: Specs addressable by ``--hardware`` CLI overrides. Rates are public
+#: per-chip peaks; ``cpu`` is a rough dev-host stand-in so rooflines stay
+#: finite (and obviously not memory-bound-gated) in CI.
+KNOWN_HARDWARE: Dict[str, HardwareSpec] = {
+    "tpu-v5e": TPU_V5E,
+    "tpu-v4": HardwareSpec("tpu-v4", peak_flops=275e12, hbm_bw=1200e9,
+                           ici_bw=50e9),
+    "tpu-v5p": HardwareSpec("tpu-v5p", peak_flops=459e12, hbm_bw=2765e9,
+                            ici_bw=100e9),
+    "tpu-v6e": HardwareSpec("tpu-v6e", peak_flops=918e12, hbm_bw=1640e9,
+                            ici_bw=100e9),
+    "cpu": HardwareSpec("cpu", peak_flops=0.5e12, hbm_bw=50e9, ici_bw=10e9),
+}
+
+# Backwards-compatible module constants (pre-HardwareSpec callers).
+PEAK_FLOPS = TPU_V5E.peak_flops
+HBM_BW = TPU_V5E.hbm_bw
+ICI_BW = TPU_V5E.ici_bw
+
+
+def detect_hardware(override: Optional[str] = None) -> HardwareSpec:
+    """Resolve a :class:`HardwareSpec` from an explicit name or the live
+    JAX backend's ``device_kind`` (falling back to the TPU v5e default on
+    unrecognised TPU kinds, ``cpu`` on CPU hosts). Unknown ``override``
+    names raise ``ValueError`` listing the known ones."""
+    if override is not None:
+        try:
+            return KNOWN_HARDWARE[override]
+        except KeyError:
+            raise ValueError(
+                f"unknown hardware {override!r} "
+                f"(known: {sorted(KNOWN_HARDWARE)})") from None
+    import jax
+    kind = jax.devices()[0].device_kind.lower()
+    for name, spec in KNOWN_HARDWARE.items():
+        # device_kind strings look like "TPU v5 lite", "TPU v4", "cpu"
+        tag = name.replace("tpu-", "tpu ").replace("v5e", "v5 lite")
+        if tag in kind or name == kind:
+            return spec
+    if "tpu" in kind:
+        return TPU_V5E
+    return KNOWN_HARDWARE["cpu"]
 
 
 @dataclasses.dataclass
@@ -23,18 +78,19 @@ class Roofline:
     model_flops_total: float  # 6*N*D (dense) / 6*N_active*D (MoE), all chips
 
     n_chips: int = 256
+    spec: HardwareSpec = TPU_V5E
 
     @property
     def compute_s(self) -> float:
-        return self.flops_per_chip / PEAK_FLOPS
+        return self.flops_per_chip / self.spec.peak_flops
 
     @property
     def memory_s(self) -> float:
-        return self.hbm_bytes_per_chip / HBM_BW
+        return self.hbm_bytes_per_chip / self.spec.hbm_bw
 
     @property
     def collective_s(self) -> float:
-        return self.wire_bytes_per_chip / ICI_BW
+        return self.wire_bytes_per_chip / self.spec.ici_bw
 
     @property
     def bottleneck(self) -> str:
@@ -54,6 +110,7 @@ class Roofline:
 
     def as_dict(self) -> Dict:
         return {
+            "hardware": self.spec.name,
             "flops_per_chip": self.flops_per_chip,
             "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
             "wire_bytes_per_chip": self.wire_bytes_per_chip,
@@ -64,6 +121,36 @@ class Roofline:
             "model_flops_total": self.model_flops_total,
             "useful_flops_fraction": self.useful_flops_fraction,
         }
+
+
+def aggregation_roofline(*, batch: int, n: int, d: int,
+                         dtype_bytes: int = 4,
+                         spec: Optional[HardwareSpec] = None,
+                         n_chips: int = 1) -> Roofline:
+    """Roofline of one batched robust-aggregation pass (the Pallas kernels
+    of ``repro.kernels``): ``batch`` fused grid lanes, each reducing an
+    ``[n, d]`` worker stack to ``[d]``.
+
+    Bytes: one read of every worker stack plus one write of the result —
+    the single-pass floor the kernels are built to hit. FLOPs: the bitonic
+    compare-exchange network (``sort_network_compares``) at one min+max (2
+    flops) per lane-pair per coordinate plus the trimmed-window reduction —
+    a deliberate overcount of the cheaper median/pairdist paths, yet still
+    memory-bound by orders of magnitude at every shape the engine runs
+    (``bottleneck == "memory"``), which is the per-kernel check
+    ``benchmarks/bench_kernels.py`` records. Wire bytes are zero: the pass
+    is chip-local.
+    """
+    from repro.kernels.cwtm import sort_network_compares
+    n_pad = max(2, 1 << (n - 1).bit_length())
+    bytes_moved = batch * (n * d + d) * dtype_bytes
+    flops = batch * d * (2 * sort_network_compares(n_pad) + n)
+    return Roofline(flops_per_chip=flops / n_chips,
+                    hbm_bytes_per_chip=bytes_moved / n_chips,
+                    wire_bytes_per_chip=0.0,
+                    model_flops_total=flops,
+                    n_chips=n_chips,
+                    spec=spec if spec is not None else TPU_V5E)
 
 
 # --------------------------------------------------------------------------

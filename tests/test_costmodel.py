@@ -89,6 +89,46 @@ def test_decision_flips_with_grid_size():
                                                rounds=3000)
 
 
+def test_sharded_compile_overhead_charges_per_program():
+    """The mesh-compile overhead is paid once per program, so it penalises
+    the many-program partition: a grid on the fused/partitioned knife edge
+    tips toward fusing when sharded."""
+    m = dataclasses.replace(SPLIT_HAPPY, compile_s=1.0,
+                            sharded_compile_overhead_s=2.5)
+    cells = {"a": 2, "b": 2, "c": 2}
+    for sharded in (False, True):
+        fused = m.fused_s(cells, n_seeds=1, rounds=10, sharded=sharded)
+        part = m.partitioned_s(cells, n_seeds=1, rounds=10, sharded=sharded)
+        base_f = m.fused_s(cells, n_seeds=1, rounds=10)
+        base_p = m.partitioned_s(cells, n_seeds=1, rounds=10)
+        if sharded:
+            # 1 program vs len(cells) programs
+            assert fused == pytest.approx(base_f + 2.5)
+            assert part == pytest.approx(base_p + 2.5 * len(cells))
+        else:
+            assert (fused, part) == (base_f, base_p)
+    # default: zero overhead, sharded is a no-op
+    assert DEFAULT_COST_MODEL.sharded_compile_overhead_s == 0.0
+    assert DEFAULT_COST_MODEL.program_s(branches=2, rows=4, rounds=10,
+                                        sharded=True) == \
+        DEFAULT_COST_MODEL.program_s(branches=2, rows=4, rounds=10)
+
+
+def test_load_tolerates_pre_sharded_schema(tmp_path):
+    """COST_MODEL.json files written before the sharded term existed load
+    with the 0.0 default (missing keys are NOT stale keys)."""
+    path = str(tmp_path / "COST_MODEL.json")
+    DEFAULT_COST_MODEL.save(path)
+    with open(path) as fh:
+        raw = json.load(fh)
+    del raw["sharded_compile_overhead_s"]
+    with open(path, "w") as fh:
+        json.dump(raw, fh)
+    got = CostModel.load(path)
+    assert got.sharded_compile_overhead_s == 0.0
+    assert got == DEFAULT_COST_MODEL
+
+
 def test_save_load_roundtrip_and_stale_key_rejection(tmp_path):
     path = str(tmp_path / "COST_MODEL.json")
     saved = dataclasses.replace(DEFAULT_COST_MODEL, source="calib-test")
