@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.launch import make_host_mesh
-from repro.models import cache_init, forward, logits_fn, model_init
+from repro.models import (cache_init, forward, logits_fn, make_decode_step,
+                          model_init)
 
 
 def main():
@@ -56,17 +57,9 @@ def main():
               f"(family={cfg.family}, cache kinds="
               f"{sorted(caches.keys())})")
 
-        @jax.jit
-        def decode_one(params, tok, caches, pos):
-            db = {"tokens": tok} if cfg.input_kind == "tokens" else \
-                {"embeddings": jax.nn.one_hot(tok, cfg.d_model,
-                                              dtype=jnp.float32)}
-            if cfg.family == "vlm":
-                db["image_embeddings"] = batch["image_embeddings"]
-            h, caches, _ = forward(params, cfg, db, mode="decode", pos=pos,
-                                   caches=caches)
-            nxt = jnp.argmax(logits_fn(params, cfg, h), -1)
-            return nxt, caches
+        # the shared jitted decode step (repro.models.make_decode_step):
+        # traced position, one compiled program for the whole decode loop
+        decode_one = make_decode_step(cfg, batch.get("image_embeddings"))
 
         tok = last
         out = [np.asarray(tok)[:, 0]]

@@ -24,6 +24,7 @@ from repro.core.aggregators import (
 from repro.core.attacks import AttackConfig, apply_attack
 from repro.core.algorithms import (
     ALGO_BANK,
+    SERVE_ALGORITHMS,
     AlgorithmConfig,
     ScenarioParams,
     ServerState,
@@ -32,11 +33,14 @@ from repro.core.algorithms import (
     algo_payload_bytes,
     init_state,
     make_algorithm_bank,
+    make_serve_apply_fn,
+    make_wire_fn,
     server_round,
     server_state_bytes,
     apply_direction,
     theorem1_hparams,
 )
+from repro.core.wire import per_worker_payload_bytes, round_payload_bytes
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.simulator import Simulator, SimState, stack_batches
 from repro.core.sweep import (
@@ -52,11 +56,13 @@ __all__ = [
     "AggregatorConfig", "make_aggregator", "make_aggregator_bank",
     "bank_index", "DEFAULT_BANK",
     "AttackConfig", "apply_attack",
-    "ALGO_BANK", "AlgorithmConfig", "ScenarioParams", "ServerState",
-    "StateLayout",
+    "ALGO_BANK", "SERVE_ALGORITHMS", "AlgorithmConfig", "ScenarioParams",
+    "ServerState", "StateLayout",
     "algo_index", "algo_payload_bytes", "init_state", "make_algorithm_bank",
+    "make_serve_apply_fn", "make_wire_fn",
     "server_round", "server_state_bytes", "apply_direction",
     "theorem1_hparams",
+    "per_worker_payload_bytes", "round_payload_bytes",
     "CostModel", "DEFAULT_COST_MODEL",
     "Simulator", "SimState", "stack_batches",
     "Scenario", "GridPlan", "FusedBank", "KNOWN_ALGORITHMS",

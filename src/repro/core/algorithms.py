@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from repro.core import attacks as A
 from repro.core import aggregators as G
 from repro.core import compression as C
+from repro.core import wire as W
 
 
 # --------------------------------------------------------------------------
@@ -392,53 +393,116 @@ def _byzantine_overwrite(cfg: AlgorithmConfig, atk_state: Optional[Any],
 # branch reads the slots it uses. Every branch preserves the uniform
 # ServerState structure and leaves the slots it does not own bit-for-bit
 # untouched.
+#
+# Each memoryless branch (rosdhb / dgd / robust_dgd) is split into a WIRE
+# half (what the clients jointly put on the uplink: sparsified unbiased
+# reconstructions, with Byzantine rows overwritten) and an APPLY half (what
+# the server does with a received wire bank: momentum, aggregation, state
+# update). The step functions compose the two halves in the original op
+# order, so the fused simulator graph is unchanged; the streaming parameter
+# server (repro.serve) runs the same halves in separate programs — the
+# clients the wire half, the server the apply half — which is what makes
+# server <-> simulator trajectories bit-for-bit comparable. The apply
+# halves additionally accept a ``present``/``discount`` row masking for
+# partial participation + staleness discounting; ``None`` (the simulator
+# path) compiles to exactly the legacy graph.
 AlgoStepFn = Callable[..., Tuple[jnp.ndarray, ServerState]]
 
 
-def _rosdhb_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
-                 attack_params, attack_idx, ratio):
-    # Steps 1-4: masks (global or local) + unbiased reconstruction.
+def _compressed_wire(cfg, atk_state, grads, mask_key, atk_key,
+                     attack_params=None, attack_idx=None, ratio=None):
+    # Steps 1-4: masks (global or local) + unbiased reconstruction, then the
+    # Byzantine overwrite on the wire quantity.
     n, d = grads.shape
     sp = cfg.sparsifier
     masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype, ratio=ratio)
     g_tilde = C.compress(grads, masks, sp, ratio=ratio)
-    g_tilde, atk = _byzantine_overwrite(cfg, state.attack, g_tilde, atk_key,
-                                        attack_params, attack_idx)
+    return _byzantine_overwrite(cfg, atk_state, g_tilde, atk_key,
+                                attack_params, attack_idx)
+
+
+def _row_mask(wire, prev, present, discount):
+    """Stale-discounted participation masking: rows with ``present`` False
+    keep ``prev``; present rows contribute ``discount * wire`` (discount is
+    1.0 for fresh updates — an exact multiply, so full participation is
+    bit-for-bit the unmasked path)."""
+    eff = wire * discount[:, None].astype(wire.dtype)
+    return jnp.where(present[:, None], eff, prev)
+
+
+def _rosdhb_apply(cfg, agg, state, wire, hparams,
+                  present=None, discount=None):
     # Step 5: per-worker server momentum (math dtype configurable — bf16
     # halves the per-round transient at LLM scale, EXPERIMENTS §Perf).
     beta, one_m_beta = hparams[0], hparams[2]
     cdt = jnp.dtype(cfg.server_compute_dtype)
-    m = (beta * state.momentum.astype(cdt)
-         + one_m_beta * g_tilde.astype(cdt))
+    m_prev = state.momentum.astype(cdt)
+    w = wire.astype(cdt)
+    if discount is not None:
+        w = w * discount[:, None].astype(cdt)
+    m = beta * m_prev + one_m_beta * w
+    if present is not None:
+        # absent clients: momentum frozen (neither decayed nor fed) — the
+        # streaming server's padding of clients that missed the round
+        m = jnp.where(present[:, None], m, m_prev)
     # Step 6: robust aggregation of momenta.
     r = agg(m)
     new = state._replace(momentum=m.astype(jnp.dtype(cfg.momentum_dtype)),
-                         step=state.step + 1, attack=atk)
+                         step=state.step + 1)
     return r, new
+
+
+def _dgd_apply(cfg, agg, state, wire, present=None, discount=None):
+    # Compressed DGD, non-robust: plain mean of unbiased estimates (the
+    # defining non-robust corner — the aggregator config is ignored).
+    del agg
+    if present is None:
+        return jnp.mean(wire, axis=0), state._replace(step=state.step + 1)
+    # Streaming partial participation: the momentum slot doubles as the
+    # last-received-wire bank; absent clients keep their frozen row.
+    bank = _row_mask(wire, state.momentum.astype(wire.dtype), present,
+                     discount)
+    r = jnp.mean(bank, axis=0)
+    return r, state._replace(
+        momentum=bank.astype(jnp.dtype(cfg.momentum_dtype)),
+        step=state.step + 1)
+
+
+def _robust_dgd_apply(cfg, agg, state, wire, present=None, discount=None):
+    # Robust DGD without compression: aggregate raw gradients (the
+    # sparsifier config is ignored).
+    if present is None:
+        return agg(wire), state._replace(step=state.step + 1)
+    bank = _row_mask(wire, state.momentum.astype(wire.dtype), present,
+                     discount)
+    r = agg(bank)
+    return r, state._replace(
+        momentum=bank.astype(jnp.dtype(cfg.momentum_dtype)),
+        step=state.step + 1)
+
+
+def _rosdhb_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
+                 attack_params, attack_idx, ratio):
+    g_tilde, atk = _compressed_wire(cfg, state.attack, grads, mask_key,
+                                    atk_key, attack_params, attack_idx,
+                                    ratio)
+    return _rosdhb_apply(cfg, agg, state._replace(attack=atk), g_tilde,
+                         hparams)
 
 
 def _dgd_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
               attack_params, attack_idx, ratio):
-    # Compressed DGD, non-robust: plain mean of unbiased estimates (the
-    # defining non-robust corner — the aggregator config is ignored).
-    n, d = grads.shape
-    sp = cfg.sparsifier
-    masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype, ratio=ratio)
-    g_tilde = C.compress(grads, masks, sp, ratio=ratio)
-    g_tilde, atk = _byzantine_overwrite(cfg, state.attack, g_tilde, atk_key,
-                                        attack_params, attack_idx)
-    r = jnp.mean(g_tilde, axis=0)
-    return r, state._replace(step=state.step + 1, attack=atk)
+    g_tilde, atk = _compressed_wire(cfg, state.attack, grads, mask_key,
+                                    atk_key, attack_params, attack_idx,
+                                    ratio)
+    return _dgd_apply(cfg, agg, state._replace(attack=atk), g_tilde)
 
 
 def _robust_dgd_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
                      attack_params, attack_idx, ratio):
-    # Robust DGD without compression: aggregate raw gradients (the
-    # sparsifier config is ignored).
     g, atk = _byzantine_overwrite(cfg, state.attack, grads, atk_key,
                                   attack_params, attack_idx)
-    r = agg(g)
-    return r, state._replace(step=state.step + 1, attack=atk)
+    return _robust_dgd_apply(cfg, agg, state._replace(attack=atk), g)
 
 
 def _dasha_step(cfg, agg, state, grads, mask_key, atk_key, hparams,
@@ -496,6 +560,76 @@ ALGO_STEPS = {
     "robust_dgd": _robust_dgd_step,
     "dgd": _dgd_step,
 }
+
+#: Algorithms the streaming parameter server (``repro.serve``) can run:
+#: the memoryless-wire rules, whose client payload depends only on the
+#: current gradient + broadcast round keys. ``dasha`` is excluded by
+#: construction — Byz-DASHA-PAGE's wire is a compressed *difference*
+#: against server-side mirrors and per-client MVR momentum, so its
+#: per-client control variates go stale the moment a client misses a round
+#: (the failure mode the paper's momentum-based RoSDHB avoids).
+SERVE_ALGORITHMS: Tuple[str, ...] = ("rosdhb", "robust_dgd", "dgd")
+
+_SERVE_APPLY = {
+    "rosdhb": _rosdhb_apply,
+    "robust_dgd": _robust_dgd_apply,
+    "dgd": _dgd_apply,
+}
+
+
+def _check_serveable(name: str) -> None:
+    if name not in SERVE_ALGORITHMS:
+        raise ValueError(
+            f"algorithm {name!r} cannot run as a streaming service "
+            f"(serveable: {'|'.join(SERVE_ALGORITHMS)})"
+            + (": dasha's wire is a compressed difference against "
+               "server-side mirrors — its per-client control variates go "
+               "stale under partial participation" if name == "dasha"
+               else ""))
+
+
+def make_wire_fn(cfg: AlgorithmConfig):
+    """The client-side half of a serveable algorithm's round:
+    ``wire_fn(atk_state, grads, mask_key, atk_key) -> (wire [n, D],
+    new_atk_state)`` — exactly the op sequence the simulator's step runs
+    before the server-side apply, so a client pool streaming these rows to
+    ``repro.serve`` reproduces simulator trajectories bit-for-bit."""
+    _check_serveable(cfg.name)
+    if cfg.name == "robust_dgd":
+        def wire_fn(atk_state, grads, mask_key, atk_key):
+            del mask_key  # raw gradients: no compression
+            return _byzantine_overwrite(cfg, atk_state, grads, atk_key)
+    else:
+        def wire_fn(atk_state, grads, mask_key, atk_key):
+            return _compressed_wire(cfg, atk_state, grads, mask_key, atk_key)
+    return wire_fn
+
+
+def make_serve_apply_fn(cfg: AlgorithmConfig, agg):
+    """The server-side half: ``apply_fn(state, wire, present, discount) ->
+    (direction [D], new ServerState)``.
+
+    ``present`` is a ``[n]`` bool row mask (clients that reported this
+    round) and ``discount`` a ``[n]`` f32 staleness weight — both traced
+    data, so one compiled program covers every participation level. With
+    all rows present and ``discount == 1.0`` the graph computes exactly the
+    simulator's full-participation round (multiply-by-1.0 and
+    ``where(True, ...)`` are exact), which is the parity gate
+    ``benchmarks/bench_serve.py`` enforces."""
+    _check_serveable(cfg.name)
+    hparams = static_hparams(cfg)
+    apply_half = _SERVE_APPLY[cfg.name]
+
+    def apply_fn(state: ServerState, wire: jnp.ndarray,
+                 present: jnp.ndarray, discount: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, ServerState]:
+        if cfg.name == "rosdhb":
+            return apply_half(cfg, agg, state, wire, hparams,
+                              present=present, discount=discount)
+        return apply_half(cfg, agg, state, wire,
+                          present=present, discount=discount)
+
+    return apply_fn
 
 
 def algo_index(name: str, entries: Optional[Sequence[str]] = None) -> int:
@@ -613,34 +747,14 @@ def algo_payload_bytes(cfg: AlgorithmConfig, d: int,
                        bytes_per_value: int = 4) -> int:
     """Per-worker uplink bytes per round under ``cfg``'s ACTUAL wire format.
 
-    The four algorithms transmit different quantities, so a shared formula
-    misprices the comparison:
-
-    * ``rosdhb`` / ``dgd`` — the sparsified gradient: ``k`` values; index
-      bytes only for *local* masks (the coordinated global mask is a shared
-      PRNG draw, RoSDHB's headline communication trick).
-    * ``robust_dgd`` — the raw uncompressed gradient: ``d`` values, no
-      indices.
-    * ``dasha`` — the compressed per-worker momentum *difference*
-      (Byz-DASHA-PAGE): each worker runs its own independent compressor (the
-      analysis of [29] requires independent unbiasedness; there is no shared
-      coordinated mask — ``_dasha_step`` simulates per-worker masks to
-      match), so the wire always carries the ``k`` values PLUS their
-      coordinate indices (``compression.index_bytes`` each).
+    Delegates to :mod:`repro.core.wire` — the one accounting shared with the
+    streaming server's ``repro.serve.protocol``, so simulator and service
+    can never disagree on what a round costs (see that module for the
+    per-algorithm formats). Raises ``ValueError`` for bank configs — a bank
+    mixes wire formats; account per cell with each cell's own config.
     """
-    sp = cfg.sparsifier
-    if cfg.name == "robust_dgd":
-        return d * bytes_per_value
-    if cfg.name in ("rosdhb", "dgd"):
-        return C.payload_bytes(d, sp, bytes_per_value=bytes_per_value,
-                               with_mask_indices=True)
-    if cfg.name == "dasha":
-        return C.payload_bytes(d, dataclasses.replace(sp, local=True),
-                               bytes_per_value=bytes_per_value,
-                               with_mask_indices=True)
-    raise ValueError(
-        f"no single wire format for algorithm {cfg.name!r} — a bank config "
-        "mixes algorithms; account per cell with each cell's own config")
+    return W.per_worker_payload_bytes(cfg.name, d, cfg.sparsifier,
+                                      bytes_per_value=bytes_per_value)
 
 
 def _bank_payload_floats(entries: Sequence[str], d: int,

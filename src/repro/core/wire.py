@@ -1,0 +1,56 @@
+"""Canonical uplink wire-format accounting, shared simulator <-> server.
+
+The four algorithms transmit different quantities, so a shared formula
+misprices the paper's communication comparison:
+
+* ``rosdhb`` / ``dgd`` — the sparsified gradient: ``k`` values; index bytes
+  only for *local* masks (the coordinated global mask is a shared PRNG draw
+  — RoSDHB's headline communication trick — so it costs 0 wire bytes).
+* ``robust_dgd`` — the raw uncompressed gradient: ``d`` values, no indices.
+* ``dasha`` — the compressed per-worker momentum *difference*
+  (Byz-DASHA-PAGE): each worker runs its own independent compressor (the
+  analysis of [29] requires independent unbiasedness; there is no shared
+  coordinated mask), so the wire always carries the ``k`` values PLUS their
+  coordinate indices (``compression.index_bytes`` each).
+
+Both ``Simulator.payload_bytes_per_round`` (via
+``algorithms.algo_payload_bytes``) and the streaming parameter server's
+``repro.serve.protocol`` price updates through this one module, so the
+closed-world simulation and the service can never disagree on what a round
+costs on the wire.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import compression as C
+
+#: Algorithms with a well-defined single-worker uplink format.
+WIRE_ALGORITHMS = ("rosdhb", "dasha", "robust_dgd", "dgd")
+
+
+def per_worker_payload_bytes(algo: str, d: int, sp: C.SparsifierConfig,
+                             bytes_per_value: int = 4) -> int:
+    """Uplink bytes ONE worker sends per round under ``algo``'s actual wire
+    format (``d`` is the true model dimension, unpadded)."""
+    if algo == "robust_dgd":
+        return d * bytes_per_value
+    if algo in ("rosdhb", "dgd"):
+        return C.payload_bytes(d, sp, bytes_per_value=bytes_per_value,
+                               with_mask_indices=True)
+    if algo == "dasha":
+        return C.payload_bytes(d, dataclasses.replace(sp, local=True),
+                               bytes_per_value=bytes_per_value,
+                               with_mask_indices=True)
+    raise ValueError(
+        f"no single wire format for algorithm {algo!r} (expected one of "
+        f"{'|'.join(WIRE_ALGORITHMS)}) — a bank config mixes algorithms; "
+        "account per cell with each cell's own config")
+
+
+def round_payload_bytes(algo: str, d: int, sp: C.SparsifierConfig,
+                        n_workers: int, bytes_per_value: int = 4) -> int:
+    """Total uplink bytes per round across all ``n_workers`` (the paper
+    counts every worker — the server cannot know who is honest)."""
+    return per_worker_payload_bytes(algo, d, sp, bytes_per_value) * n_workers

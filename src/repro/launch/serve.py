@@ -17,7 +17,8 @@ import numpy as np
 from repro.configs import get_arch
 from repro.configs.base import ArchSpec
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models import cache_init, forward, logits_fn, model_init
+from repro.models import (cache_init, forward, logits_fn, make_decode_step,
+                          model_init)
 
 
 def main():
@@ -61,16 +62,15 @@ def main():
         tok = jnp.argmax(logits_fn(params, cfg, hidden[:, -1:]), -1)
         print(f"[serve] prefill [{b}x{s}] {time.time()-t0:.2f}s")
 
+        # ONE jitted decode step with a traced position: a Python-int pos
+        # would constant-fold into the program and recompile every token
+        decode_step = make_decode_step(
+            cfg, batch.get("image_embeddings"))
         t0 = time.time()
         for i in range(args.tokens - 1):
-            db = ({"tokens": tok} if cfg.input_kind == "tokens" else
-                  {"embeddings": jax.nn.one_hot(tok, cfg.d_model,
-                                                dtype=jnp.float32)})
-            if cfg.family == "vlm":
-                db["image_embeddings"] = batch["image_embeddings"]
-            h, caches, _ = forward(params, cfg, db, mode="decode",
-                                   pos=s + i, caches=caches)
-            tok = jnp.argmax(logits_fn(params, cfg, h), -1)
+            tok, caches = decode_step(params, tok, caches,
+                                      jnp.asarray(s + i, jnp.int32))
+        jax.block_until_ready(tok)
         n = (args.tokens - 1) * b
         print(f"[serve] decoded {n} tokens in {time.time()-t0:.2f}s")
 

@@ -8,9 +8,10 @@ from repro.models.transformer import (
     chunked_xent,
 )
 from repro.models.cnn import cnn_init, cnn_apply, cnn_loss, cnn_accuracy
+from repro.models.decode import make_decode_step
 
 __all__ = [
     "ModelConfig", "model_init", "forward", "cache_init", "lm_loss",
-    "logits_fn", "chunked_xent",
+    "logits_fn", "chunked_xent", "make_decode_step",
     "cnn_init", "cnn_apply", "cnn_loss", "cnn_accuracy",
 ]

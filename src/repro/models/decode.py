@@ -1,0 +1,43 @@
+"""One jitted greedy decode step, shared by the serving entry points.
+
+``launch/serve.py`` and ``examples/serve_demo.py`` both run the
+prefill-then-decode loop; the decode step must be compiled ONCE with the
+position as a traced scalar — passing a Python-int ``pos`` bakes the
+position into the program as a constant and recompiles every token.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import forward, logits_fn
+
+
+def make_decode_step(cfg, image_embeddings=None) -> Callable:
+    """Build the jitted single-token greedy decode step for ``cfg``.
+
+    Returns ``decode_step(params, tok, caches, pos) -> (next_tok, caches)``
+    where ``pos`` must be a traced int32 scalar (use
+    ``jnp.asarray(p, jnp.int32)`` in the caller's loop) so every decoded
+    token reuses one compiled program. For VLM configs pass the prompt's
+    ``image_embeddings`` once here; they are closed over as a compile-time
+    constant.
+    """
+
+    @jax.jit
+    def decode_step(params, tok, caches, pos):
+        if cfg.input_kind == "tokens":
+            db = {"tokens": tok}
+        else:
+            db = {"embeddings": jax.nn.one_hot(tok, cfg.d_model,
+                                               dtype=jnp.float32)}
+        if cfg.family == "vlm":
+            db["image_embeddings"] = image_embeddings
+        h, caches, _ = forward(params, cfg, db, mode="decode", pos=pos,
+                               caches=caches)
+        return jnp.argmax(logits_fn(params, cfg, h), -1), caches
+
+    return decode_step

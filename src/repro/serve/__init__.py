@@ -1,0 +1,37 @@
+"""Streaming byzantine-robust parameter server (``python -m repro.serve``).
+
+The engine turned inside out: instead of simulating all workers in one
+``lax.scan``, clients push compressed updates onto a queue, a round buffer
+collects them under a participation quorum / wall-clock timeout / bounded
+staleness window, and ONE jitted aggregate-and-apply step (the same
+``make_aggregator`` + rosdhb/robust_dgd/dgd apply halves the simulator
+runs) fires per round — padding absent clients so the step never retraces
+across participation levels.
+
+Module map:
+  protocol  — wire format (RoundAnnouncement down, ClientUpdate up; byte
+              accounting shared with the simulator via repro.core.wire)
+  buffer    — the round buffer (quorum, timeout, staleness policies)
+  server    — ingest thread + queue + batcher loop around the jitted step
+  client    — simulated client pool (honest + byzantine via repro.adversary,
+              straggler/drop/late-arrival injection)
+  metrics   — updates/sec, rounds/sec, p50/p99 round latency, histograms
+
+With full participation and zero timeout the server's parameter trajectory
+matches ``Simulator.rollout`` bit-for-bit (tests/test_serve.py,
+benchmarks/bench_serve.py gate).
+"""
+
+from repro.serve.buffer import RoundBuffer
+from repro.serve.client import ClientBehavior, ClientPool
+from repro.serve.metrics import ServeMetrics
+from repro.serve.protocol import ClientUpdate, RoundAnnouncement, mask_id
+from repro.serve.server import (
+    ByzantineRobustServer, RoundResult, ServeConfig, run_service,
+)
+
+__all__ = [
+    "ByzantineRobustServer", "ClientBehavior", "ClientPool", "ClientUpdate",
+    "RoundAnnouncement", "RoundBuffer", "RoundResult", "ServeConfig",
+    "ServeMetrics", "mask_id", "run_service",
+]

@@ -1,0 +1,135 @@
+"""Simulated client pool for the streaming parameter server.
+
+Honest clients compute local gradients and put the algorithm's wire
+quantity on the uplink (``algorithms.make_wire_fn`` — sparsified unbiased
+reconstructions under the round's broadcast coordinated mask); Byzantine
+clients (rows ``[0, f)``) are driven by the first-class ``repro.adversary``
+API through the same ``_byzantine_overwrite`` dispatch the simulator uses,
+with stateful adversaries carrying their ``AttackState`` pool-side. The
+whole pool answers a round announcement with ONE jitted vmapped program —
+the exact op sequence of the simulator's round up to the server apply, so
+full-participation service trajectories are bit-for-bit
+``Simulator.rollout``'s.
+
+:class:`ClientBehavior` injects the failure modes the closed-world scan
+cannot express: per-round drop probability, probabilistic late arrival,
+and fixed stragglers that are always ``straggle_rounds`` late.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.serve import protocol
+from repro.utils import tree as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientBehavior:
+    """Failure-mode injection, drawn from a seeded host-side RNG.
+
+    Attributes:
+      drop_prob: per client per round probability the update never arrives.
+      late_prob: probability an update is delivered ``late_rounds`` late.
+      late_rounds: lateness of probabilistically-late updates.
+      stragglers: client ids that are ALWAYS late (e.g. the f byzantine
+        ids, for the all-byzantine-late scenario).
+      straggle_rounds: how late stragglers deliver.
+      seed: RNG seed for the drop/late draws.
+    """
+
+    drop_prob: float = 0.0
+    late_prob: float = 0.0
+    late_rounds: int = 1
+    stragglers: Tuple[int, ...] = ()
+    straggle_rounds: int = 1
+    seed: int = 0
+
+
+class ScheduledUpdate(NamedTuple):
+    """A client's payload plus its injected delivery fate."""
+
+    update: protocol.ClientUpdate
+    deliver_round: int
+    drop: bool
+
+
+class ClientPool:
+    """All n simulated clients (honest + byzantine) answering one server."""
+
+    def __init__(self, loss_fn: Callable[[Any, Any], jnp.ndarray],
+                 params0: Any, cfg: alg.AlgorithmConfig,
+                 batch_fn: Callable[[int], Any],
+                 behavior: Optional[ClientBehavior] = None):
+        self.cfg = cfg
+        self.batch_fn = batch_fn
+        self.behavior = behavior or ClientBehavior()
+        self.spec = T.make_flat_spec(params0)
+        self.d = self.spec.size
+        self._rng = np.random.default_rng(self.behavior.seed)
+        from repro.adversary import core as adv
+        self.attack_state = (adv.init_attack_state(self.spec.padded_size)
+                             if adv.needs_attack_state(cfg.attack.name,
+                                                       cfg.f) else None)
+        wire_fn = alg.make_wire_fn(cfg)
+        self.pool_traces = 0
+
+        def _pool_round(params_flat, worker_batches, atk_state, mask_key,
+                        atk_key):
+            # the simulator's round, up to (and excluding) the server-side
+            # apply: same vmapped grads, same clip, same wire half — this
+            # op-for-op match is what the bit-for-bit parity gate rests on
+            self.pool_traces += 1  # trace-time (python) side effect only
+            params = T.tree_unravel(params_flat, self.spec)
+
+            def worker_grad(batch):
+                l, g = jax.value_and_grad(loss_fn)(params, batch)
+                return l, T.tree_ravel(g, self.spec)
+
+            losses, grads = jax.vmap(worker_grad)(worker_batches)
+            if cfg.clip_norm is not None:
+                norms = jnp.linalg.norm(grads.astype(jnp.float32), axis=1,
+                                        keepdims=True)
+                scale = jnp.minimum(1.0, cfg.clip_norm
+                                    / jnp.maximum(norms, 1e-12))
+                grads = grads * scale.astype(grads.dtype)
+            wire, atk_state = wire_fn(atk_state, grads, mask_key, atk_key)
+            return wire, atk_state, losses
+
+        self._pool_round = jax.jit(_pool_round)
+
+    def round_payloads(self, ann: protocol.RoundAnnouncement
+                       ) -> List[ScheduledUpdate]:
+        """Answer one round announcement: every client's update, tagged
+        with its injected delivery fate (drop / deliver at round t+k)."""
+        b = self.behavior
+        wire, self.attack_state, losses = self._pool_round(
+            jnp.asarray(ann.params), self.batch_fn(ann.round_id),
+            self.attack_state, jnp.asarray(ann.mask_key),
+            jnp.asarray(ann.atk_key))
+        wire = np.asarray(wire)
+        self.last_losses = np.asarray(losses)
+        out: List[ScheduledUpdate] = []
+        now = time.perf_counter()
+        for cid in range(self.cfg.n_workers):
+            u_drop, u_late = self._rng.random(2)
+            if cid in b.stragglers:
+                deliver, drop = ann.round_id + b.straggle_rounds, False
+            elif u_drop < b.drop_prob:
+                deliver, drop = ann.round_id, True
+            elif u_late < b.late_prob:
+                deliver, drop = ann.round_id + b.late_rounds, False
+            else:
+                deliver, drop = ann.round_id, False
+            out.append(ScheduledUpdate(
+                update=protocol.make_update(self.cfg, self.d, cid, ann,
+                                            wire[cid], sent_at=now),
+                deliver_round=deliver, drop=drop))
+        return out

@@ -1,0 +1,98 @@
+"""Service metrics: sustained throughput, round latency, participation.
+
+The server records one :class:`RoundRecord` per fired round plus a running
+count of ingest decisions; :meth:`ServeMetrics.summary` folds them into the
+numbers ``results/BENCH_serve.json`` reports — sustained updates/sec and
+rounds/sec over the measured span, p50/p99 round latency (round open ->
+parameters applied), and per-round participation + staleness histograms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) without numpy, so metrics
+    stay importable host-side anywhere."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    rank = max(0, min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1)))))
+    return float(s[rank])
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    """One fired round, as observed by the batcher."""
+
+    round_id: int
+    n_updates: int                 # rows aggregated (accepted updates)
+    fired_by: str                  # "quorum" | "timeout"
+    staleness: Tuple[int, ...]     # per accepted update, in client-id order
+    latency_s: float               # round open -> params applied
+    step_s: float                  # jitted aggregate-and-apply wall time
+    payload_bytes: int             # accounted uplink bytes this round
+
+
+class ServeMetrics:
+    """Accumulates round records + ingest decisions for one service run."""
+
+    def __init__(self):
+        self.rounds: List[RoundRecord] = []
+        self.decisions: Dict[str, int] = {}
+        self.started_at: float = 0.0
+        self.finished_at: float = 0.0
+
+    def observe_decision(self, status: str) -> None:
+        self.decisions[status] = self.decisions.get(status, 0) + 1
+
+    def observe_round(self, rec: RoundRecord) -> None:
+        self.rounds.append(rec)
+
+    def span(self, start: float, end: float) -> None:
+        self.started_at, self.finished_at = start, end
+
+    # -- summaries ---------------------------------------------------------
+
+    def participation_histogram(self) -> Dict[int, int]:
+        """rounds keyed by how many updates they aggregated."""
+        h: Dict[int, int] = {}
+        for r in self.rounds:
+            h[r.n_updates] = h.get(r.n_updates, 0) + 1
+        return dict(sorted(h.items()))
+
+    def staleness_histogram(self) -> Dict[int, int]:
+        """accepted updates keyed by their staleness (rounds late)."""
+        h: Dict[int, int] = {}
+        for r in self.rounds:
+            for s in r.staleness:
+                h[s] = h.get(s, 0) + 1
+        return dict(sorted(h.items()))
+
+    def summary(self) -> Dict[str, object]:
+        wall = max(self.finished_at - self.started_at, 1e-12)
+        lat = [r.latency_s for r in self.rounds]
+        updates = sum(r.n_updates for r in self.rounds)
+        return {
+            "rounds": len(self.rounds),
+            "updates_accepted": updates,
+            "wall_s": wall,
+            "rounds_per_sec": len(self.rounds) / wall,
+            "updates_per_sec": updates / wall,
+            "latency_p50_ms": percentile(lat, 50) * 1e3,
+            "latency_p99_ms": percentile(lat, 99) * 1e3,
+            "latency_max_ms": (max(lat) if lat else float("nan")) * 1e3,
+            "step_p50_ms": percentile(
+                [r.step_s for r in self.rounds], 50) * 1e3,
+            "fired_by": {
+                k: sum(1 for r in self.rounds if r.fired_by == k)
+                for k in ("quorum", "timeout")},
+            "participation_histogram": {
+                str(k): v for k, v in self.participation_histogram().items()},
+            "staleness_histogram": {
+                str(k): v for k, v in self.staleness_histogram().items()},
+            "ingest_decisions": dict(sorted(self.decisions.items())),
+            "uplink_bytes": sum(r.payload_bytes for r in self.rounds),
+        }

@@ -1,0 +1,90 @@
+"""Wire format of the streaming byzantine-robust parameter server.
+
+Downlink, once per round (:class:`RoundAnnouncement`): the current flat
+parameter vector plus the round's two broadcast PRNG keys — the coordinated
+sparsification mask key (RoSDHB's 0-byte mask broadcast: clients re-derive
+the global mask from the shared key instead of shipping indices) and the
+attack key consumed by the simulated adversary. The announcement's key
+chain replicates the simulator's exactly (``split(key) -> (carry,
+round_key)``, then ``split(round_key) -> (mask_key, atk_key)``), which is
+what makes server and ``Simulator.rollout`` trajectories bit-for-bit
+comparable.
+
+Uplink, once per client per round (:class:`ClientUpdate`): the update
+values, the coordinated-mask id they were sparsified under, round/client
+ids, and the *accounted* wire cost. Values are carried as the dense
+unbiased reconstruction ``[padded_D]`` (what the server computes in
+Algorithm 1 step 4 — the simulation convention of ``repro.core
+.compression``), while ``payload_bytes`` prices the REAL wire format
+through :func:`repro.core.wire.per_worker_payload_bytes`, the same
+accounting ``Simulator.payload_bytes_per_round`` uses — simulator and
+server cannot disagree on communication cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core import wire as W
+
+
+def mask_id(mask_key) -> int:
+    """Stable integer id of a coordinated mask: the round's broadcast mask
+    key folded to 64 bits. Clients echo it back so the server can reject
+    updates sparsified under a different round's mask."""
+    raw = np.asarray(mask_key, np.uint32).reshape(-1)
+    lo = int(raw[-1])
+    hi = int(raw[0]) if raw.size > 1 else 0
+    return (hi << 32) | lo
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundAnnouncement:
+    """Downlink broadcast opening round ``round_id``."""
+
+    round_id: int
+    params: np.ndarray       # flat [padded_D] f32 parameter vector
+    mask_key: np.ndarray     # broadcast coordinated-sparsification key
+    atk_key: np.ndarray      # broadcast adversary key (simulation only)
+
+    @property
+    def mask_id(self) -> int:
+        return mask_id(self.mask_key)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientUpdate:
+    """One client's uplink payload for one round."""
+
+    client_id: int
+    round_id: int
+    mask_id: int             # coordinated mask the values were built under
+    values: np.ndarray       # dense unbiased reconstruction [padded_D]
+    payload_bytes: int       # accounted REAL wire cost (repro.core.wire)
+    sent_at: float = 0.0     # client-side send timestamp (perf_counter)
+
+
+def update_payload_bytes(cfg: alg.AlgorithmConfig, d: int,
+                         bytes_per_value: int = 4) -> int:
+    """Accounted uplink bytes of one :class:`ClientUpdate` under ``cfg``'s
+    algorithm (``d`` is the true model dimension, unpadded) — shared with
+    ``Simulator.payload_bytes_per_round`` via :mod:`repro.core.wire`."""
+    return W.per_worker_payload_bytes(cfg.name, d, cfg.sparsifier,
+                                      bytes_per_value=bytes_per_value)
+
+
+def make_update(cfg: alg.AlgorithmConfig, d: int, client_id: int,
+                ann: RoundAnnouncement, values: np.ndarray,
+                sent_at: float = 0.0,
+                payload_bytes: Optional[int] = None) -> ClientUpdate:
+    """Build a :class:`ClientUpdate` answering ``ann`` with priced wire
+    cost (``d`` is the true model dimension used for byte accounting)."""
+    if payload_bytes is None:
+        payload_bytes = update_payload_bytes(cfg, d)
+    return ClientUpdate(client_id=client_id, round_id=ann.round_id,
+                        mask_id=ann.mask_id, values=values,
+                        payload_bytes=payload_bytes, sent_at=sent_at)

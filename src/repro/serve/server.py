@@ -1,0 +1,386 @@
+"""The continuously-batching byzantine-robust parameter server.
+
+Architecture (the offline-inference queue/thread/batcher idiom around one
+jitted engine step):
+
+* ``submit()`` enqueues :class:`~repro.serve.protocol.ClientUpdate`s onto a
+  ``queue.Queue`` from any thread;
+* the **ingest thread** drains the queue into the
+  :class:`~repro.serve.buffer.RoundBuffer` (quorum / timeout / staleness
+  classification) and wakes the batcher;
+* the **batcher thread** watches the buffer and, on quorum-or-timeout,
+  fires ONE jitted aggregate-and-apply step — the same ``make_aggregator``
+  rule (Pallas kernels included via ``AggregatorConfig.use_pallas``) and
+  rosdhb/robust_dgd/dgd apply halves the simulator runs
+  (``algorithms.make_serve_apply_fn``) against the ``StateLayout``-pruned
+  ``ServerState``. Absent clients are padded: participation enters the step
+  as a traced ``present`` row mask and staleness as a traced ``discount``
+  weight over a static ``[n, D]`` wire bank, so the step **never retraces
+  across participation levels** (``step_traces`` counts XLA programs; the
+  bench gates it at exactly 1).
+
+The PRNG chain replicates the simulator's exactly — per round the carried
+key splits into ``(carry, round_key)`` and the round key into
+``(mask_key, atk_key)``, both broadcast in the round announcement — so with
+full participation and zero timeout the served parameter trajectory is
+bit-for-bit ``Simulator.rollout``'s (tests/test_serve.py).
+
+``repro.checkpoint`` is wired in: with ``checkpoint_every > 0`` the server
+periodically persists ``{params, ServerState, key}`` and a fresh server can
+``restore()`` and continue with identical results under full participation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregators as G
+from repro.core import algorithms as alg
+from repro.serve import protocol
+from repro.serve.buffer import RoundBuffer
+from repro.serve.metrics import RoundRecord, ServeMetrics
+from repro.utils import tree as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Service-level knobs (the algorithm itself lives in
+    ``AlgorithmConfig``).
+
+    Attributes:
+      quorum: distinct clients required to fire a round; ``None`` = all
+        ``n_workers``. Must be at least ``2f + 1`` (validated loudly).
+      timeout_s: wall-clock round deadline; after it, a round fires with
+        whatever partial participation arrived (at least one update).
+        ``0`` disables the clock — rounds fire on quorum only.
+      staleness_window: accept updates up to this many rounds late.
+      stale_policy: ``discount`` (late updates weighted ``beta^k``) or
+        ``drop``.
+      checkpoint_every: persist server state every k fired rounds
+        (0 = never).
+      checkpoint_dir: where checkpoints go (required if checkpointing).
+    """
+
+    quorum: Optional[int] = None
+    timeout_s: float = 0.0
+    staleness_window: int = 0
+    stale_policy: str = "discount"
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundResult:
+    """What the batcher reports back for one fired round."""
+
+    round_id: int
+    n_updates: int
+    fired_by: str
+    client_ids: Tuple[int, ...]
+    staleness: Tuple[int, ...]
+    latency_s: float
+
+
+class ByzantineRobustServer:
+    """Streaming parameter server for one serveable algorithm config."""
+
+    def __init__(self, cfg: alg.AlgorithmConfig, params0,
+                 serve: Optional[ServeConfig] = None, *, seed: int = 0):
+        # same loud rejection make_wire_fn/make_serve_apply_fn give
+        alg._check_serveable(cfg.name)
+        self.cfg = cfg
+        self.serve = serve or ServeConfig()
+        self.spec = T.make_flat_spec(params0)
+        self.d = self.spec.size
+        self.n = cfg.n_workers
+        # host-side staleness discount rate: the momentum coefficient (a
+        # geometric decay also applied to the bankless DGD rules)
+        self._beta = np.float32(cfg.resolved_beta())
+        self.params_flat = T.tree_ravel(params0, self.spec)
+        # the serveable algorithms all run the pruned StateLayout (no
+        # mirror/prev_grad leaves); the adversary's memory lives client-side
+        # (the pool simulates the attack), so the server carries none
+        self.server_state = alg.init_state(cfg, self.spec.padded_size
+                                           )._replace(attack=None)
+        self._key = jax.random.PRNGKey(seed)
+        self.agg_backend = G.kernel_backend_label(cfg.aggregator.use_pallas)
+        self._per_update_bytes = protocol.update_payload_bytes(cfg, self.d)
+
+        # ONE jitted aggregate-and-apply step; participation (present) and
+        # staleness (discount) are traced DATA over static [n, D] shapes,
+        # so every participation level shares one compiled program.
+        apply_fn = alg.make_serve_apply_fn(cfg, G.make_aggregator(
+            cfg.aggregator))
+        self.step_traces = 0
+
+        def _step(params_flat, state, wire, present, discount):
+            self.step_traces += 1  # trace-time (python) side effect only
+            r, new_state = apply_fn(state, wire, present, discount)
+            return alg.apply_direction(params_flat, r, cfg.gamma), new_state
+
+        self._step = jax.jit(_step)
+
+        self.metrics = ServeMetrics()
+        self._buffer = RoundBuffer(
+            n_clients=self.n, f=cfg.f, quorum=self.serve.quorum,
+            timeout_s=self.serve.timeout_s,
+            staleness_window=self.serve.staleness_window,
+            stale_policy=self.serve.stale_policy)
+        if self.serve.checkpoint_every and not self.serve.checkpoint_dir:
+            raise ValueError("checkpoint_every > 0 needs a checkpoint_dir")
+
+        self._queue: "queue.Queue[protocol.ClientUpdate]" = queue.Queue()
+        self._cond = threading.Condition()
+        self._results: Dict[int, RoundResult] = {}
+        self._rounds_fired = 0
+        self._round_id = 0
+        self._ann: Optional[protocol.RoundAnnouncement] = None
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._open_round(time.perf_counter())
+
+    # -- round lifecycle (callers hold self._cond unless noted) ------------
+
+    def _open_round(self, now: float, reopen_buffer: bool = True) -> None:
+        """Open ``self._round_id``: advance the key chain exactly like the
+        simulator (carry split, then mask/attack split) and broadcast the
+        announcement. The batcher passes ``reopen_buffer=False`` — it
+        already advanced the buffer at drain time, and re-opening here
+        would wipe updates ingested while the apply ran."""
+        self._key, round_key = jax.random.split(self._key)
+        mask_key, atk_key = jax.random.split(round_key)
+        self._ann = protocol.RoundAnnouncement(
+            round_id=self._round_id,
+            params=np.asarray(self.params_flat),
+            mask_key=np.asarray(mask_key), atk_key=np.asarray(atk_key))
+        if reopen_buffer:
+            self._buffer.open(self._round_id, now,
+                              mask_id=self._ann.mask_id)
+        else:
+            self._buffer.register_mask(self._round_id, self._ann.mask_id)
+
+    # -- public API --------------------------------------------------------
+
+    def start(self) -> "ByzantineRobustServer":
+        if self._threads:
+            return self
+        self._stop.clear()
+        self._threads = [
+            threading.Thread(target=self._ingest_loop, name="serve-ingest",
+                             daemon=True),
+            threading.Thread(target=self._batcher_loop, name="serve-batcher",
+                             daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=10.0)
+        self._threads = []
+
+    def submit(self, update: protocol.ClientUpdate) -> None:
+        """Enqueue one client update (thread-safe, non-blocking)."""
+        values = np.asarray(update.values)
+        if values.shape != (self.spec.padded_size,):
+            raise ValueError(
+                f"update values shape {values.shape} != "
+                f"[padded_D={self.spec.padded_size}]")
+        self._queue.put(update)
+
+    def announce(self, timeout: float = 60.0) -> protocol.RoundAnnouncement:
+        """The current round's broadcast (blocks through an in-flight
+        apply until the next round is open)."""
+        deadline = time.perf_counter() + timeout
+        with self._cond:
+            while (self._ann is None
+                   or self._ann.round_id != self._round_id):
+                rem = deadline - time.perf_counter()
+                if rem <= 0 or not self._cond.wait(timeout=rem):
+                    raise TimeoutError("no open round announcement")
+            return self._ann
+
+    def wait_round(self, round_id: int, timeout: float = 60.0) -> RoundResult:
+        """Block until ``round_id`` has fired and been applied."""
+        deadline = time.perf_counter() + timeout
+        with self._cond:
+            while round_id not in self._results:
+                rem = deadline - time.perf_counter()
+                if rem <= 0 or not self._cond.wait(timeout=rem):
+                    raise TimeoutError(
+                        f"round {round_id} did not fire within {timeout}s "
+                        f"(buffer has {self._buffer.count}/"
+                        f"{self._buffer.quorum} updates; with timeout_s=0 a "
+                        "round below quorum never fires)")
+            return self._results[round_id]
+
+    @property
+    def round_id(self) -> int:
+        with self._cond:
+            return self._round_id
+
+    # -- checkpointing -----------------------------------------------------
+
+    def _checkpoint_tree(self):
+        return {"params_flat": self.params_flat,
+                "momentum": self.server_state.momentum,
+                "step": self.server_state.step,
+                "key": self._key}
+
+    def save_checkpoint(self, path: Optional[str] = None) -> str:
+        """Persist ``{params, ServerState, key}`` + round metadata via
+        ``repro.checkpoint`` (callable any time the server is paused; the
+        batcher calls it between rounds when ``checkpoint_every`` is set)."""
+        from repro.checkpoint import save
+        if path is None:
+            path = os.path.join(self.serve.checkpoint_dir or ".",
+                                f"serve_round{self._round_id:06d}")
+        return save(path, self._checkpoint_tree(),
+                    metadata={"algo": self.cfg.name, "d": self.d,
+                              "n_workers": self.n},
+                    step=self._round_id)
+
+    def restore(self, path: str) -> int:
+        """Load a checkpoint into this (not-yet-started) server and reopen
+        its round. Returns the restored round id."""
+        from repro.checkpoint import latest_step, restore
+        if self._threads:
+            raise RuntimeError("restore() before start()")
+        tree = restore(path, self._checkpoint_tree())
+        self.params_flat = jnp.asarray(tree["params_flat"])
+        self.server_state = self.server_state._replace(
+            momentum=jnp.asarray(tree["momentum"]),
+            step=jnp.asarray(tree["step"]))
+        self._key = jnp.asarray(tree["key"])
+        step = latest_step(path)
+        self._round_id = int(step) if step is not None else 0
+        self._results = {}
+        self._open_round(time.perf_counter())
+        return self._round_id
+
+    # -- service loops -----------------------------------------------------
+
+    def _ingest_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                u = self._queue.get(timeout=0.02)
+            except queue.Empty:
+                continue
+            with self._cond:
+                status = self._buffer.add(u, time.perf_counter())
+                self.metrics.observe_decision(status)
+                self._cond.notify_all()
+
+    def _batcher_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._cond:
+                now = time.perf_counter()
+                if not self._buffer.ready(now):
+                    if self._buffer.timeout_s > 0:
+                        wait = max(1e-3, min(
+                            0.02, self._buffer.opened_at
+                            + self._buffer.timeout_s - now))
+                    else:
+                        wait = 0.05
+                    self._cond.wait(timeout=wait)
+                    continue
+                fired_by = self._buffer.fired_by()
+                rows = self._buffer.drain()
+                opened_at = self._buffer.opened_at
+                round_id = self._round_id
+                # advance the round *now* so updates arriving during the
+                # apply are classified against the next round (stale for
+                # this one); the next announcement follows after the apply
+                self._round_id = round_id + 1
+                for _, status in self._buffer.open(self._round_id, now):
+                    self.metrics.observe_decision(status)
+
+            # build the padded step inputs + run the jitted step OUTSIDE
+            # the lock (ingest keeps draining while XLA runs)
+            wire = np.zeros((self.n, self.spec.padded_size), np.float32)
+            present = np.zeros((self.n,), bool)
+            discount = np.ones((self.n,), np.float32)
+            for cid, row in rows.items():
+                wire[cid] = row.update.values
+                present[cid] = True
+                discount[cid] = self._beta ** row.staleness
+            t0 = time.perf_counter()
+            new_params, new_state = self._step(
+                self.params_flat, self.server_state, jnp.asarray(wire),
+                jnp.asarray(present), jnp.asarray(discount))
+            jax.block_until_ready(new_params)
+            t1 = time.perf_counter()
+
+            with self._cond:
+                self.params_flat = new_params
+                self.server_state = new_state
+                self._rounds_fired += 1
+                cids = tuple(sorted(rows))
+                stale = tuple(rows[c].staleness for c in cids)
+                self._results[round_id] = RoundResult(
+                    round_id=round_id, n_updates=len(rows),
+                    fired_by=fired_by, client_ids=cids, staleness=stale,
+                    latency_s=t1 - opened_at)
+                self.metrics.observe_round(RoundRecord(
+                    round_id=round_id, n_updates=len(rows),
+                    fired_by=fired_by, staleness=stale,
+                    latency_s=t1 - opened_at, step_s=t1 - t0,
+                    payload_bytes=self._per_update_bytes * len(rows)))
+                if (self.serve.checkpoint_every
+                        and self._rounds_fired
+                        % self.serve.checkpoint_every == 0):
+                    self.save_checkpoint()
+                self._open_round(time.perf_counter(), reopen_buffer=False)
+                self._cond.notify_all()
+
+
+def run_service(server: ByzantineRobustServer, pool, rounds: int, *,
+                round_timeout: float = 60.0,
+                stop: bool = True) -> List[RoundResult]:
+    """Drive ``rounds`` announce -> submit -> apply cycles with a simulated
+    client pool (``repro.serve.client.ClientPool``).
+
+    The pool may tag updates for late delivery (stragglers); those are held
+    host-side and submitted at the start of their delivery round, where the
+    buffer's staleness policy takes over. With ``stop=False`` the server
+    keeps running (e.g. to continue with a different pool behaviour against
+    the same compiled step).
+    """
+    server.start()
+    t_start = time.perf_counter()
+    pending: List[Tuple[int, protocol.ClientUpdate]] = []
+    results: List[RoundResult] = []
+    try:
+        for _ in range(rounds):
+            ann = server.announce(timeout=round_timeout)
+            t = ann.round_id
+            due = [u for dr, u in pending if dr <= t]
+            pending = [(dr, u) for dr, u in pending if dr > t]
+            for u in due:
+                server.submit(u)
+            for sched in pool.round_payloads(ann):
+                if sched.drop:
+                    continue
+                if sched.deliver_round <= t:
+                    server.submit(sched.update)
+                else:
+                    pending.append((sched.deliver_round, sched.update))
+            results.append(server.wait_round(t, timeout=round_timeout))
+    finally:
+        server.metrics.span(t_start, time.perf_counter())
+        if stop:
+            server.stop()
+    return results

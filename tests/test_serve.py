@@ -1,0 +1,343 @@
+"""Streaming parameter-server tests: server <-> simulator bit-for-bit
+parity, quorum/timeout/staleness edge cases, wire accounting, checkpoint
+kill-and-resume."""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.adversary import registry
+from repro.core import Simulator
+from repro.core import algorithms as alg
+from repro.core import wire as W
+from repro.core.sweep import grid_scenarios, quadratic_testbed
+from repro.serve import (
+    ByzantineRobustServer, ClientBehavior, ClientPool, RoundBuffer,
+    ServeConfig, mask_id, run_service,
+)
+from repro.serve.protocol import ClientUpdate
+
+D = 32
+ROUNDS = 12
+
+
+def _testbed(cfg):
+    return quadratic_testbed(cfg.n_workers, d=D)
+
+
+def _run_sim(cfg, loss_fn, params0, batch_fn, rounds, seed=0):
+    sim = Simulator(loss_fn, params0, cfg)
+    final, _ = sim.rollout(sim.init(seed), batch_fn, rounds)
+    return np.asarray(final.params_flat), final
+
+
+def _run_serve(cfg, loss_fn, params0, batch_fn, rounds, seed=0,
+               serve=None, behavior=None):
+    server = ByzantineRobustServer(cfg, params0, serve or ServeConfig(),
+                                   seed=seed)
+    pool = ClientPool(loss_fn, params0, cfg, batch_fn, behavior=behavior)
+    results = run_service(server, pool, rounds)
+    return server, pool, results
+
+
+# --------------------------------------------------------------------------
+# server <-> simulator bit-for-bit parity
+# --------------------------------------------------------------------------
+
+# every attack x aggregator cell of the registry's stateless-linear scenario
+_REGISTRY_CELLS = {s.label: s for s in
+                   registry.expand_scenario("stateless-linear")}
+
+
+@pytest.mark.parametrize("label", sorted(_REGISTRY_CELLS))
+def test_server_matches_simulator_registry_cells(label):
+    """Full participation + zero timeout + seeded pool: the streaming
+    server's parameter trajectory IS ``Simulator.rollout``'s, bit for bit,
+    for every attack x aggregator cell of the registry scenario."""
+    cfg = _REGISTRY_CELLS[label].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    sim_params, sim_final = _run_sim(cfg, loss_fn, params0, batch_fn, ROUNDS)
+    server, _, results = _run_serve(cfg, loss_fn, params0, batch_fn, ROUNDS)
+    np.testing.assert_array_equal(sim_params, np.asarray(server.params_flat))
+    np.testing.assert_array_equal(np.asarray(sim_final.server.momentum),
+                                  np.asarray(server.server_state.momentum))
+    assert server.step_traces == 1
+    assert all(r.fired_by == "quorum" and r.n_updates == cfg.n_workers
+               for r in results)
+
+
+@pytest.mark.parametrize("algo", alg.SERVE_ALGORITHMS)
+@pytest.mark.parametrize("attack", ["alie", "signflip"])
+def test_server_matches_simulator_cross_algo(algo, attack):
+    """Parity holds for every serveable algorithm (incl. the bankless DGD
+    rules, whose serve path reuses the momentum slot as a wire bank).
+
+    rosdhb/robust_dgd are bit-for-bit. dgd's direction is a plain mean
+    DIRECTLY over the compressed wire, and inside the fused simulator
+    program XLA hoists the unbiasedness scalar across that mean
+    (``mean(alpha*g*mask) -> alpha*mean(g*mask)``) — a rewrite the serve
+    split cannot see because the pool materialises the wire at the program
+    boundary. That reassociation is a 1-ulp effect, so dgd is pinned to a
+    few-ulp tolerance instead."""
+    cfg = grid_scenarios((algo,), (attack,), ("cwtm",),
+                         n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    sim_params, _ = _run_sim(cfg, loss_fn, params0, batch_fn, ROUNDS, seed=3)
+    server, _, _ = _run_serve(cfg, loss_fn, params0, batch_fn, ROUNDS,
+                              seed=3)
+    got = np.asarray(server.params_flat)
+    if algo == "dgd":
+        np.testing.assert_allclose(sim_params, got, rtol=1e-6, atol=1e-7)
+    else:
+        np.testing.assert_array_equal(sim_params, got)
+
+
+def test_server_matches_simulator_stateful_attack():
+    """The pool carries stateful adversaries' AttackState (mimic) through
+    the same dispatch the simulator uses — parity must still be exact."""
+    cfg = grid_scenarios(("rosdhb",), ("mimic",), ("cwtm",),
+                         n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    sim_params, _ = _run_sim(cfg, loss_fn, params0, batch_fn, ROUNDS)
+    server, pool, _ = _run_serve(cfg, loss_fn, params0, batch_fn, ROUNDS)
+    assert pool.attack_state is not None
+    np.testing.assert_array_equal(sim_params, np.asarray(server.params_flat))
+
+
+def test_wire_accounting_matches_simulator():
+    """protocol <-> Simulator.payload_bytes_per_round can never disagree:
+    both go through repro.core.wire."""
+    for algo in alg.ALGO_BANK:
+        for local in (False, True):
+            cfg = grid_scenarios(
+                (algo,), ("alie",), ("cwtm",), n_honest=10, f=3,
+                ratio=0.25, local=local)[0].cfg
+            loss_fn, params0, _, _ = _testbed(cfg)
+            sim = Simulator(loss_fn, params0, cfg)
+            per = W.per_worker_payload_bytes(algo, sim.d, cfg.sparsifier)
+            assert sim.payload_bytes_per_round() == per * cfg.n_workers
+            assert alg.algo_payload_bytes(cfg, sim.d) == per
+
+
+def test_serve_round_payload_bytes_accounted():
+    cfg = _REGISTRY_CELLS[sorted(_REGISTRY_CELLS)[0]].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    server, _, _ = _run_serve(cfg, loss_fn, params0, batch_fn, 4)
+    sim = Simulator(loss_fn, params0, cfg)
+    assert (server.metrics.summary()["uplink_bytes"]
+            == sim.payload_bytes_per_round() * 4)
+
+
+# --------------------------------------------------------------------------
+# quorum / timeout / staleness edge cases
+# --------------------------------------------------------------------------
+
+
+def test_quorum_below_2f_plus_1_raises():
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    _, params0, _, _ = _testbed(cfg)
+    with pytest.raises(ValueError, match="2f\\+1"):
+        ByzantineRobustServer(cfg, params0, ServeConfig(quorum=2 * cfg.f))
+    with pytest.raises(ValueError, match="2f\\+1"):
+        RoundBuffer(n_clients=13, f=3, quorum=6)
+
+
+def test_dasha_rejected_loudly():
+    cfg = grid_scenarios(("dasha",), n_honest=10, f=3)[0].cfg
+    _, params0, _, _ = _testbed(cfg)
+    with pytest.raises(ValueError, match="stale"):
+        ByzantineRobustServer(cfg, params0)
+    with pytest.raises(ValueError, match="streaming"):
+        alg.make_wire_fn(cfg)
+
+
+def test_timeout_fires_partial_round():
+    """Quorum unreachable (2 clients always drop) + wall-clock timeout:
+    rounds fire by timeout with the partial participation that arrived."""
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    serve = ServeConfig(quorum=cfg.n_workers, timeout_s=0.03)
+    # two fixed clients always arrive too late (beyond the window), so the
+    # full-n quorum is unreachable and only the clock can fire the round
+    beh = ClientBehavior(stragglers=(11, 12), straggle_rounds=5)
+    server, _, results = _run_serve(cfg, loss_fn, params0, batch_fn, 5,
+                                    serve=serve, behavior=beh)
+    assert all(r.fired_by == "timeout" for r in results)
+    assert all(r.n_updates == cfg.n_workers - 2 for r in results)
+    assert server.step_traces == 1
+
+
+def test_zero_timeout_below_quorum_never_fires():
+    buf = RoundBuffer(n_clients=13, f=3, quorum=13, timeout_s=0.0)
+    u = ClientUpdate(client_id=5, round_id=0, mask_id=0,
+                     values=np.zeros(4), payload_bytes=1)
+    buf._mask_ids[0] = 0
+    assert buf.add(u, now=0.0) == "accepted"
+    assert not buf.ready(now=1e9)  # no clock: quorum only
+
+
+def test_byzantine_all_late_drop_policy():
+    """All f byzantine clients always late + stale_policy='drop': every
+    round aggregates exactly the honest clients; byzantine rows never
+    enter a round."""
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    serve = ServeConfig(quorum=cfg.n_workers - cfg.f, timeout_s=0.05,
+                        stale_policy="drop")
+    beh = ClientBehavior(stragglers=tuple(range(cfg.f)), straggle_rounds=2)
+    server, _, results = _run_serve(cfg, loss_fn, params0, batch_fn, 6,
+                                    serve=serve, behavior=beh)
+    for r in results:
+        assert r.n_updates == cfg.n_workers - cfg.f
+        assert all(c >= cfg.f for c in r.client_ids)
+    dec = server.metrics.summary()["ingest_decisions"]
+    assert dec.get("stale_dropped", 0) > 0
+
+
+def test_staleness_window_discount_accepts_late():
+    """Late-by-1 updates inside the window are accepted with staleness 1
+    under the discount policy."""
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    serve = ServeConfig(quorum=cfg.n_workers - 2, timeout_s=0.05,
+                        staleness_window=2, stale_policy="discount")
+    beh = ClientBehavior(stragglers=(11, 12), straggle_rounds=1)
+    server, _, _ = _run_serve(cfg, loss_fn, params0, batch_fn, 8,
+                              serve=serve, behavior=beh)
+    hist = server.metrics.summary()["staleness_histogram"]
+    assert hist.get("1", 0) > 0
+
+
+def test_buffer_staleness_and_duplicate_rules():
+    buf = RoundBuffer(n_clients=13, f=3, quorum=13, timeout_s=0.0,
+                      staleness_window=1, stale_policy="discount")
+    mk = lambda cid, rid: ClientUpdate(  # noqa: E731
+        client_id=cid, round_id=rid, mask_id=rid, values=np.zeros(4),
+        payload_bytes=1)
+    for r in range(4):
+        buf._mask_ids[r] = r
+    buf.open(2, now=0.0, mask_id=2)
+    buf._mask_ids.update({0: 0, 1: 1, 3: 3})
+    assert buf.add(mk(0, 2), 0.0) == "accepted"       # fresh
+    assert buf.add(mk(1, 1), 0.0) == "accepted"       # 1 late, in window
+    assert buf.add(mk(2, 0), 0.0) == "stale_dropped"  # beyond window
+    assert buf.add(mk(0, 2), 0.0) == "duplicate"      # same freshness
+    assert buf.add(mk(1, 2), 0.0) == "replaced"       # fresher than stale
+    assert buf.add(mk(3, 3), 0.0) == "future"         # next round, held
+    assert buf.add(mk(99, 2), 0.0) == "bad_client"
+    bad = ClientUpdate(client_id=4, round_id=2, mask_id=777,
+                       values=np.zeros(4), payload_bytes=1)
+    assert buf.add(bad, 0.0) == "bad_mask"
+    assert buf.count == 2  # clients 0 and 1 (3's update is held as future)
+    refed = buf.open(3, now=1.0, mask_id=3)
+    assert [(u.client_id, s) for u, s in refed] == [(3, "accepted")]
+
+
+def test_mask_id_is_stable():
+    k = jax.random.PRNGKey(7)
+    assert mask_id(np.asarray(k)) == mask_id(np.asarray(k))
+    assert mask_id(np.asarray(k)) != mask_id(
+        np.asarray(jax.random.PRNGKey(8)))
+
+
+# --------------------------------------------------------------------------
+# checkpoint kill-and-resume
+# --------------------------------------------------------------------------
+
+
+def test_checkpoint_kill_and_resume_identical(tmp_path):
+    """Kill after 6 rounds (checkpoint_every=3), restore into a FRESH
+    server (wrong seed, overwritten by the checkpoint), continue to 12:
+    bit-for-bit the uninterrupted 12-round run (and the simulator's)."""
+    cfg = _REGISTRY_CELLS[sorted(_REGISTRY_CELLS)[0]].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    straight, _, _ = _run_serve(cfg, loss_fn, params0, batch_fn, 12)
+
+    td = str(tmp_path)
+    serve = ServeConfig(checkpoint_every=3, checkpoint_dir=td)
+    sA = ByzantineRobustServer(cfg, params0, serve, seed=0)
+    run_service(sA, ClientPool(loss_fn, params0, cfg, batch_fn), 6)
+
+    ckpt = sorted(glob.glob(os.path.join(td, "*.npz")))[-1]
+    sB = ByzantineRobustServer(cfg, params0, serve, seed=1234)
+    assert sB.restore(ckpt.replace(".npz", "")) == 6
+    run_service(sB, ClientPool(loss_fn, params0, cfg, batch_fn), 6)
+
+    np.testing.assert_array_equal(np.asarray(straight.params_flat),
+                                  np.asarray(sB.params_flat))
+    sim_params, _ = _run_sim(cfg, loss_fn, params0, batch_fn, 12)
+    np.testing.assert_array_equal(sim_params, np.asarray(sB.params_flat))
+
+
+def test_restore_after_start_raises(tmp_path):
+    cfg = _REGISTRY_CELLS[sorted(_REGISTRY_CELLS)[0]].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    serve = ServeConfig(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    s = ByzantineRobustServer(cfg, params0, serve, seed=0)
+    run_service(s, ClientPool(loss_fn, params0, cfg, batch_fn), 2)
+    ckpt = glob.glob(os.path.join(str(tmp_path), "*.npz"))[0]
+    s2 = ByzantineRobustServer(cfg, params0, serve, seed=0).start()
+    with pytest.raises(RuntimeError, match="before start"):
+        s2.restore(ckpt.replace(".npz", ""))
+    s2.stop()
+
+
+# --------------------------------------------------------------------------
+# service behaviour
+# --------------------------------------------------------------------------
+
+
+def test_one_compile_across_participation_levels():
+    """The acceptance gate: one server instance driven at full, dropping,
+    and late participation must compile its step exactly once."""
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    serve = ServeConfig(quorum=cfg.n_workers - 3, timeout_s=0.05,
+                        staleness_window=2)
+    server = ByzantineRobustServer(cfg, params0, serve, seed=0)
+    for beh in (None, ClientBehavior(drop_prob=0.3, seed=1),
+                ClientBehavior(late_prob=0.4, seed=2)):
+        pool = ClientPool(loss_fn, params0, cfg, batch_fn, behavior=beh)
+        run_service(server, pool, 5, stop=False)
+    server.stop()
+    assert server.step_traces == 1
+    levels = set(r.n_updates
+                 for r in server.metrics.rounds)
+    assert len(levels) > 1  # the gate actually saw multiple levels
+
+
+def test_wait_round_times_out_loudly_below_quorum():
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    loss_fn, params0, _, _ = _testbed(cfg)
+    server = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    server.start()
+    try:
+        with pytest.raises(TimeoutError, match="quorum"):
+            server.wait_round(0, timeout=0.2)
+    finally:
+        server.stop()
+
+
+def test_submit_rejects_bad_shape():
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    _, params0, _, _ = _testbed(cfg)
+    server = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    bad = ClientUpdate(client_id=0, round_id=0, mask_id=0,
+                       values=np.zeros(3), payload_bytes=1)
+    with pytest.raises(ValueError, match="shape"):
+        server.submit(bad)
+
+
+def test_metrics_throughput_sane():
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    server, _, _ = _run_serve(cfg, loss_fn, params0, batch_fn, 10)
+    s = server.metrics.summary()
+    assert s["rounds"] == 10
+    assert s["updates_accepted"] == 10 * cfg.n_workers
+    assert s["updates_per_sec"] > 0
+    assert s["latency_p99_ms"] >= s["latency_p50_ms"] > 0
