@@ -1,0 +1,273 @@
+"""Benchmark the streaming LLM-scale rollout pipeline (the ring-buffer PR).
+
+Three gated sections, JSON'd to results/BENCH_llm.json after each one:
+
+  parity_gate      CNN grid, ONE shared pre-stacked batch array feeding
+                   both paths: ``rollout_streaming`` must reproduce
+                   ``rollout`` bit for bit (max_abs_diff == 0.0 on params,
+                   momentum and every per-round metric), and a streamed
+                   ``execute_plan`` must return identical result rows.
+  host_memory      reduced stablelm_3b through the launch path
+                   (make_host_mesh + make_train_plan +
+                   build_chunked_train_step): materialising the batch
+                   schedule under the host budget must RAISE
+                   (``stack_batches``'s guard) while the ChunkPrefetcher
+                   run completes the same trajectory with
+                   high_water_bytes <= budget — the O(steps) ->
+                   O(prefetch_depth) claim, measured.
+  early_exit       warmed wall-clock: a tau-crossing streaming run must
+                   never be slower than the fixed-length streaming run of
+                   the same trajectory (the while-loop skips the remaining
+                   chunks' compute AND their transfers).
+
+Run: PYTHONPATH=src:. python -m benchmarks.bench_llm
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    AlgorithmConfig, AggregatorConfig, AttackConfig, Simulator,
+    SparsifierConfig, stack_batches,
+)
+from repro.core import sweep as SW
+
+# CNN parity grid (kept small: the gate is exactness, not scale)
+CNN_WORKERS, CNN_F, CNN_ROUNDS = 9, 2, 24
+# quadratic early-exit timing
+EE_N, EE_F, EE_D, EE_STEPS, EE_CHUNK = 13, 3, 256, 384, 32
+# transformer memory gate
+TF_STEPS, TF_CHUNK, TF_DEPTH = 48, 4, 2
+TF_BUDGET = 128 * 1024  # host bytes the materialised schedule must exceed
+
+
+def _parity_gate():
+    """Streaming == materialised on the MNIST-CNN grid, bit for bit."""
+    from repro.data import SyntheticMNIST
+    from repro.models import cnn_init, cnn_loss
+
+    ds = SyntheticMNIST(n_workers=CNN_WORKERS, per_worker=200, seed=0)
+    params0 = cnn_init(jax.random.PRNGKey(0))
+    # ONE pre-stacked array shared by both paths (BatchFn is stateful, so
+    # the stream must not re-pull from it — see execute_plan's docstring)
+    batches = stack_batches(ds.worker_batches(32), CNN_ROUNDS)
+    out = {}
+    worst = 0.0
+    for algo, attack in (("rosdhb", "alie"), ("robust_dgd", "signflip"),
+                         ("dgd", "alie")):
+        agg = "mean" if algo == "dgd" else "cwtm"
+        cfg = AlgorithmConfig(
+            name=algo, n_workers=CNN_WORKERS, f=CNN_F, gamma=0.05, beta=0.9,
+            sparsifier=SparsifierConfig(
+                kind="randk", ratio=1.0 if algo == "robust_dgd" else 0.1),
+            aggregator=AggregatorConfig(name=agg, f=CNN_F,
+                                        pre_nnm=(agg != "mean")),
+            attack=AttackConfig(name=attack,
+                                z=1.5 if attack == "alie" else None))
+        sim = Simulator(loss_fn=cnn_loss, params0=params0, cfg=cfg)
+        st_ref, ms_ref = sim.rollout(sim.init(0), batches)
+        st_s, ms_s, info = sim.rollout_streaming(
+            sim.init(0), batches, chunk_size=8, prefetch_depth=2)
+        diff = float(np.max(np.abs(np.asarray(st_s.params_flat)
+                                   - np.asarray(st_ref.params_flat))))
+        mdiff = max(float(np.max(np.abs(np.asarray(ms_s[k])
+                                        - np.asarray(ms_ref[k]))))
+                    for k in ms_ref)
+        worst = max(worst, diff, mdiff)
+        key = f"{algo}/{attack}"
+        out[key] = {"rounds": info["rounds_run"], "max_abs_diff": diff,
+                    "metric_max_abs_diff": mdiff, "exact": diff == 0.0,
+                    "dispatches": info["dispatches"]}
+        emit(f"llm/parity/{key}", 0.0,
+             f"max_abs_diff={diff} dispatches={info['dispatches']}")
+        assert diff == 0.0 and mdiff == 0.0, \
+            f"streaming parity broken for {key}: {diff} / {mdiff}"
+
+    # the fused grid path must stream to the same rows
+    scen = SW.grid_scenarios(["rosdhb", "dgd"], ["alie"], ["cwtm"],
+                             n_honest=CNN_WORKERS - CNN_F, f=CNN_F, ratio=0.1)
+    plan = SW.plan_grid(scen)
+    ref_rows = SW.execute_plan(plan, loss_fn=cnn_loss, params0=params0,
+                               batches=batches, seeds=[0], shard=False)
+    got_rows = SW.execute_plan(plan, loss_fn=cnn_loss, params0=params0,
+                               batches=batches, seeds=[0], shard=False,
+                               streaming=True, stream_chunk_size=8,
+                               prefetch_depth=2)
+    rows_equal = ref_rows == got_rows
+    emit("llm/parity/execute_plan", 0.0, f"rows_equal={rows_equal}")
+    assert rows_equal, "streamed execute_plan rows differ"
+    out["execute_plan_rows_equal"] = rows_equal
+    out["max_abs_diff"] = worst
+    return out
+
+
+def _host_memory_gate():
+    """Reduced stablelm_3b via the launch path: the O(steps) materialisation
+    refuses the budget, the stream completes under it."""
+    from repro.configs import get_arch
+    from repro.configs.base import ArchSpec, InputShape
+    from repro.core import algorithms as alg
+    from repro.data import ChunkPrefetcher
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import (TrainState, build_chunked_train_step,
+                                    make_train_plan)
+    from repro.models import model_init
+
+    spec = get_arch("stablelm_3b")
+    spec = ArchSpec(model=spec.model.reduced(n_layers=2, d_model=256)
+                    .with_overrides(vocab_size=512),
+                    citation=spec.citation)
+    mesh = make_host_mesh()
+    shape = InputShape("host_train", 128, 16, "train")
+    overrides = {
+        "name": "rosdhb", "gamma": 1e-3, "f": 2,
+        "sparsifier": SparsifierConfig(kind="block", ratio=0.05,
+                                       block_size=512),
+        "aggregator": AggregatorConfig(name="cwtm", f=2),
+        "attack": AttackConfig(name="alie"),
+    }
+    plan = make_train_plan(spec, shape, mesh, overrides, n_workers=8)
+    cfg = plan.model
+    lb = shape.global_batch // plan.n_workers
+
+    def batch_fn(t):
+        gen = np.random.default_rng((0, int(t)))
+        toks = gen.integers(0, cfg.vocab_size,
+                            (plan.n_workers, lb, shape.seq_len))
+        toks[..., 1::2] = (toks[..., 0::2] + 1) % cfg.vocab_size
+        return {"tokens": np.asarray(toks, np.int32)}
+
+    # the materialised path must refuse this budget...
+    try:
+        stack_batches(batch_fn, TF_STEPS, max_bytes=TF_BUDGET)
+        raised = False
+    except ValueError as e:
+        raised = True
+        assert "rollout_streaming" in str(e)
+    est_bytes = TF_STEPS * int(sum(
+        np.asarray(v).nbytes for v in batch_fn(0).values()))
+    emit("llm/host_memory/stack_refused", 0.0,
+         f"raised={raised} est={est_bytes} budget={TF_BUDGET}")
+    assert raised, (
+        f"stack_batches fit {est_bytes} B under {TF_BUDGET} B — grow "
+        "TF_STEPS so the materialised schedule exceeds the budget")
+
+    # ...while the stream finishes the SAME schedule inside it
+    with mesh:
+        params = model_init(jax.random.PRNGKey(0), cfg)
+        state = TrainState(
+            params=params,
+            server=alg.init_state(plan.algo, plan.flat_spec.padded_size),
+            step=jnp.zeros((), jnp.int32),
+            key=jax.random.PRNGKey(1))
+        chunk_step = jax.jit(build_chunked_train_step(plan, mesh, TF_CHUNK))
+        t0 = time.perf_counter()
+        steps_run = 0
+        with ChunkPrefetcher(batch_fn, TF_STEPS, TF_CHUNK, TF_DEPTH) as pf:
+            while True:
+                chunks = pf.take(1)
+                if not chunks:
+                    break
+                state, metrics = chunk_step(state, chunks[0])
+                steps_run += TF_CHUNK
+            jax.block_until_ready(state.params)
+            high_water = pf.high_water_bytes
+            chunk_bytes = pf.chunk_bytes
+        elapsed = time.perf_counter() - t0
+        final_loss = float(metrics["loss"][-1])
+
+    rounds_per_s = steps_run / elapsed
+    emit("llm/host_memory/stream", elapsed * 1e6 / steps_run,
+         f"high_water={high_water} budget={TF_BUDGET} "
+         f"rounds/s={rounds_per_s:.2f} loss={final_loss:.3f}")
+    assert steps_run == TF_STEPS
+    assert 0 < high_water <= TF_BUDGET, \
+        f"stream breached the host budget: {high_water} > {TF_BUDGET}"
+    assert np.isfinite(final_loss)
+    return {
+        "model": cfg.name, "d": int(plan.flat_spec.padded_size),
+        "n_workers": plan.n_workers, "steps": steps_run,
+        "chunk_size": TF_CHUNK, "prefetch_depth": TF_DEPTH,
+        "materialised_est_bytes": est_bytes, "budget_bytes": TF_BUDGET,
+        "stack_batches_raised": raised,
+        "stream_high_water_bytes": int(high_water),
+        "chunk_bytes": int(chunk_bytes),
+        "rounds_per_sec": rounds_per_s, "final_loss": final_loss,
+    }
+
+
+def _early_exit_gate():
+    """tau-crossing streaming run vs fixed-length streaming run, warmed."""
+    loss_fn, params0, batch_fn, _ = SW.quadratic_testbed(EE_N, EE_D)
+    cfg = AlgorithmConfig(
+        name="rosdhb", n_workers=EE_N, f=EE_F, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(kind="randk", ratio=0.2),
+        aggregator=AggregatorConfig(name="cwtm", f=EE_F, pre_nnm=True),
+        attack=AttackConfig(name="alie", z=1.5))
+    sim = Simulator(loss_fn=loss_fn, params0=params0, cfg=cfg)
+    batches = stack_batches(batch_fn, EE_STEPS)
+    _, ms_ref = sim.rollout(sim.init(0), batches)
+    loss_ref = np.asarray(ms_ref["loss"])
+    tau = float(loss_ref[EE_STEPS // 4])  # crossed a quarter of the way in
+
+    def run(tau_):
+        t0 = time.perf_counter()
+        _, _, info = sim.rollout_streaming(
+            sim.init(0), batches, chunk_size=EE_CHUNK, prefetch_depth=4,
+            tau=tau_, tau_metric="loss", tau_mode="<=")
+        return time.perf_counter() - t0, info
+
+    run(tau)          # warm both branches of the shared compiled program
+    run(None)
+    t_early = min(run(tau)[0] for _ in range(3))
+    t_full = min(run(None)[0] for _ in range(3))
+    _, info = run(tau)
+    speedup = t_full / t_early
+    emit("llm/early_exit", t_early * 1e6,
+         f"rounds={info['rounds_run']}/{EE_STEPS} "
+         f"full={t_full * 1e6:.0f}us speedup={speedup:.2f}x")
+    assert info["early_exit"] and info["rounds_run"] < EE_STEPS
+    assert t_early <= t_full * 1.05, (
+        f"early exit slower than fixed length: {t_early:.4f}s vs "
+        f"{t_full:.4f}s")
+    return {
+        "steps": EE_STEPS, "chunk_size": EE_CHUNK, "tau": tau,
+        "rounds_at_exit": info["rounds_run"],
+        "early_s": t_early, "full_s": t_full, "speedup": speedup,
+    }
+
+
+def run(out: str = "results/BENCH_llm.json",
+        out_root: str = "BENCH_llm.json"):
+    jnp.zeros(1).block_until_ready()  # backend init outside all timings
+
+    # rewrite the JSON after every section so a failed gate still leaves
+    # partial results behind (CI uploads with if: always())
+    results = {}
+
+    def record(name, fn):
+        try:
+            results[name] = fn()
+        finally:
+            for path in (out, out_root):
+                if path:
+                    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+                    with open(path, "w") as fh:
+                        json.dump(results, fh, indent=2)
+
+    record("parity_gate", _parity_gate)
+    record("host_memory", _host_memory_gate)
+    record("early_exit", _early_exit_gate)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -50,7 +50,9 @@ class ScenarioSpec:
       alpha_het: Dirichlet concentration of the data split; ``None`` =
         i.i.d.  Applied by the CLI when building the testbed (quadratic
         testbeds ignore it — their heterogeneity is the target spread).
-      testbed: ``quadratic`` | ``mnist`` — the testbed the CLI should use.
+      testbed: ``quadratic`` | ``mnist`` | ``transformer`` — the testbed
+        the CLI should use (``transformer`` = reduced ``stablelm_3b``
+        causal LM on synthetic token streams; pairs with ``--stream``).
     """
 
     name: str
@@ -174,5 +176,14 @@ for _spec in (
         "tracked mimic + alie on the i.i.d. MNIST split (control for the"
         " dirichlet variants)",
         attacks=("mimic", "alie"), testbed="mnist"),
+    ScenarioSpec(
+        "transformer-table1",
+        "Table-1 cut on a reduced stablelm_3b LM: rosdhb + robust_dgd x"
+        " {alie, signflip} x CWTM+NNM, streamed from the prefetched ring"
+        " buffer (run with --testbed transformer --stream)",
+        algos=("rosdhb", "robust_dgd"),
+        attacks=("alie", "signflip"),
+        byz_f=(2,), n_workers=9, ratio=0.1, gamma=0.1,
+        testbed="transformer"),
 ):
     register(_spec)

@@ -413,10 +413,11 @@ def _compressed_wire(cfg, atk_state, grads, mask_key, atk_key,
                      attack_params=None, attack_idx=None, ratio=None):
     # Steps 1-4: masks (global or local) + unbiased reconstruction, then the
     # Byzantine overwrite on the wire quantity.
-    n, d = grads.shape
-    sp = cfg.sparsifier
-    masks = C.make_masks(mask_key, n, d, sp, dtype=grads.dtype, ratio=ratio)
-    g_tilde = C.compress(grads, masks, sp, ratio=ratio)
+    # compressed_estimate dispatches between the jnp sparsifier (identical
+    # make_masks + compress graph) and the repro.kernels.randk Block-RandK
+    # round trip per SparsifierConfig.use_pallas
+    g_tilde = C.compressed_estimate(grads, mask_key, cfg.sparsifier,
+                                    ratio=ratio)
     return _byzantine_overwrite(cfg, atk_state, g_tilde, atk_key,
                                 attack_params, attack_idx)
 

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,12 +49,20 @@ class SparsifierConfig:
       block_size: block width for ``kind='block'``.
       local: if True, each worker samples its own mask (RoSDHB-Local);
         otherwise one global mask is shared (RoSDHB).
+      use_pallas: Block-RandK compressor backend — ``None`` (default)
+        auto-selects the ``repro.kernels.randk`` Pallas kernels on TPU and
+        the jnp sparsifier elsewhere; ``True`` forces the kernel path
+        (interpret mode off-TPU — parity testing); ``False`` forces jnp.
+        Only ``kind='block'`` with a static ratio and
+        ``d % block_size == 0`` has a kernel; everything else always runs
+        the jnp path (same contract as ``AggregatorConfig.use_pallas``).
     """
 
     kind: str = "bernoulli"
     ratio: float = 1.0
     block_size: int = 512
     local: bool = False
+    use_pallas: Optional[bool] = None
 
     @property
     def alpha(self) -> float:
@@ -192,6 +200,95 @@ def compress(g: jnp.ndarray, mask: jnp.ndarray, cfg: SparsifierConfig,
     if cfg.kind == "none" or cfg.ratio >= 1.0:
         return g
     return (cfg.alpha * g) * mask
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel backend (repro.kernels.randk) — Block-RandK round trip
+# --------------------------------------------------------------------------
+
+
+def resolve_kernel_backend(use_pallas: Optional[bool]
+                           ) -> Optional[Dict[str, bool]]:
+    """Resolve ``SparsifierConfig.use_pallas`` against the live backend —
+    the same contract as ``aggregators.resolve_kernel_backend``: ``None``
+    for the jnp sparsifier, else ``{"interpret": bool}`` (interpret mode
+    whenever the backend is not a TPU, so forcing the kernels on CPU
+    exercises the real kernel bodies instead of failing to lower)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if not use_pallas:
+        return None
+    return {"interpret": not on_tpu}
+
+
+def kernel_backend_label(cfg: SparsifierConfig) -> str:
+    """Resolved compressor backend: ``pallas`` | ``pallas-interpret`` |
+    ``jnp``."""
+    kb = resolve_kernel_backend(cfg.use_pallas)
+    if kb is None:
+        return "jnp"
+    return "pallas-interpret" if kb["interpret"] else "pallas"
+
+
+def _kernel_eligible(cfg: SparsifierConfig, d: int,
+                     ratio: Optional[jnp.ndarray]) -> bool:
+    """Only exact Block-RandK with a static keep-ratio and block-aligned
+    ``d`` has a kernel; anything else stays on the jnp sparsifier."""
+    return (cfg.kind == "block" and ratio is None and cfg.ratio < 1.0
+            and d % cfg.block_size == 0)
+
+
+def compressed_estimate(grads: jnp.ndarray, mask_key: jax.Array,
+                        cfg: SparsifierConfig,
+                        ratio: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Steps 1+4 in one call: sample the round's masks from ``mask_key`` and
+    return the server-side unbiased reconstruction ``(d/k)(g ⊙ mask)`` for a
+    ``[n, d]`` gradient bank.
+
+    The jnp path is literally :func:`make_masks` + :func:`compress` — the
+    trajectory graph is unchanged. When the resolved backend
+    (:func:`resolve_kernel_backend`) selects the Pallas kernels and the
+    config is kernel-eligible (:func:`_kernel_eligible`), the dense
+    mask-multiply is replaced by the ``repro.kernels.randk``
+    compress → decompress round trip over the REAL wire payload
+    (``[k_blocks * block_size]`` values + block ids): block ids are sampled
+    with exactly the ``_block_mask`` permutation (same key, same
+    ``round(ratio * nb)`` count — global masks share one id vector, local
+    masks split the key per worker), and the scatter of ``alpha * g`` is
+    bitwise the f32 mask-multiply on finite gradients.
+    """
+    n, d = grads.shape
+    kb = resolve_kernel_backend(cfg.use_pallas)
+    if kb is None or not _kernel_eligible(cfg, d, ratio):
+        masks = make_masks(mask_key, n, d, cfg, dtype=grads.dtype,
+                           ratio=ratio)
+        return compress(grads, masks, cfg, ratio=ratio)
+
+    from repro.kernels.randk import ops as RK
+    nb = d // cfg.block_size
+    k_blocks = max(1, int(round(cfg.ratio * nb)))
+
+    def block_ids(key: jax.Array) -> jnp.ndarray:
+        # identical sampling to _block_mask: permutation prefix of the
+        # block index set (order is irrelevant to the reconstruction)
+        return jax.random.permutation(key, nb)[:k_blocks].astype(jnp.int32)
+
+    if cfg.local:
+        ids = jax.vmap(block_ids)(jax.random.split(mask_key, n))
+    else:
+        ids = jnp.broadcast_to(block_ids(mask_key), (n, k_blocks))
+
+    def roundtrip(args):
+        g_row, id_row = args
+        payload = RK.compress(g_row, id_row, block_size=cfg.block_size,
+                              alpha=cfg.alpha, use_pallas=True,
+                              interpret=kb["interpret"])
+        return RK.decompress(payload, id_row, block_size=cfg.block_size,
+                             d=d, use_pallas=True,
+                             interpret=kb["interpret"])
+
+    return jax.lax.map(roundtrip, (grads, ids))
 
 
 def payload_floats(d: int, cfg: SparsifierConfig) -> int:

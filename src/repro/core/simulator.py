@@ -26,7 +26,8 @@ and the convergence-comparison benchmarks; the LLM-scale path lives in
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+import os
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +35,7 @@ import numpy as np
 
 from repro.core import aggregators as G
 from repro.core import algorithms as alg
+from repro.data import stream as DS
 from repro.utils import tree as T
 
 
@@ -43,16 +45,54 @@ class SimState(NamedTuple):
     key: jax.Array
 
 
+#: Sanity ceiling on the host-side footprint :func:`stack_batches` will
+#: materialise before refusing (2 GiB). Past MNIST-CNN scale the right tool
+#: is the O(prefetch_depth) streaming path — see
+#: :meth:`Simulator.rollout_streaming` / ``repro.data.stream``. Override
+#: per-call with ``max_bytes=`` or globally with the
+#: ``REPRO_STACK_BYTES_LIMIT`` env var (``0`` disables the check).
+STACK_BYTES_LIMIT = 2 * 1024 ** 3
+
+
+def _stack_limit(max_bytes: Optional[int]) -> int:
+    if max_bytes is not None:
+        return max_bytes
+    env = os.environ.get("REPRO_STACK_BYTES_LIMIT")
+    return int(env) if env is not None else STACK_BYTES_LIMIT
+
+
 def stack_batches(batch_fn: Callable[[int], Any], steps: int,
-                  start: int = 0) -> Any:
+                  start: int = 0, max_bytes: Optional[int] = None) -> Any:
     """Materialise ``batch_fn(start) .. batch_fn(start+steps-1)`` stacked on a
     leading step axis, ready for :meth:`Simulator.rollout`'s scan.
 
     Stateful ``batch_fn`` implementations (e.g. ``data.BatchFn``) are called
     in step order, so chunked stacking reproduces the same stream as the
     legacy per-round loop.
+
+    Raises ``ValueError`` (instead of silently OOM-ing the host) when the
+    estimated footprint ``steps * batch_bytes`` exceeds the sanity limit
+    (``max_bytes`` if given, else ``REPRO_STACK_BYTES_LIMIT``, else
+    :data:`STACK_BYTES_LIMIT`); the message points at the O(prefetch_depth)
+    streaming path (:meth:`Simulator.rollout_streaming`).
     """
-    per_step = [batch_fn(t) for t in range(start, start + steps)]
+    limit = _stack_limit(max_bytes)
+    per_step: List[Any] = []
+    for i, t in enumerate(range(start, start + steps)):
+        b = batch_fn(t)
+        if i == 0 and limit:
+            per = DS.batch_bytes(b)
+            est = per * steps
+            if est > limit:
+                raise ValueError(
+                    f"stack_batches would materialise ~{est / 1e9:.2f} GB "
+                    f"host-side ({steps} steps x {per} bytes/step), over the "
+                    f"{limit / 1e9:.2f} GB sanity limit. Stream the batches "
+                    "instead — Simulator.rollout_streaming / "
+                    "repro.data.stream.ChunkPrefetcher hold only "
+                    "O(prefetch_depth) chunks — or raise the limit via "
+                    "max_bytes= / REPRO_STACK_BYTES_LIMIT (0 disables).")
+        per_step.append(b)
     return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *per_step)
 
 
@@ -159,9 +199,11 @@ class Simulator:
             return st, ms, buf
 
         self._round = jax.jit(_round)
-        # un-jitted scan kept separate so repro.core.sweep can vmap it over
-        # the grid fusion axes (seed / attack-coefficient / aggregator
-        # index / ratio) before compiling
+        # un-jitted round/scan kept separate so repro.core.sweep can vmap
+        # them over the grid fusion axes (seed / attack-coefficient /
+        # aggregator index / ratio) before compiling, and so the streaming
+        # while-loop-of-scan-chunks program can embed the same round body
+        self._round_unjit = _round
         self._scan = _scan
         self._rollout = jax.jit(_scan)
         self._snap_rollout = jax.jit(_snap_scan)
@@ -254,6 +296,229 @@ class Simulator:
         snaps0 = jnp.zeros((len(eval_rounds), self.spec.padded_size),
                            jnp.float32)
         return self._snap_rollout(state, batches, jnp.asarray(mask), snaps0)
+
+    # ------------------------------------------------------------------ #
+    # streaming rollout: while-loop over scan chunks from a ring buffer
+    # ------------------------------------------------------------------ #
+
+    def _metric_struct(self, state: SimState, one_batch: Any,
+                       scenario=None) -> Dict[str, Any]:
+        """Abstract shapes of the per-round metrics dict (cached — the
+        ``eval_shape`` trace counts once in ``round_traces``)."""
+        key = ("stream_metric_struct", scenario is not None)
+        if key not in self._sweep_cache:
+            # scenario (one lane's traced ScenarioParams, or None) is closed
+            # over: bank configs need it to trace the round body at all
+            self._sweep_cache[key] = jax.eval_shape(
+                lambda s, b: self._round_unjit(s, b, None, scenario)[1],
+                state, one_batch)
+        return self._sweep_cache[key]
+
+    def _stream_raw(self, chunk_size: int, metric: str, mode: str,
+                    use_eval: bool) -> Callable:
+        """Build (and cache) the un-jitted while-loop-of-scan-chunks body.
+
+        The returned ``run_buffer(state, buf, n_valid, tau, eval_batch,
+        metrics0, scenario)`` consumes a device ring buffer ``buf`` whose
+        leaves are ``[depth, chunk_size, n_workers, ...]``: a
+        ``lax.while_loop`` scans one chunk per iteration (the identical
+        round body as :meth:`rollout` — bit-for-bit the reference path),
+        writes the chunk's per-round metrics into the carried
+        ``[depth * chunk_size]`` buffers, then evaluates the early-exit
+        metric and stops once it crosses ``tau`` (``mode`` ``'>='`` or
+        ``'<='``). Left un-jitted so the sweep engine can vmap it over the
+        flat grid axis before compiling (``lax.while_loop``'s batching rule
+        freezes finished lanes, so per-lane early exit is preserved).
+        """
+        key_ = ("stream_raw", chunk_size, metric, mode, use_eval)
+        if key_ in self._sweep_cache:
+            return self._sweep_cache[key_]
+        if mode not in (">=", "<="):
+            raise ValueError(f"tau_mode must be '>=' or '<=', got {mode!r}")
+
+        def run_buffer(state, buf, n_valid, tau, eval_batch, metrics0,
+                       scenario=None):
+            def chunk_metric(st, ms):
+                if use_eval:
+                    em = self.eval_fn(T.tree_unravel(st.params_flat,
+                                                     self.spec), eval_batch)
+                    return jnp.asarray(em[metric], jnp.float32)
+                return jnp.asarray(ms[metric][-1], jnp.float32)
+
+            def cond(carry):
+                st, i, done, bufs, last = carry
+                return (i < n_valid) & jnp.logical_not(done)
+
+            def body(carry):
+                st, i, done, bufs, last = carry
+                cb = jax.tree_util.tree_map(
+                    lambda l: jax.lax.dynamic_index_in_dim(
+                        l, i, 0, keepdims=False), buf)
+                st2, ms = jax.lax.scan(
+                    lambda s, b: self._round_unjit(s, b, None, scenario),
+                    st, cb)
+                bufs = {k: jax.lax.dynamic_update_slice_in_dim(
+                    bufs[k], ms[k].astype(bufs[k].dtype), i * chunk_size,
+                    axis=0) for k in bufs}
+                ev = chunk_metric(st2, ms)
+                hit = (ev >= tau) if mode == ">=" else (ev <= tau)
+                return (st2, i + 1, hit, bufs, ev)
+
+            init = (state, jnp.zeros((), jnp.int32), jnp.zeros((), bool),
+                    metrics0, jnp.full((), jnp.nan, jnp.float32))
+            st, i, done, bufs, last = jax.lax.while_loop(cond, body, init)
+            return st, bufs, i, done, last
+
+        self._sweep_cache[key_] = run_buffer
+        return run_buffer
+
+    def rollout_streaming(self, state: SimState, batches: Any,
+                          steps: Optional[int] = None, *,
+                          chunk_size: int = 32, prefetch_depth: int = 4,
+                          tau: Optional[float] = None,
+                          tau_metric: Optional[str] = None,
+                          tau_mode: Optional[str] = None,
+                          eval_batch: Any = None
+                          ) -> Tuple[SimState, Dict[str, np.ndarray],
+                                     Dict[str, Any]]:
+        """Streaming trajectory: prefetched ring buffer + chunked early exit.
+
+        The O(steps) host materialisation of :meth:`rollout` is replaced by
+        a host prefetch thread (``repro.data.stream.ChunkPrefetcher``) that
+        device-puts ``chunk_size``-round chunks into a fixed-depth ring
+        buffer; the rollout consumes up to ``prefetch_depth`` chunks per
+        dispatch inside ONE jitted ``lax.while_loop``-over-scan-chunks
+        program (the scan body is the identical round body — with ``tau``
+        unset the trajectory is bit-for-bit :meth:`rollout`'s). Host-side
+        residency is O(prefetch_depth * chunk_bytes) regardless of
+        trajectory length.
+
+        Early exit: after each chunk the carried eval metric is compared
+        against ``tau`` — ``eval_fn(params, eval_batch)[tau_metric]`` when
+        ``eval_batch`` is given (default metric ``'acc'``, mode ``'>='``),
+        else the chunk's last per-round ``tau_metric`` (default ``'loss'``,
+        mode ``'<='``). The loop stops at the first chunk boundary past the
+        crossing, so unlike the post-hoc :func:`sweep.bytes_to_threshold`
+        protocol the remaining rounds are never computed.
+
+        ``batches`` is a ``batch_fn(t)`` callable (streamed; ``steps``
+        required) or a pre-stacked ``[steps, ...]`` pytree (chunked and
+        device-put chunk-by-chunk — useful for parity tests). A tail of
+        ``steps % chunk_size`` rounds runs through the fixed-length
+        :meth:`rollout` program on the final state.
+
+        Returns ``(final_state, metrics, info)``: ``metrics`` holds
+        ``[rounds_run]`` host arrays (truncated at early exit), ``info``
+        reports ``rounds_run`` / ``early_exit`` / ``last_metric`` /
+        ``dispatches`` / ``chunk_bytes`` / ``host_high_water_bytes`` /
+        ``device_buffer_bytes``.
+        """
+        if chunk_size <= 0 or prefetch_depth <= 0:
+            raise ValueError("chunk_size and prefetch_depth must be positive")
+        if callable(batches):
+            if steps is None:
+                raise ValueError("steps is required when batches is callable")
+            source: Any = DS.ChunkPrefetcher(batches, steps, chunk_size,
+                                             prefetch_depth)
+            tail_fn = batches
+            stacked = None
+        else:
+            n_avail = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            steps = n_avail if steps is None else min(steps, n_avail)
+            stacked = batches
+            source = DS.StackedChunkSource(batches, steps, chunk_size)
+            tail_fn = None
+        n_chunks = steps // chunk_size
+        remainder = steps % chunk_size
+
+        use_eval = (tau is not None and eval_batch is not None
+                    and self.eval_fn is not None)
+        metric = tau_metric or ("acc" if use_eval else "loss")
+        mode = tau_mode or (">=" if use_eval else "<=")
+        # a never-crossed sentinel: '>=' can't reach +inf, '<=' can't reach
+        # -inf, so tau=None runs the full fixed length
+        disabled = jnp.inf if mode == ">=" else -jnp.inf
+        tau_arr = jnp.float32(tau if tau is not None else disabled)
+        eval_in = eval_batch if use_eval else jnp.zeros((), jnp.float32)
+
+        metrics_parts: List[Dict[str, np.ndarray]] = []
+        early = False
+        last_metric = float("nan")
+        dispatches = 0
+        chunks_done = 0
+        metrics0 = None
+        prog_key = ("stream_jit", chunk_size, metric, mode, use_eval)
+        try:
+            while chunks_done < n_chunks and not early:
+                chunks = source.take(prefetch_depth)
+                if not chunks:
+                    break
+                n_valid = len(chunks)
+                buf = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                             *chunks)
+                if n_valid < prefetch_depth:
+                    # pad the buffer to the fixed depth (never consumed:
+                    # the while-loop stops at n_valid)
+                    buf = jax.tree_util.tree_map(
+                        lambda l: jnp.concatenate(
+                            [l] + [l[-1:]] * (prefetch_depth - n_valid),
+                            axis=0), buf)
+                if metrics0 is None:
+                    one = jax.tree_util.tree_map(lambda l: l[0, 0], buf)
+                    struct = self._metric_struct(state, one)
+                    metrics0 = {k: jnp.zeros((prefetch_depth * chunk_size,),
+                                             v.dtype)
+                                for k, v in struct.items()}
+                if prog_key not in self._sweep_cache:
+                    self._sweep_cache[prog_key] = jax.jit(
+                        self._stream_raw(chunk_size, metric, mode, use_eval))
+                state, bufs, i_done, done, last = self._sweep_cache[prog_key](
+                    state, buf, n_valid, tau_arr, eval_in, metrics0)
+                dispatches += 1
+                i_done = int(i_done)
+                early = bool(done)
+                last_metric = float(last)
+                rounds = i_done * chunk_size
+                metrics_parts.append(
+                    {k: np.asarray(v[:rounds]) for k, v in bufs.items()})
+                chunks_done += i_done
+        finally:
+            if hasattr(source, "close"):
+                source.close()
+
+        if remainder and not early:
+            if tail_fn is not None:
+                tail = stack_batches(tail_fn, remainder,
+                                     start=n_chunks * chunk_size)
+            else:
+                tail = jax.tree_util.tree_map(
+                    lambda l: l[n_chunks * chunk_size:steps], stacked)
+            state, ms = self._rollout(state, tail)
+            metrics_parts.append({k: np.asarray(v) for k, v in ms.items()})
+
+        if metrics_parts:
+            metrics = {k: np.concatenate([p[k] for p in metrics_parts])
+                       for k in metrics_parts[0]}
+        else:
+            metrics = {}
+        rounds_run = int(next(iter(metrics.values())).shape[0]) \
+            if metrics else 0
+        chunk_bytes = getattr(source, "chunk_bytes", 0)
+        info = {
+            "rounds_run": rounds_run,
+            "early_exit": early,
+            "last_metric": last_metric,
+            "tau": tau,
+            "tau_metric": metric,
+            "tau_mode": mode,
+            "dispatches": dispatches,
+            "chunk_size": chunk_size,
+            "prefetch_depth": prefetch_depth,
+            "chunk_bytes": chunk_bytes,
+            "host_high_water_bytes": getattr(source, "high_water_bytes", 0),
+            "device_buffer_bytes": prefetch_depth * chunk_bytes,
+        }
+        return state, metrics, info
 
     def _record(self, history: Dict[str, list], rec: Dict[str, float],
                 t: int) -> None:

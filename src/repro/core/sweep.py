@@ -258,6 +258,206 @@ def fused_grid_rollout(sim: Simulator, params: alg.ScenarioParams,
             jax.tree_util.tree_map(unflatten, out_metrics))
 
 
+def _chunk_source(batches: Any, steps: Optional[int], chunk_size: int,
+                  prefetch_depth: int, device: Optional[Any] = None):
+    """Build the chunk source for a streaming sweep: a prefetch thread for
+    ``batch_fn`` callables, a slice-and-device-put source for pre-stacked
+    pytrees. Returns ``(source, steps)``."""
+    from repro.data import stream as DS
+    if callable(batches):
+        if steps is None:
+            raise ValueError("steps is required when batches is callable")
+        return (DS.ChunkPrefetcher(batches, steps, chunk_size,
+                                   prefetch_depth, device=device), steps)
+    n_avail = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    steps = n_avail if steps is None else min(steps, n_avail)
+    return (DS.StackedChunkSource(batches, steps, chunk_size,
+                                  device=device), steps)
+
+
+def _drive_stream_lanes(sim: Simulator, prog: Callable, states_flat: Any,
+                        params_flat: Optional[Any], source: Any,
+                        chunk_size: int, prefetch_depth: int
+                        ) -> Tuple[Any, Dict[str, jnp.ndarray], Dict[str,
+                                                                     Any]]:
+    """Host loop of a streaming sweep: feed ``prefetch_depth``-deep device
+    buffers through the vmapped while-loop program until the chunk source is
+    exhausted. No early exit (sweep tables need full-length trajectories:
+    ``bytes_to_threshold`` stays the post-hoc protocol), so every lane runs
+    exactly ``n_valid`` chunks per dispatch."""
+    n_rows = jax.tree_util.tree_leaves(states_flat)[0].shape[0]
+    tau = jnp.float32(-jnp.inf)  # '<=' sentinel: never crossed
+    eval_in = jnp.zeros((), jnp.float32)
+    metrics_parts: List[Dict[str, np.ndarray]] = []
+    dispatches = 0
+    metrics0 = None
+    state = states_flat
+    try:
+        while True:
+            chunks = source.take(prefetch_depth)
+            if not chunks:
+                break
+            n_valid = len(chunks)
+            buf = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *chunks)
+            if n_valid < prefetch_depth:
+                buf = jax.tree_util.tree_map(
+                    lambda l: jnp.concatenate(
+                        [l] + [l[-1:]] * (prefetch_depth - n_valid), axis=0),
+                    buf)
+            if metrics0 is None:
+                one_state = jax.tree_util.tree_map(lambda l: l[0],
+                                                   states_flat)
+                one_batch = jax.tree_util.tree_map(lambda l: l[0, 0], buf)
+                one_scenario = (jax.tree_util.tree_map(lambda l: l[0],
+                                                       params_flat)
+                                if params_flat is not None else None)
+                struct = sim._metric_struct(one_state, one_batch,
+                                            one_scenario)
+                metrics0 = {
+                    k: jnp.zeros((n_rows, prefetch_depth * chunk_size),
+                                 v.dtype) for k, v in struct.items()}
+            args = (state, buf, n_valid, tau, eval_in, metrics0)
+            if params_flat is not None:
+                args = args + (params_flat,)
+            state, bufs, i_done, done, last = prog(*args)
+            dispatches += 1
+            rounds = n_valid * chunk_size
+            metrics_parts.append(
+                {k: np.asarray(v[:, :rounds]) for k, v in bufs.items()})
+    finally:
+        if hasattr(source, "close"):
+            source.close()
+    metrics = ({k: jnp.asarray(np.concatenate([p[k] for p in metrics_parts],
+                                              axis=1))
+                for k in metrics_parts[0]} if metrics_parts else {})
+    info = {
+        "dispatches": dispatches,
+        "chunk_size": chunk_size,
+        "prefetch_depth": prefetch_depth,
+        "chunk_bytes": getattr(source, "chunk_bytes", 0),
+        "host_high_water_bytes": getattr(source, "high_water_bytes", 0),
+    }
+    return state, metrics, info
+
+
+def rollout_over_seeds_streaming(sim: Simulator, seeds: Sequence[int],
+                                 batches: Any, steps: Optional[int] = None,
+                                 *, chunk_size: int = 32,
+                                 prefetch_depth: int = 4
+                                 ) -> Tuple[SimState, dict]:
+    """Streaming counterpart of :func:`rollout_over_seeds`: the same
+    vmap-over-seeds program, but fed from a prefetched ring buffer chunk by
+    chunk instead of one O(steps) stacked array — bit-for-bit identical
+    trajectories (the chunk scan embeds the identical round body).
+
+    The ``steps % chunk_size`` tail runs through the fixed-length
+    ``seed_vmap`` program (shared cache with :func:`rollout_over_seeds`).
+    """
+    source, steps = _chunk_source(batches, steps, chunk_size, prefetch_depth)
+    n_chunks = steps // chunk_size
+    remainder = steps % chunk_size
+    states = init_states(sim, seeds)
+    key = ("stream_seed_vmap", chunk_size)
+    if key not in sim._sweep_cache:
+        raw = sim._stream_raw(chunk_size, "loss", "<=", False)
+        sim._sweep_cache[key] = jax.jit(
+            jax.vmap(raw, in_axes=(0, None, None, None, None, 0)))
+    state, metrics, _ = _drive_stream_lanes(
+        sim, sim._sweep_cache[key], states, None, source, chunk_size,
+        prefetch_depth)
+    if remainder:
+        from repro.core.simulator import stack_batches
+        tail = (stack_batches(batches, remainder, start=n_chunks * chunk_size)
+                if callable(batches) else
+                jax.tree_util.tree_map(
+                    lambda l: l[n_chunks * chunk_size:steps], batches))
+        if "seed_vmap" not in sim._sweep_cache:
+            sim._sweep_cache["seed_vmap"] = jax.jit(
+                jax.vmap(sim._scan, in_axes=(0, None)))
+        state, tail_ms = sim._sweep_cache["seed_vmap"](state, tail)
+        metrics = {k: jnp.concatenate([metrics[k], tail_ms[k]], axis=1)
+                   for k in metrics} if metrics else tail_ms
+    return state, metrics
+
+
+def fused_grid_rollout_streaming(sim: Simulator,
+                                 params: alg.ScenarioParams,
+                                 seeds: Sequence[int], batches: Any,
+                                 steps: Optional[int] = None, *,
+                                 chunk_size: int = 32,
+                                 prefetch_depth: int = 4,
+                                 shard: bool = True,
+                                 devices: Optional[Sequence[Any]] = None
+                                 ) -> Tuple[SimState, dict]:
+    """Streaming counterpart of :func:`fused_grid_rollout`: the bank's flat
+    ``[n_cells * n_seeds]`` fusion axis (same tiling / padding / mesh
+    sharding) consumes chunks from a prefetched ring buffer inside the
+    while-loop-of-scan-chunks program, so the host never materialises the
+    ``[steps, ...]`` batch schedule. Trajectories are bit-for-bit the
+    :func:`fused_grid_rollout` ones (identical round body, identical lane
+    layout); only the input residency changes.
+
+    Returns ``(final_states, metrics)`` with leading ``[n_cells, n_seeds]``
+    axes, metrics ``[n_cells, n_seeds, steps]``.
+    """
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves:
+        raise ValueError("ScenarioParams has no traced components to fuse")
+    lead = [l.shape[0] for l in leaves]
+    if len(set(lead)) != 1:
+        raise ValueError(f"inconsistent ScenarioParams cell axes: {lead}")
+    n_c, n_s = lead[0], len(seeds)
+    states = init_states(sim, seeds)
+    states_flat = jax.tree_util.tree_map(
+        lambda l: jnp.tile(l, (n_c,) + (1,) * (l.ndim - 1)), states)
+    params_flat = jax.tree_util.tree_map(
+        lambda l: jnp.repeat(l, n_s, axis=0), params)
+    n_rows = n_c * n_s
+    mesh = S.sweep_mesh(devices) if shard else None
+    chunk_device = None
+    if mesh is not None and mesh.size > 1:
+        pad = (-n_rows) % mesh.size
+        if pad:
+            pad_rows = lambda l: jnp.concatenate(  # noqa: E731
+                [l, jnp.repeat(l[-1:], pad, axis=0)], axis=0)
+            states_flat = jax.tree_util.tree_map(pad_rows, states_flat)
+            params_flat = jax.tree_util.tree_map(pad_rows, params_flat)
+        states_flat = jax.device_put(states_flat, S.grid_sharding(mesh))
+        params_flat = jax.device_put(params_flat, S.grid_sharding(mesh))
+        chunk_device = S.replicated_sharding(mesh)
+    source, steps = _chunk_source(batches, steps, chunk_size, prefetch_depth,
+                                  device=chunk_device)
+    n_chunks = steps // chunk_size
+    remainder = steps % chunk_size
+    key = ("stream_grid_vmap", chunk_size)
+    if key not in sim._sweep_cache:
+        raw = sim._stream_raw(chunk_size, "loss", "<=", False)
+        sim._sweep_cache[key] = jax.jit(
+            jax.vmap(raw, in_axes=(0, None, None, None, None, 0, 0)))
+    state, metrics, _ = _drive_stream_lanes(
+        sim, sim._sweep_cache[key], states_flat, params_flat, source,
+        chunk_size, prefetch_depth)
+    if remainder:
+        from repro.core.simulator import stack_batches
+        tail = (stack_batches(batches, remainder, start=n_chunks * chunk_size)
+                if callable(batches) else
+                jax.tree_util.tree_map(
+                    lambda l: l[n_chunks * chunk_size:steps], batches))
+        if chunk_device is not None:
+            tail = jax.device_put(tail, chunk_device)
+        if "grid_vmap" not in sim._sweep_cache:
+            sim._sweep_cache["grid_vmap"] = jax.jit(
+                jax.vmap(sim._scan, in_axes=(0, None, None, 0)))
+        state, tail_ms = sim._sweep_cache["grid_vmap"](
+            state, tail, None, params_flat)
+        metrics = {k: jnp.concatenate([metrics[k], tail_ms[k]], axis=1)
+                   for k in metrics} if metrics else tail_ms
+    unflatten = lambda l: l[:n_rows].reshape(  # noqa: E731
+        (n_c, n_s) + l.shape[1:])
+    return (jax.tree_util.tree_map(unflatten, state),
+            jax.tree_util.tree_map(unflatten, metrics))
+
+
 def fused_attack_rollout(sim: Simulator,
                          attack_cfgs: Sequence[A.AttackConfig],
                          seeds: Sequence[int], batches: Any,
@@ -679,7 +879,10 @@ def execute_plan(plan: GridPlan, *,
                  shard: bool = True,
                  devices: Optional[Sequence[Any]] = None,
                  sim_cache: Optional[Dict[alg.AlgorithmConfig,
-                                          Simulator]] = None
+                                          Simulator]] = None,
+                 streaming: bool = False,
+                 stream_chunk_size: int = 32,
+                 prefetch_depth: int = 4
                  ) -> Dict[str, List[Dict[str, Any]]]:
     """Execute a :class:`GridPlan`; return rows keyed by scenario label.
 
@@ -700,9 +903,29 @@ def execute_plan(plan: GridPlan, *,
 
     Labels are the stable row key (``id(scenario)`` was reusable after GC
     and collided silently); duplicates raise ``ValueError``.
+
+    With ``streaming=True`` the O(steps) host materialisation is skipped:
+    each bank/single consumes ``stream_chunk_size``-round chunks from a
+    ``prefetch_depth``-deep ring buffer
+    (:func:`fused_grid_rollout_streaming` /
+    :func:`rollout_over_seeds_streaming`) — bit-for-bit the same
+    trajectories, O(prefetch_depth) host residency. A callable ``batches``
+    is then re-streamed from round 0 for EVERY bank and single, so it must
+    be a pure function of the round index (stateful ``data.BatchFn``
+    instances would diverge across banks — pre-stack those, or pass a
+    ``(seed, t)``-keyed pure fn as the transformer testbed does).
     """
-    batches = ensure_stacked(batches, steps)
-    n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    if streaming:
+        if callable(batches):
+            if steps is None:
+                raise ValueError("steps is required when batches is callable")
+            n_steps = steps
+        else:
+            n_avail = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            n_steps = n_avail if steps is None else min(steps, n_avail)
+    else:
+        batches = ensure_stacked(batches, steps)
+        n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
     rows_by_label: Dict[str, List[Dict[str, Any]]] = {}
     if sim_cache is None:
         sim_cache = {}
@@ -722,9 +945,15 @@ def execute_plan(plan: GridPlan, *,
 
     for bank in plan.banks:
         sim = get_sim(bank.cfg)
-        states, metrics = fused_grid_rollout(
-            sim, bank.scenario_params(), seeds, batches,
-            shard=shard, devices=devices)
+        if streaming:
+            states, metrics = fused_grid_rollout_streaming(
+                sim, bank.scenario_params(), seeds, batches, n_steps,
+                chunk_size=stream_chunk_size, prefetch_depth=prefetch_depth,
+                shard=shard, devices=devices)
+        else:
+            states, metrics = fused_grid_rollout(
+                sim, bank.scenario_params(), seeds, batches,
+                shard=shard, devices=devices)
         loss = np.asarray(metrics["loss"])  # [n_cells, n_seeds, steps]
         emet_grid = (fused_grid_eval(sim, states, eval_batch, shard=shard,
                                      devices=devices)
@@ -736,7 +965,12 @@ def execute_plan(plan: GridPlan, *,
             insert(sc, _result_rows(sc, sim, seeds, loss[c], emet, n_steps))
     for sc in plan.singles:
         sim = get_sim(sc.cfg)
-        states, metrics = rollout_over_seeds(sim, seeds, batches)
+        if streaming:
+            states, metrics = rollout_over_seeds_streaming(
+                sim, seeds, batches, n_steps,
+                chunk_size=stream_chunk_size, prefetch_depth=prefetch_depth)
+        else:
+            states, metrics = rollout_over_seeds(sim, seeds, batches)
         emet = (eval_over_seeds(sim, states, eval_batch)
                 if eval_fn is not None and eval_batch is not None
                 else {})
@@ -757,7 +991,10 @@ def run_scenarios(scenarios: Sequence[Scenario], *,
                   devices: Optional[Sequence[Any]] = None,
                   cost_model: Optional[CostModel] = None,
                   sim_cache: Optional[Dict[alg.AlgorithmConfig,
-                                           Simulator]] = None
+                                           Simulator]] = None,
+                  streaming: bool = False,
+                  stream_chunk_size: int = 32,
+                  prefetch_depth: int = 4
                   ) -> List[Dict[str, Any]]:
     """Run every scenario x seed cell; return the flat results table.
 
@@ -777,18 +1014,26 @@ def run_scenarios(scenarios: Sequence[Scenario], *,
     ``shard=False`` keeps every program on the default device. With
     ``cost_model`` the fuse-vs-partition choice per multi-algorithm bank is
     the model's (:func:`plan_grid`); ``sim_cache`` shares compiled
-    Simulators across calls (see :func:`execute_plan`).
+    Simulators across calls (see :func:`execute_plan`);
+    ``streaming=True`` feeds every bank from the prefetched ring buffer
+    instead of one O(steps) stacked array (see :func:`execute_plan`).
     """
-    batches = ensure_stacked(batches, steps)
-    rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    if streaming and callable(batches):
+        if steps is None:
+            raise ValueError("steps is required when batches is callable")
+        rounds = steps
+    else:
+        batches = ensure_stacked(batches, steps)
+        rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
     plan = plan_grid(scenarios, fuse=fuse_attacks, cross_algo=cross_algo,
                      cost_model=cost_model, rounds=rounds,
                      n_seeds=len(seeds),
                      sharded=shard and len(devices or jax.devices()) > 1)
     rows_by_label = execute_plan(
         plan, loss_fn=loss_fn, params0=params0, batches=batches, seeds=seeds,
-        eval_fn=eval_fn, eval_batch=eval_batch, shard=shard,
-        devices=devices, sim_cache=sim_cache)
+        steps=rounds, eval_fn=eval_fn, eval_batch=eval_batch, shard=shard,
+        devices=devices, sim_cache=sim_cache, streaming=streaming,
+        stream_chunk_size=stream_chunk_size, prefetch_depth=prefetch_depth)
     # restore caller ordering regardless of fusion grouping
     return [row for sc in scenarios for row in rows_by_label[sc.label]]
 
@@ -827,6 +1072,48 @@ def _mnist_testbed(n_workers: int, per_worker: int = 800, batch: int = 60,
             ds.worker_batches(batch), eval_fn, ds.eval_batch)
 
 
+def _transformer_testbed(n_workers: int, local_batch: int = 4,
+                         seq_len: int = 32, seed: int = 0,
+                         n_layers: int = 2, d_model: int = 256):
+    """Reduced ``configs/stablelm_3b`` causal LM on synthetic token streams.
+
+    The batch schedule is a PURE function of the round index
+    (``np.random.default_rng((seed, t))``), so the streaming path can
+    re-stream it per bank without divergence (unlike the stateful MNIST
+    ``BatchFn``). Eval is held-out next-token accuracy.
+
+    Returns ``(loss_fn, params0, batch_fn, eval_fn, eval_batch)``.
+    """
+    from repro.configs.base import get_arch
+    from repro.data import synthetic_token_batch
+    from repro.models import transformer as TR
+
+    cfg = get_arch("stablelm_3b").model.reduced(n_layers=n_layers,
+                                                d_model=d_model)
+    params0 = TR.model_init(jax.random.PRNGKey(seed), cfg)
+    loss_fn = lambda p, b: TR.lm_loss(p, cfg, b)  # noqa: E731
+
+    def batch_fn(t: int):
+        rng = np.random.default_rng((seed, int(t)))
+        return synthetic_token_batch(rng, n_workers, local_batch, seq_len,
+                                     cfg.vocab_size)
+
+    def eval_fn(p, b):
+        hidden, _, _ = TR.forward(p, cfg, b, mode="train")
+        logits = TR.logits_fn(p, cfg, hidden[:, :-1]).astype(jnp.float32)
+        pred = jnp.argmax(logits, axis=-1)
+        tgt = b["tokens"][:, 1:]
+        return {"acc": jnp.mean((pred == tgt).astype(jnp.float32))}
+
+    # held-out eval stream: one "worker" with a bigger batch, keyed off the
+    # training round-index range (t < 2**32 always)
+    hold = np.random.default_rng((seed, 2 ** 32))
+    eval_batch = {
+        k: jnp.asarray(v[0]) for k, v in synthetic_token_batch(
+            hold, 1, 8 * local_batch, seq_len, cfg.vocab_size).items()}
+    return loss_fn, params0, batch_fn, eval_fn, eval_batch
+
+
 def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
     import argparse
 
@@ -851,7 +1138,20 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
     p.add_argument("--ratio", type=float, default=0.1)
     p.add_argument("--gamma", type=float, default=0.05)
     p.add_argument("--testbed", default="quadratic",
-                   choices=["quadratic", "mnist"])
+                   choices=["quadratic", "mnist", "transformer"])
+    p.add_argument("--stream", action=argparse.BooleanOptionalAction,
+                   default=False,
+                   help="feed rollouts from the prefetched ring buffer "
+                        "(repro.data.stream) instead of materialising the "
+                        "[steps, ...] batch schedule host-side — required "
+                        "for LLM-scale step counts; implied default for "
+                        "--testbed transformer")
+    p.add_argument("--stream-chunk", type=int, default=32,
+                   help="rounds per streamed chunk (scan length of one "
+                        "chunk program)")
+    p.add_argument("--prefetch-depth", type=int, default=4,
+                   help="ring-buffer depth: peak host residency is "
+                        "O(prefetch_depth * chunk_bytes)")
     p.add_argument("--fuse", action=argparse.BooleanOptionalAction,
                    default=True,
                    help="fuse the attack / aggregator / algorithm / ratio "
@@ -919,17 +1219,29 @@ def main(argv: Optional[Sequence[str]] = None) -> List[Dict[str, Any]]:
                         rounds=args.steps, n_seeds=args.seeds).describe())
         return []
     seeds = list(range(args.seeds))
+    streaming = args.stream or testbed == "transformer"
     if testbed == "quadratic":
         loss_fn, params0, batch_fn, _ = quadratic_testbed(n)
         eval_fn = eval_batch = None
+    elif testbed == "transformer":
+        loss_fn, params0, batch_fn, eval_fn, eval_batch = \
+            _transformer_testbed(n)
     else:
         loss_fn, params0, batch_fn, eval_fn, eval_batch = _mnist_testbed(
             n, alpha_het=alpha_het)
+        if streaming:
+            # the MNIST BatchFn is stateful (own RNG): pre-stack once so
+            # every bank streams the identical schedule
+            from repro.core.simulator import stack_batches
+            batch_fn = stack_batches(batch_fn, args.steps)
     rows = run_scenarios(scenarios, loss_fn=loss_fn, params0=params0,
                          batches=batch_fn, seeds=seeds, steps=args.steps,
                          eval_fn=eval_fn, eval_batch=eval_batch,
                          fuse_attacks=args.fuse, cross_algo=args.cross_algo,
-                         shard=args.shard, cost_model=cost_model)
+                         shard=args.shard, cost_model=cost_model,
+                         streaming=streaming,
+                         stream_chunk_size=args.stream_chunk,
+                         prefetch_depth=args.prefetch_depth)
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:

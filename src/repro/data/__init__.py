@@ -1,3 +1,7 @@
 from repro.data.synthetic import SyntheticMNIST, BatchFn, synthetic_token_batch
+from repro.data.stream import (
+    ChunkPrefetcher, batch_bytes, split_chunks, stack_chunk,
+)
 
-__all__ = ["SyntheticMNIST", "BatchFn", "synthetic_token_batch"]
+__all__ = ["SyntheticMNIST", "BatchFn", "synthetic_token_batch",
+           "ChunkPrefetcher", "batch_bytes", "split_chunks", "stack_chunk"]

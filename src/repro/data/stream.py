@@ -1,0 +1,235 @@
+"""Streaming batch pipeline: host prefetch thread -> fixed-depth ring buffer.
+
+The scan engine's legacy input contract materialises the ENTIRE batch
+schedule host-side as one ``[steps, n_workers, ...]`` pytree
+(``core.simulator.stack_batches``) before the rollout starts — O(steps)
+host memory, which caps trajectories at MNIST-CNN scale. This module
+replaces that with a bounded producer/consumer pipeline:
+
+* a **prefetch thread** calls ``batch_fn(t)`` ahead of the consumer,
+  stacks ``chunk_size`` rounds into one chunk, and hands each chunk to the
+  device with its own ``jax.device_put`` — the host-side numpy copy dies
+  as soon as the transfer completes;
+* a **fixed-depth ring buffer** (a bounded queue of device-resident
+  chunks) decouples the two sides: the producer blocks when
+  ``prefetch_depth`` chunks are waiting, so peak residency is
+  O(prefetch_depth) chunks regardless of trajectory length.
+
+``Simulator.rollout_streaming`` consumes the buffer ``prefetch_depth``
+chunks at a time inside one jitted ``lax.while_loop``-over-scan-chunks
+program (early exit between chunks); ``repro.launch`` consumers drive a
+chunked pjit train step the same way. The producer side is deliberately
+framework-free — any ``batch_fn(t) -> pytree`` works, including the
+stateful ``data.BatchFn`` (chunks are built in strict step order).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["ChunkPrefetcher", "StackedChunkSource", "batch_bytes",
+           "stack_chunk", "split_chunks"]
+
+
+def batch_bytes(batch: Any) -> int:
+    """Total leaf bytes of one batch pytree (numpy or jax leaves)."""
+    return int(sum(np.asarray(l).nbytes
+                   for l in jax.tree_util.tree_leaves(batch)))
+
+
+def stack_chunk(batch_fn: Callable[[int], Any], start: int,
+                length: int) -> Any:
+    """Materialise ``length`` consecutive batches stacked on a leading round
+    axis — ONE chunk of the stream (host-side, numpy)."""
+    rows = [batch_fn(t) for t in range(start, start + length)]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *rows)
+
+
+def split_chunks(batches: Any, chunk_size: int) -> List[Any]:
+    """Slice a pre-stacked ``[steps, ...]`` pytree into full ``chunk_size``
+    chunks (the tail remainder is NOT included — callers handle it with the
+    fixed-length path)."""
+    steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    n_chunks = steps // chunk_size
+    return [jax.tree_util.tree_map(
+        lambda l: l[c * chunk_size:(c + 1) * chunk_size], batches)
+        for c in range(n_chunks)]
+
+
+class StackedChunkSource:
+    """Chunk source over a pre-stacked ``[steps, ...]`` pytree — the same
+    ``take(k)`` contract as :class:`ChunkPrefetcher`, but chunks are sliced
+    from the given array and device-put one at a time (no thread). Used by
+    parity tests to feed BOTH the materialised and streaming paths from one
+    identical array."""
+
+    def __init__(self, batches: Any, steps: int, chunk_size: int,
+                 device: Optional[Any] = None):
+        self.chunk_size = chunk_size
+        self.n_chunks = steps // chunk_size
+        self.remainder = steps % chunk_size
+        self._batches = batches
+        self._device = device
+        self._taken = 0
+        self.chunk_bytes = 0
+        self.high_water_chunks = 0
+        self.high_water_bytes = 0
+
+    def take(self, k: int, timeout: float = 0.0) -> List[Any]:
+        want = min(k, self.n_chunks - self._taken)
+        out: List[Any] = []
+        for _ in range(max(0, want)):
+            c = self._taken
+            host = jax.tree_util.tree_map(
+                lambda l: l[c * self.chunk_size:(c + 1) * self.chunk_size],
+                self._batches)
+            if not self.chunk_bytes:
+                self.chunk_bytes = batch_bytes(host)
+            out.append(jax.device_put(host, self._device)
+                       if self._device is not None
+                       else jax.device_put(host))
+            self._taken += 1
+        self.high_water_chunks = max(self.high_water_chunks, len(out))
+        self.high_water_bytes = self.high_water_chunks * self.chunk_bytes
+        return out
+
+    def close(self) -> None:
+        pass
+
+
+class ChunkPrefetcher:
+    """Host prefetch thread filling a fixed-depth ring buffer of device chunks.
+
+    Args:
+      batch_fn: ``batch_fn(t) -> pytree`` of per-worker batches for round t.
+        Called strictly in step order on the producer thread (stateful
+        ``data.BatchFn`` implementations reproduce the materialised stream).
+      steps: total rounds to produce (``start .. start + steps - 1``).
+      chunk_size: rounds per chunk (the scan length of one chunk program).
+      prefetch_depth: ring-buffer depth — at most this many chunks are ever
+        resident beyond the one being built, so host/producer memory is
+        O(prefetch_depth * chunk_bytes) instead of O(steps * batch_bytes).
+      start: first round index.
+      device: optional ``jax.Device`` / ``Sharding`` for the per-chunk
+        ``device_put`` handoff (default device when None).
+
+    Attributes (after the first chunk):
+      chunk_bytes: bytes of one device-put chunk.
+      high_water_chunks / high_water_bytes: peak resident chunks/bytes
+        observed on the producer side (queued + one in flight) — the number
+        the O(prefetch_depth) claim is gated on in benchmarks/bench_llm.py.
+    """
+
+    def __init__(self, batch_fn: Callable[[int], Any], steps: int,
+                 chunk_size: int, prefetch_depth: int = 4, start: int = 0,
+                 device: Optional[Any] = None):
+        if chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        if prefetch_depth <= 0:
+            raise ValueError(
+                f"prefetch_depth must be positive, got {prefetch_depth}")
+        self.chunk_size = chunk_size
+        self.prefetch_depth = prefetch_depth
+        self.n_chunks = steps // chunk_size
+        self.remainder = steps % chunk_size
+        self._batch_fn = batch_fn
+        self._start = start
+        self._device = device
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=prefetch_depth)
+        self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self.chunk_bytes = 0
+        self.high_water_chunks = 0
+        self.high_water_bytes = 0
+        self._taken = 0
+        self._thread = threading.Thread(target=self._produce, daemon=True,
+                                        name="repro-chunk-prefetch")
+        self._thread.start()
+
+    # ------------------------------------------------------------------ #
+    # producer thread
+    # ------------------------------------------------------------------ #
+
+    def _produce(self) -> None:
+        try:
+            for c in range(self.n_chunks):
+                if self._stop.is_set():
+                    return
+                host = stack_chunk(self._batch_fn,
+                                   self._start + c * self.chunk_size,
+                                   self.chunk_size)
+                if not self.chunk_bytes:
+                    self.chunk_bytes = batch_bytes(host)
+                chunk = (jax.device_put(host, self._device)
+                         if self._device is not None
+                         else jax.device_put(host))
+                del host  # the host copy dies with the transfer
+                queued = False
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(chunk, timeout=0.05)
+                        queued = True
+                        break
+                    except queue.Full:
+                        continue
+                if not queued:  # consumer closed early
+                    return
+                # queued chunks + the one about to be built next
+                resident = self._q.qsize() + 1
+                self.high_water_chunks = max(self.high_water_chunks, resident)
+                self.high_water_bytes = self.high_water_chunks \
+                    * self.chunk_bytes
+        except BaseException as e:  # surfaced to the consumer in take()
+            self._error = e
+
+    # ------------------------------------------------------------------ #
+    # consumer side
+    # ------------------------------------------------------------------ #
+
+    def take(self, k: int, timeout: float = 120.0) -> List[Any]:
+        """Block for up to ``min(k, chunks remaining)`` device chunks, in
+        stream order. Returns ``[]`` once the stream is exhausted."""
+        want = min(k, self.n_chunks - self._taken)
+        out: List[Any] = []
+        for _ in range(max(0, want)):
+            deadline = timeout
+            while True:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "ChunkPrefetcher producer thread failed"
+                    ) from self._error
+                try:
+                    out.append(self._q.get(timeout=0.05))
+                    break
+                except queue.Empty:
+                    deadline -= 0.05
+                    if deadline <= 0:
+                        raise TimeoutError(
+                            f"prefetch thread produced nothing for "
+                            f"{timeout}s (chunk {self._taken + len(out)}"
+                            f"/{self.n_chunks})")
+            self._taken += 1
+        return out
+
+    def close(self) -> None:
+        """Stop the producer (early exit): drain the queue so a blocked
+        ``put`` wakes up, then join the thread."""
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        if self._thread.is_alive():
+            self._thread.join(timeout=10.0)
+
+    def __enter__(self) -> "ChunkPrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

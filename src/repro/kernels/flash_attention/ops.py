@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -20,11 +21,28 @@ def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     """Causal (optionally sliding-window) GQA attention.
 
     use_pallas=None -> Pallas kernel on TPU, XLA reference elsewhere.
+
+    Head dims that are not lane-aligned (``D % 128 != 0`` — e.g. the
+    ``reduced()`` configs' D=64) are zero-padded to the next multiple of
+    128 for the kernel: padded K coordinates contribute 0 to every logit
+    and padded V coordinates produce 0 outputs (sliced back off), and q is
+    pre-scaled by ``sqrt(D_pad / D)`` to cancel the kernel's
+    ``1/sqrt(D_pad)`` softmax scale against the true ``1/sqrt(D)``.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    if use_pallas:
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               q_offset=q_offset, interpret=interpret)
-    return attention_ref(q, k, v, causal=causal, window=window,
-                         q_offset=q_offset)
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+    d = q.shape[-1]
+    pad = (-d) % 128
+    if pad:
+        comp = jnp.asarray(math.sqrt((d + pad) / d), q.dtype)
+        pad_last = lambda x: jnp.pad(  # noqa: E731
+            x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+        q = pad_last(q * comp)
+        k = pad_last(k)
+        v = pad_last(v)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, interpret=interpret)
+    return out[..., :d] if pad else out

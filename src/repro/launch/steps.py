@@ -186,6 +186,31 @@ def build_train_step(plan: TrainPlan, mesh: Mesh):
     return train_step
 
 
+def build_chunked_train_step(plan: TrainPlan, mesh: Mesh,
+                             chunk_size: int):
+    """Scan ``chunk_size`` rounds of :func:`build_train_step` inside ONE
+    compiled program: ``chunk_step(state, chunk) -> (state, metrics)`` with
+    ``chunk`` leaves ``[chunk_size, n_workers, ...]`` and metrics stacked
+    ``[chunk_size]``.
+
+    This is the device program the streaming launch driver dispatches once
+    per ring-buffer chunk (``repro.data.stream.ChunkPrefetcher``): host
+    dispatch and batch residency drop from O(steps) to O(chunk), and the
+    scan carry is exactly the ``TrainState`` of :func:`train_input_specs` —
+    mirror/prev_grad slots pruned by the algorithm's resolved
+    ``StateLayout``, so chunking never widens the carry.
+    """
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    step = build_train_step(plan, mesh)
+
+    def chunk_step(state: TrainState, chunk: Dict[str, jnp.ndarray]
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        return jax.lax.scan(step, state, chunk)
+
+    return chunk_step
+
+
 # --------------------------------------------------------------------------
 # abstract inputs (ShapeDtypeStruct) for lower()/compile() — no allocation
 # --------------------------------------------------------------------------
@@ -264,6 +289,20 @@ def _train_batch_specs(cfg: ModelConfig, plan: TrainPlan, mesh: Mesh):
             (n, lb, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
             mesh, P(sp.dp_axes(mesh), None, None, None))
     return batch
+
+
+def stream_batch_specs(plan: TrainPlan, mesh: Mesh, chunk_size: int):
+    """Abstract ``[chunk_size, ...]`` batch chunk for
+    ``jit(build_chunked_train_step(...)).lower``: the per-round specs of
+    :func:`_train_batch_specs` with a leading replicated round axis (the
+    scan axis — every device sees every round, worker sharding unchanged).
+    """
+    per_round = _train_batch_specs(plan.model, plan, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: _sds((chunk_size,) + s.shape, s.dtype, mesh,
+                       P(*((None,) + s.sharding.spec))),
+        per_round,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
 
 # --------------------------------------------------------------------------

@@ -23,8 +23,10 @@ from repro.configs import INPUT_SHAPES, get_arch
 from repro.configs.base import ArchSpec, InputShape
 from repro.core import AggregatorConfig, AttackConfig, SparsifierConfig
 from repro.core import algorithms as alg
+from repro.data import ChunkPrefetcher
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import TrainState, build_train_step, make_train_plan
+from repro.launch.steps import (TrainState, build_chunked_train_step,
+                                build_train_step, make_train_plan)
 from repro.models import model_init
 
 
@@ -44,6 +46,12 @@ def main():
     p.add_argument("--multi-pod", action="store_true")
     p.add_argument("--checkpoint", default=None)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--stream", action="store_true",
+                   help="feed batches through the prefetched ring buffer "
+                        "(repro.data.stream) and scan --chunk-size rounds "
+                        "per dispatch — O(prefetch_depth) host residency")
+    p.add_argument("--chunk-size", type=int, default=8)
+    p.add_argument("--prefetch-depth", type=int, default=2)
     args = p.parse_args()
 
     on_tpu = jax.default_backend() == "tpu"
@@ -89,30 +97,64 @@ def main():
         lb = shape.global_batch // plan.n_workers
         print(f"[train] {spec.model.name} D={plan.flat_spec.padded_size:,} "
               f"n_workers={plan.n_workers} f={plan.algo.f} "
-              f"algo={plan.algo.name} k/d={args.ratio}")
-        t0 = time.time()
-        for t in range(args.steps):
-            toks = rng.integers(0, cfg.vocab_size,
+              f"algo={plan.algo.name} k/d={args.ratio}"
+              + (f" stream chunk={args.chunk_size}"
+                 f" depth={args.prefetch_depth}" if args.stream else ""))
+
+        def make_batch(gen):
+            toks = gen.integers(0, cfg.vocab_size,
                                 (plan.n_workers, lb, shape.seq_len))
             toks[..., 1::2] = (toks[..., 0::2] + 1) % cfg.vocab_size
-            batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+            batch = {"tokens": np.asarray(toks, np.int32)}
             if cfg.input_kind != "tokens":
                 batch = {
-                    "embeddings": jnp.asarray(rng.normal(size=(
+                    "embeddings": np.asarray(gen.normal(size=(
                         plan.n_workers, lb, shape.seq_len, cfg.d_model)),
-                        jnp.float32),
-                    "targets": jnp.asarray(toks % cfg.vocab_size, jnp.int32),
+                        np.float32),
+                    "targets": np.asarray(toks % cfg.vocab_size, np.int32),
                 }
             if cfg.family == "vlm":
-                batch["image_embeddings"] = jnp.asarray(
-                    rng.normal(size=(plan.n_workers, lb,
+                batch["image_embeddings"] = np.asarray(
+                    gen.normal(size=(plan.n_workers, lb,
                                      cfg.n_image_tokens, cfg.d_model)),
-                    jnp.float32)
-            state, metrics = step(state, batch)
-            if t % 5 == 0 or t == args.steps - 1:
-                print(f"[train] step {t:4d} loss={float(metrics['loss']):.4f}"
-                      f" |R|={float(metrics['dir_norm']):.3f}"
-                      f" ({time.time()-t0:.1f}s)")
+                    np.float32)
+            return batch
+
+        t0 = time.time()
+        if args.stream:
+            # pure-fn-of-t schedule so the prefetch thread owns its RNG
+            chunk_step = jax.jit(build_chunked_train_step(
+                plan, mesh, args.chunk_size))
+            batch_fn = lambda t: make_batch(  # noqa: E731
+                np.random.default_rng((args.seed, t)))
+            t = 0
+            with ChunkPrefetcher(batch_fn, args.steps, args.chunk_size,
+                                 args.prefetch_depth) as pf:
+                while True:
+                    chunks = pf.take(1)
+                    if not chunks:
+                        break
+                    state, metrics = chunk_step(state, chunks[0])
+                    t += args.chunk_size
+                    print(f"[train] step {t:4d} "
+                          f"loss={float(metrics['loss'][-1]):.4f}"
+                          f" |R|={float(metrics['dir_norm'][-1]):.3f}"
+                          f" ({time.time()-t0:.1f}s)")
+                print(f"[train] host high-water: {pf.high_water_bytes:,} B "
+                      f"({pf.high_water_chunks} chunks)")
+            for t in range(args.steps - args.steps % args.chunk_size,
+                           args.steps):  # remainder rounds, one dispatch each
+                state, metrics = step(
+                    state, jax.device_put(make_batch(
+                        np.random.default_rng((args.seed, t)))))
+        else:
+            for t in range(args.steps):
+                state, metrics = step(state, jax.device_put(make_batch(rng)))
+                if t % 5 == 0 or t == args.steps - 1:
+                    print(f"[train] step {t:4d} "
+                          f"loss={float(metrics['loss']):.4f}"
+                          f" |R|={float(metrics['dir_norm']):.3f}"
+                          f" ({time.time()-t0:.1f}s)")
         if args.checkpoint:
             ckpt.save(args.checkpoint, {"params": state.params},
                       step=args.steps)

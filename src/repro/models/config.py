@@ -66,6 +66,13 @@ class ModelConfig:
     # --- input modality: "tokens" (ids) or "embeddings" (audio stub) ---
     input_kind: str = "tokens"
 
+    # --- attention backend: None auto-selects the Pallas flash-attention
+    #     kernel on TPU (jnp fallback elsewhere); True forces the kernel
+    #     (interpret mode off-TPU — parity testing); False forces the
+    #     chunked-XLA path. Train-mode self-attention only; decode/prefill
+    #     cache paths always use the XLA formulation. ---
+    use_flash_attention: Optional[bool] = None
+
     dtype: str = "bfloat16"
 
     # ----------------------------------------------------------------- #

@@ -286,8 +286,20 @@ def attn_apply(p: Params, cfg, x: jnp.ndarray, *, mode: str = "train",
         out = decode_attention(q, ck, cv, pos, window=cfg.sliding_window)
         new_cache = {"k": ck, "v": cv}
     else:
-        out = causal_attention(q, k, v, q_offset=pos,
-                               window=cfg.sliding_window)
+        flash = getattr(cfg, "use_flash_attention", None)
+        if flash is None:
+            flash = jax.default_backend() == "tpu"
+        if flash and mode == "train" and causal and isinstance(pos, int):
+            # kernelised hot path: repro.kernels.flash_attention (interpret
+            # mode off-TPU, non-128 head dims zero-padded in ops.attention)
+            from repro.kernels.flash_attention import ops as FA
+            out = FA.attention(q, k, v, causal=True,
+                               window=cfg.sliding_window, q_offset=pos,
+                               use_pallas=True,
+                               interpret=jax.default_backend() != "tpu")
+        else:
+            out = causal_attention(q, k, v, q_offset=pos,
+                                   window=cfg.sliding_window)
         if mode == "prefill":
             assert cache is not None, "prefill requires a preallocated cache"
             new_cache = {

@@ -1,6 +1,7 @@
 """Sparsifier properties: unbiasedness, variance envelope, payload, masks —
 under both static-config and traced keep-ratios (the fused grid axis)."""
 
+import dataclasses
 import math
 
 import jax
@@ -242,3 +243,64 @@ def test_clip_norm_bounds_worker_rows():
     r, _, _ = server_round(cfg, st, g, jax.random.PRNGKey(0))
     # each row clipped to norm 1 -> mean direction has norm <= 1
     assert float(jnp.linalg.norm(r)) <= 1.0 + 1e-5
+
+
+# --------------------------------------------------------------------------
+# Pallas rand-k kernel dispatch (compressed_estimate use_pallas path)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("local", [False, True])
+def test_compressed_estimate_kernel_matches_jnp(local):
+    """The Pallas block-rand-k round trip (interpret mode off-TPU) must be
+    bit-for-bit the jnp mask-multiply: the traced-mask contract samples the
+    SAME blocks from the same key, and keep/zero is exact in f32."""
+    n, d, block = 6, 512, 128
+    cfg = C.SparsifierConfig(kind="block", ratio=0.25, block_size=block,
+                             local=local)
+    grads = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+    key = jax.random.PRNGKey(7)
+    ref = C.compressed_estimate(grads, key, dataclasses.replace(cfg, use_pallas=False))
+    got = C.compressed_estimate(grads, key, dataclasses.replace(cfg, use_pallas=True))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # sanity: it actually compressed (3/4 of blocks zeroed)
+    kept = float(jnp.mean(jnp.any(ref.reshape(n, -1, block) != 0, axis=-1)))
+    assert kept <= 0.5
+
+
+def test_compressed_estimate_kernel_ineligible_falls_back():
+    """d not a block multiple / traced ratio / kind != block all dispatch to
+    the jnp path even with use_pallas=True — identical results, no crash."""
+    key = jax.random.PRNGKey(0)
+    # d % block_size != 0
+    cfg = C.SparsifierConfig(kind="block", ratio=0.25, block_size=128,
+                             use_pallas=True)
+    g = jax.random.normal(key, (4, 200))
+    np.testing.assert_array_equal(
+        np.asarray(C.compressed_estimate(g, key, cfg)),
+        np.asarray(C.compressed_estimate(g, key, dataclasses.replace(
+            cfg, use_pallas=False))))
+    # ratio=1.0 (no compression) stays on the mask path
+    cfg2 = C.SparsifierConfig(kind="block", ratio=1.0, block_size=64,
+                              use_pallas=True)
+    g2 = jax.random.normal(key, (4, 256))
+    np.testing.assert_array_equal(
+        np.asarray(C.compressed_estimate(g2, key, cfg2)),
+        np.asarray(C.compressed_estimate(g2, key, dataclasses.replace(
+            cfg2, use_pallas=False))))
+    # non-block kinds never hit the kernel
+    cfg3 = C.SparsifierConfig(kind="randk", ratio=0.25, use_pallas=True)
+    np.testing.assert_array_equal(
+        np.asarray(C.compressed_estimate(g2, key, cfg3)),
+        np.asarray(C.compressed_estimate(g2, key, dataclasses.replace(
+            cfg3, use_pallas=False))))
+
+
+def test_kernel_backend_label_resolution():
+    assert C.kernel_backend_label(
+        C.SparsifierConfig(kind="block", use_pallas=False)) == "jnp"
+    lbl = C.kernel_backend_label(
+        C.SparsifierConfig(kind="block", use_pallas=True))
+    assert lbl in ("pallas", "pallas-interpret")
+    auto = C.kernel_backend_label(C.SparsifierConfig(kind="block"))
+    assert auto in ("jnp", "pallas")  # None -> TPU auto-detect

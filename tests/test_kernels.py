@@ -207,3 +207,46 @@ def test_flash_matches_model_attention_path():
     got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
     want = causal_attention(q, k, v, q_offset=0, chunk=64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+def test_ops_attention_pads_non_lane_head_dim():
+    """ops.attention zero-pads D=64 -> 128 for the kernel and rescales q so
+    the softmax temperature stays 1/sqrt(64); must match the XLA reference
+    (the head dim every reduced() config uses)."""
+    from repro.kernels.flash_attention.ops import attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 96, 4, 64))
+    k = jax.random.normal(ks[1], (2, 96, 2, 64))
+    v = jax.random.normal(ks[2], (2, 96, 2, 64))
+    got = attention(q, k, v, use_pallas=True, interpret=True)
+    want = attention(q, k, v, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+    # sliding-window + offset through the same padding path
+    got_w = attention(q, k, v, window=32, q_offset=64, use_pallas=True,
+                      interpret=True)
+    want_w = attention(q, k, v, window=32, q_offset=64, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                               atol=2e-3)
+
+
+def test_flash_flag_through_transformer_forward():
+    """use_flash_attention=True (interpret mode off-TPU) reproduces the
+    chunked-XLA train-mode forward of a reduced dense config within bf16
+    accumulation noise."""
+    from repro.configs.base import get_arch
+    from repro.models import transformer as TR
+
+    cfg_ref = get_arch("stablelm_3b").model.reduced(
+        n_layers=2, d_model=256).with_overrides(use_flash_attention=False)
+    cfg_flash = cfg_ref.with_overrides(use_flash_attention=True)
+    params = TR.model_init(jax.random.PRNGKey(0), cfg_ref)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                cfg_ref.vocab_size)
+    batch = {"tokens": tokens}
+    loss_ref = float(TR.lm_loss(params, cfg_ref, batch))
+    loss_flash = float(TR.lm_loss(params, cfg_flash, batch))
+    assert abs(loss_flash - loss_ref) < 1e-2, (loss_flash, loss_ref)
+    h_ref, _, _ = TR.forward(params, cfg_ref, batch, mode="train")
+    h_flash, _, _ = TR.forward(params, cfg_flash, batch, mode="train")
+    np.testing.assert_allclose(np.asarray(h_flash, np.float32),
+                               np.asarray(h_ref, np.float32), atol=0.1)

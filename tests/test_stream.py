@@ -1,0 +1,292 @@
+"""Streaming rollout engine: the prefetched ring-buffer pipeline and the
+while-loop-of-scan-chunks early-exit program must reproduce the materialised
+``lax.scan`` reference bit for bit (tentpole of the streaming-rollouts PR).
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AlgorithmConfig, AggregatorConfig, AttackConfig, Simulator,
+    SparsifierConfig, quadratic_testbed, stack_batches,
+)
+from repro.core import sweep as SW
+from repro.core import simulator as sim_lib
+from repro.data import ChunkPrefetcher, batch_bytes, split_chunks
+
+N, F, D, STEPS = 13, 3, 48, 50
+
+
+def _sim(algo, attack="alie", agg=None, ratio=0.2, eval_fn=None):
+    loss_fn, params0, batch_fn, tg = quadratic_testbed(N, D)
+    agg = agg or ("mean" if algo == "dgd" else "cwtm")
+    cfg = AlgorithmConfig(
+        name=algo, n_workers=N, f=F, gamma=0.05, beta=0.9,
+        sparsifier=SparsifierConfig(
+            kind="randk", ratio=1.0 if algo == "robust_dgd" else ratio),
+        aggregator=AggregatorConfig(name=agg, f=F, pre_nnm=(agg != "mean")),
+        attack=AttackConfig(name=attack, z=1.5 if attack == "alie" else None))
+    return Simulator(loss_fn=loss_fn, params0=params0, cfg=cfg,
+                     eval_fn=eval_fn), batch_fn
+
+
+# --------------------------------------------------------------------------
+# streaming == materialised, bit for bit
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo,attack", [
+    ("rosdhb", "alie"),
+    ("robust_dgd", "foe"),
+    ("dgd", "signflip"),
+])
+@pytest.mark.parametrize("chunk,depth", [(16, 2), (10, 4), (50, 1)])
+def test_streaming_matches_rollout_bitwise(algo, attack, chunk, depth):
+    """Params, momentum AND every per-round metric must be exactly equal —
+    the chunk program embeds the identical round body, so any drift is a
+    wiring bug, not float noise."""
+    sim, batch_fn = _sim(algo, attack=attack)
+    batches = stack_batches(batch_fn, STEPS)
+    st_ref, ms_ref = sim.rollout(sim.init(0), batches)
+    st_s, ms_s, info = sim.rollout_streaming(
+        sim.init(0), batches, chunk_size=chunk, prefetch_depth=depth)
+    assert info["rounds_run"] == STEPS and not info["early_exit"]
+    np.testing.assert_array_equal(np.asarray(st_s.params_flat),
+                                  np.asarray(st_ref.params_flat))
+    np.testing.assert_array_equal(np.asarray(st_s.server.momentum),
+                                  np.asarray(st_ref.server.momentum))
+    assert int(st_s.server.step) == STEPS
+    for k in ms_ref:
+        np.testing.assert_array_equal(np.asarray(ms_s[k]),
+                                      np.asarray(ms_ref[k]), err_msg=k)
+
+
+def test_streaming_callable_source_matches():
+    """batch_fn streamed through the prefetch thread == pre-stacked array."""
+    sim, batch_fn = _sim("rosdhb")
+    st_ref, _ = sim.rollout(sim.init(1), stack_batches(batch_fn, STEPS))
+    st_s, _, info = sim.rollout_streaming(
+        sim.init(1), batch_fn, steps=STEPS, chunk_size=16, prefetch_depth=3)
+    np.testing.assert_array_equal(np.asarray(st_s.params_flat),
+                                  np.asarray(st_ref.params_flat))
+    assert info["host_high_water_bytes"] <= \
+        (info["prefetch_depth"] + 1) * info["chunk_bytes"]
+
+
+def test_streaming_fused_bank_under_execute_plan():
+    """A cross-algorithm fused bank streamed chunk-by-chunk returns the
+    exact rows of the materialised plan execution."""
+    loss_fn, params0, batch_fn, _ = quadratic_testbed(N, D)
+    scen = SW.grid_scenarios(["rosdhb", "robust_dgd", "dgd"],
+                             ["alie", "signflip"], ["cwtm"],
+                             n_honest=N - F, f=F, ratio=0.2)
+    plan = SW.plan_grid(scen)
+    assert plan.banks, "expected at least one fused bank"
+    batches = stack_batches(batch_fn, STEPS)
+    ref = SW.execute_plan(plan, loss_fn=loss_fn, params0=params0,
+                          batches=batches, seeds=[0, 1], shard=False)
+    got = SW.execute_plan(plan, loss_fn=loss_fn, params0=params0,
+                          batches=batches, seeds=[0, 1], shard=False,
+                          streaming=True, stream_chunk_size=16,
+                          prefetch_depth=2)
+    assert set(ref) == set(got)
+    for lbl in ref:
+        for a, b in zip(ref[lbl], got[lbl]):
+            assert a == b, (lbl, a, b)
+
+
+def test_streaming_seed_vmap_singles_match():
+    sim, batch_fn = _sim("rosdhb")
+    batches = stack_batches(batch_fn, STEPS)
+    st_ref, ms_ref = SW.rollout_over_seeds(sim, [0, 1, 2], batches)
+    st_s, ms_s = SW.rollout_over_seeds_streaming(
+        sim, [0, 1, 2], batches, chunk_size=16, prefetch_depth=2)
+    np.testing.assert_array_equal(np.asarray(st_s.params_flat),
+                                  np.asarray(st_ref.params_flat))
+    for k in ms_ref:
+        np.testing.assert_array_equal(np.asarray(ms_s[k]),
+                                      np.asarray(ms_ref[k]), err_msg=k)
+
+
+# --------------------------------------------------------------------------
+# early exit at tau
+# --------------------------------------------------------------------------
+
+
+def test_early_exit_matches_truncated_fixed_run():
+    """Exit at the first chunk boundary past the tau crossing; the metric
+    prefix equals the fixed-length run truncated at that boundary."""
+    chunk = 8
+    sim, batch_fn = _sim("rosdhb")
+    batches = stack_batches(batch_fn, STEPS)
+    _, ms_ref = sim.rollout(sim.init(0), batches)
+    loss_ref = np.asarray(ms_ref["loss"])
+    tau = float(loss_ref[23])  # crossed mid-trajectory
+    st_s, ms_s, info = sim.rollout_streaming(
+        sim.init(0), batches, chunk_size=chunk, prefetch_depth=2,
+        tau=tau, tau_metric="loss", tau_mode="<=")
+    assert info["early_exit"]
+    r = info["rounds_run"]
+    assert r % chunk == 0 and r < STEPS
+    # first chunk boundary at-or-after the true crossing round
+    first_hit = int(np.argmax(loss_ref <= tau))
+    assert (first_hit // chunk) * chunk < r <= STEPS
+    assert loss_ref[r - 1] <= tau
+    np.testing.assert_array_equal(np.asarray(ms_s["loss"]), loss_ref[:r])
+    assert int(st_s.server.step) == r
+    assert info["last_metric"] == pytest.approx(float(loss_ref[r - 1]))
+
+
+def test_early_exit_eval_metric_path():
+    """tau against eval_fn metrics (accuracy-style '>=' crossing)."""
+    eval_fn = lambda p, b: {"gap": -jnp.linalg.norm(  # noqa: E731
+        p["w"] - b["target"].mean(0))}
+    sim, batch_fn = _sim("rosdhb", eval_fn=eval_fn)
+    batches = stack_batches(batch_fn, STEPS)
+    eval_batch = batch_fn(0)
+    st_s, ms, info = sim.rollout_streaming(
+        sim.init(0), batches, chunk_size=10, prefetch_depth=2,
+        tau=-3.0, tau_metric="gap", eval_batch=eval_batch)
+    assert info["tau_mode"] == ">="
+    if info["early_exit"]:
+        assert info["rounds_run"] < STEPS
+        assert info["last_metric"] >= -3.0
+
+
+def test_tau_never_crossed_runs_full_length():
+    sim, batch_fn = _sim("rosdhb")
+    batches = stack_batches(batch_fn, STEPS)
+    _, _, info = sim.rollout_streaming(
+        sim.init(0), batches, chunk_size=16, prefetch_depth=2,
+        tau=-1.0, tau_metric="loss", tau_mode="<=")  # loss never negative
+    assert not info["early_exit"] and info["rounds_run"] == STEPS
+
+
+# --------------------------------------------------------------------------
+# prefetcher behaviour
+# --------------------------------------------------------------------------
+
+
+def test_prefetch_depth_one_starves_but_completes():
+    """depth=1 with a slow producer: correct results, no deadlock."""
+    sim, batch_fn = _sim("rosdhb")
+
+    def slow_fn(t):
+        time.sleep(0.02)
+        return batch_fn(t)
+
+    st_ref, _ = sim.rollout(sim.init(0), stack_batches(batch_fn, 24))
+    st_s, _, info = sim.rollout_streaming(
+        sim.init(0), slow_fn, steps=24, chunk_size=4, prefetch_depth=1)
+    np.testing.assert_array_equal(np.asarray(st_s.params_flat),
+                                  np.asarray(st_ref.params_flat))
+    assert info["rounds_run"] == 24
+    assert info["host_high_water_bytes"] <= 2 * info["chunk_bytes"]
+
+
+def test_prefetcher_close_unblocks_producer():
+    """Consumer abandons the stream while the producer is blocked on a full
+    queue: close() must not hang and the thread must die."""
+    def batch_fn(t):
+        return {"x": np.zeros((64,), np.float32) + t}
+
+    pf = ChunkPrefetcher(batch_fn, steps=100, chunk_size=2, prefetch_depth=1)
+    pf.take(1)
+    time.sleep(0.1)  # let the producer refill + block on the next put
+    pf.close()
+    assert not pf._thread.is_alive()
+
+
+def test_prefetcher_propagates_producer_error():
+    def bad_fn(t):
+        if t >= 4:
+            raise RuntimeError("boom at t=4")
+        return {"x": np.zeros((8,), np.float32)}
+
+    pf = ChunkPrefetcher(bad_fn, steps=12, chunk_size=2, prefetch_depth=2)
+    with pytest.raises(RuntimeError, match="producer thread failed"):
+        # drain until the error surfaces
+        for _ in range(6):
+            pf.take(1, timeout=10.0)
+    pf.close()
+
+
+def test_prefetcher_chunk_order_and_exhaustion():
+    def batch_fn(t):
+        return {"t": np.asarray([t], np.int64)}
+
+    with ChunkPrefetcher(batch_fn, steps=10, chunk_size=3,
+                         prefetch_depth=2) as pf:
+        seen = []
+        while True:
+            got = pf.take(2)
+            if not got:
+                break
+            for c in got:
+                seen.extend(np.asarray(c["t"]).ravel().tolist())
+    assert seen == list(range(9))  # 3 full chunks; tail round 9 not streamed
+    assert pf.remainder == 1
+
+
+def test_split_chunks_and_batch_bytes():
+    batches = {"a": np.zeros((10, 3), np.float32),
+               "b": np.zeros((10, 2), np.int32)}
+    chunks = split_chunks(batches, 4)
+    assert len(chunks) == 2
+    assert chunks[1]["a"].shape == (4, 3)
+    assert batch_bytes({"a": np.zeros((5,), np.float32)}) == 20
+
+
+# --------------------------------------------------------------------------
+# stack_batches guard
+# --------------------------------------------------------------------------
+
+
+def test_stack_batches_raises_over_budget():
+    big = lambda t: {"x": np.zeros((1024, 1024), np.float32)}  # 4 MiB/round
+    with pytest.raises(ValueError, match="rollout_streaming"):
+        sim_lib.stack_batches(big, steps=100, max_bytes=16 * 1024 ** 2)
+    # under budget: fine
+    out = sim_lib.stack_batches(big, steps=2, max_bytes=16 * 1024 ** 2)
+    assert out["x"].shape == (2, 1024, 1024)
+
+
+def test_stack_batches_env_override(monkeypatch):
+    big = lambda t: {"x": np.zeros((1024,), np.float32)}
+    monkeypatch.setenv("REPRO_STACK_BYTES_LIMIT", "1024")
+    with pytest.raises(ValueError, match="REPRO_STACK_BYTES_LIMIT"):
+        sim_lib.stack_batches(big, steps=10)
+    monkeypatch.setenv("REPRO_STACK_BYTES_LIMIT", "0")  # 0 disables
+    out = sim_lib.stack_batches(big, steps=10)
+    assert out["x"].shape == (10, 1024)
+
+
+# --------------------------------------------------------------------------
+# transformer streaming (reduced stablelm_3b)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_transformer_table1_streaming_slow():
+    """Full transformer-table1 cut through the streaming sweep: every
+    registry cell (rosdhb + robust_dgd x alie/signflip) completes with
+    finite losses and a sane accuracy column."""
+    from repro.adversary.registry import expand_scenario, get_spec
+    from repro.core.sweep import _transformer_testbed, run_scenarios
+
+    spec = get_spec("transformer-table1")
+    loss_fn, params0, batch_fn, eval_fn, eval_batch = \
+        _transformer_testbed(spec.n_workers)
+    scen = expand_scenario("transformer-table1")
+    rows = run_scenarios(scen, loss_fn=loss_fn, params0=params0,
+                         batches=batch_fn, seeds=[0], steps=16,
+                         eval_fn=eval_fn, eval_batch=eval_batch,
+                         shard=False, streaming=True, stream_chunk_size=4,
+                         prefetch_depth=2)
+    assert len(rows) == len(spec.algos) * len(spec.attacks)
+    for r in rows:
+        assert np.isfinite(r["final_loss"]), r
+        assert 0.0 <= r["acc"] <= 1.0, r
