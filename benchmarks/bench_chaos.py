@@ -1,0 +1,211 @@
+"""Benchmark + gate the fault-injected serving stack (repro.serve.chaos).
+
+Three gated sections, JSON'd to results/BENCH_chaos.json after each one:
+
+  loopback_parity  fault-free chaos over the loopback transport vs the
+                   in-process server on the bench_serve parity cells: the
+                   framed byte path (encode -> CRC -> decode) must be
+                   bit-for-bit invisible (max_abs_diff == 0.0), and the
+                   jitted step must compile exactly once per server.
+  chaos_matrix     every registered chaos scenario at n=13, f=3 Byzantine
+                   (ALIE vs CWTM+NNM). Gates: every driven round
+                   terminates, no unresolved liveness-watchdog fires,
+                   step_traces == 1 per server instance (restarts
+                   included), kill-restart resumes bit-for-bit, and the
+                   combined-fault scenario (drop + duplicate + corrupt +
+                   delay + reset + straggler + mid-round kill-and-restart)
+                   lands its final honest loss within rtol 0.1 of the
+                   fault-free run.
+  tcp_parity       fault-free chaos over real TCP sockets — same bitwise
+                   parity gate; skipped (recorded, not failed) where the
+                   sandbox forbids sockets.
+
+Run: PYTHONPATH=src:. python -m benchmarks.bench_chaos
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.sweep import grid_scenarios, quadratic_testbed
+from repro.serve import (
+    CHAOS_REGISTRY, ByzantineRobustServer, ClientPool, ServeConfig,
+    get_chaos, run_chaos, run_service,
+)
+from repro.utils import tree as T
+
+D = 256
+PARITY_ROUNDS = 30
+CHAOS_ROUNDS = 30
+N_HONEST, F = 10, 3
+LOSS_RTOL = 0.1
+
+
+def _cfg(algo="rosdhb", attack="alie", agg="cwtm", **kw):
+    return grid_scenarios((algo,), (attack,), (agg,),
+                          n_honest=N_HONEST, f=F, **kw)[0].cfg
+
+
+def _honest_loss(flat, targets, spec, f):
+    w = np.asarray(flat)[:spec.size]
+    t = np.asarray(targets)[f:]
+    return float(0.5 * np.mean(np.sum((w[None, :] - t) ** 2, axis=1)))
+
+
+def _transport_parity(transport: str):
+    """Fault-free chaos over ``transport`` vs the in-process server: the
+    transport boundary must be bit-for-bit invisible."""
+    out = {}
+    chaos = dataclasses.replace(get_chaos("fault-free"),
+                                transport=transport)
+    for algo, attack, agg in (("rosdhb", "alie", "cwtm"),
+                              ("rosdhb", "foe", "median"),
+                              ("robust_dgd", "signflip", "cwtm")):
+        cfg = _cfg(algo, attack, agg)
+        loss_fn, params0, batch_fn, _ = quadratic_testbed(cfg.n_workers, d=D)
+        server = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+        pool = ClientPool(loss_fn, params0, cfg, batch_fn)
+        run_service(server, pool, PARITY_ROUNDS)
+        res = run_chaos(cfg, params0, batch_fn, loss_fn, chaos,
+                        PARITY_ROUNDS, seed=0)
+        diff = float(np.max(np.abs(res.final_params
+                                   - np.asarray(server.params_flat))))
+        key = f"{algo}/{attack}/{agg}"
+        out[key] = {"rounds": PARITY_ROUNDS, "max_abs_diff": diff,
+                    "exact": diff == 0.0, "step_traces": res.step_traces}
+        emit(f"chaos/parity/{transport}/{key}", 0.0,
+             f"max_abs_diff={diff} traces={res.step_traces}")
+        assert diff == 0.0, (
+            f"{transport} transport parity broken for {key}: {diff}")
+        assert res.step_traces == [1]
+    return out
+
+
+def _loopback_parity():
+    return _transport_parity("loopback")
+
+
+def _tcp_parity():
+    """Same gate over real sockets; a sandbox that forbids sockets gets a
+    recorded skip, not a failure."""
+    try:
+        import socket
+        probe = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        try:
+            probe.bind(("127.0.0.1", 0))
+        finally:
+            probe.close()
+    except OSError as e:
+        emit("chaos/parity/tcp", 0.0, f"SKIPPED: {e}")
+        return {"skipped": True, "reason": str(e)}
+    return _transport_parity("tcp")
+
+
+def _chaos_matrix():
+    """Every registered scenario against the f=3-of-13 ALIE cell, with the
+    combined-fault loss gate and the kill-restart bitwise gate."""
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, targets = quadratic_testbed(cfg.n_workers,
+                                                            d=D)
+    spec = T.make_flat_spec(params0)
+    out = {}
+    finals = {}
+    base_loss = None
+    for name in CHAOS_REGISTRY:
+        res = run_chaos(cfg, params0, batch_fn, loss_fn, get_chaos(name),
+                        CHAOS_ROUNDS, seed=0)
+        loss = _honest_loss(res.final_params, targets, spec, F)
+        finals[name] = res.final_params
+        last = res.summaries[-1]
+        rec = {
+            "rounds_driven": res.rounds_driven,
+            "rounds_applied": sum(s["rounds"] for s in res.summaries),
+            "all_rounds_terminated": res.all_rounds_terminated(),
+            "restarts": res.restarts,
+            "step_traces": res.step_traces,
+            "final_honest_loss": loss,
+            "injected_faults": res.injected,
+            "client_stats": res.client_stats,
+            "ingest_decisions": last["ingest_decisions"],
+            "quorum_histogram": last["quorum_histogram"],
+            "quorum_transitions": last["quorum_transitions"],
+            "watchdog": [s["watchdog"] for s in res.summaries],
+            "fault_budget_events": [e for s in res.summaries
+                                    for e in s["fault_budget_events"]],
+            "updates_per_sec": last["updates_per_sec"],
+            "latency_p50_ms": last["latency_p50_ms"],
+            "latency_p99_ms": last["latency_p99_ms"],
+        }
+        if name == "fault-free":
+            base_loss = loss
+        elif base_loss is not None:
+            rec["loss_vs_fault_free_rtol"] = (
+                abs(loss - base_loss) / max(abs(base_loss), 1e-12))
+        out[name] = rec
+        emit(f"chaos/scenario/{name}", 0.0,
+             f"loss={loss:.4f} restarts={res.restarts} "
+             f"injected={sum(res.injected.values())} "
+             f"traces={res.step_traces} "
+             f"terminated={res.all_rounds_terminated()}")
+        # liveness + single-compile gates hold for EVERY scenario
+        assert res.all_rounds_terminated(), (
+            f"chaos scenario {name!r}: rounds failed to terminate "
+            f"({len(res.results)}/{res.rounds_driven}, "
+            f"{res.unresolved_watchdogs} unresolved watchdog fires)")
+        assert all(t == 1 for t in res.step_traces), (
+            f"chaos scenario {name!r} retraced the step: "
+            f"{res.step_traces}")
+
+    # gate: the combined-fault scenario converges like the fault-free run
+    combined = out["combined"]
+    emit("chaos/gate/combined_loss", 0.0,
+         f"loss={combined['final_honest_loss']:.4f} "
+         f"fault_free={base_loss:.4f} "
+         f"rtol={combined['loss_vs_fault_free_rtol']:.4f}")
+    assert combined["loss_vs_fault_free_rtol"] <= LOSS_RTOL, (
+        f"combined-fault loss {combined['final_honest_loss']} drifted "
+        f"beyond rtol {LOSS_RTOL} of fault-free {base_loss}")
+    assert combined["restarts"] == 1
+
+    # gate: a mid-round crash + restore on a CLEAN transport is bitwise
+    # invisible — same final parameters as never having crashed
+    kr_diff = float(np.max(np.abs(finals["kill-restart"]
+                                  - finals["fault-free"])))
+    out["kill-restart"]["bitwise_vs_fault_free"] = kr_diff
+    emit("chaos/gate/kill_restart_bitwise", 0.0, f"max_abs_diff={kr_diff}")
+    assert kr_diff == 0.0, (
+        f"mid-round kill-and-restart diverged from the uncrashed "
+        f"trajectory: max_abs_diff={kr_diff}")
+    return out
+
+
+def run(out: str = "results/BENCH_chaos.json",
+        out_root: str = "BENCH_chaos.json"):
+    jnp.zeros(1).block_until_ready()  # backend init outside all timings
+
+    results = {}
+
+    def record(name, fn):
+        try:
+            results[name] = fn()
+        finally:
+            for path in (out, out_root):
+                if path:
+                    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+                    with open(path, "w") as fh:
+                        json.dump(results, fh, indent=2)
+
+    record("loopback_parity", _loopback_parity)
+    record("chaos_matrix", _chaos_matrix)
+    record("tcp_parity", _tcp_parity)
+    return results
+
+
+if __name__ == "__main__":
+    run()

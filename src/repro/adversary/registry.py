@@ -177,6 +177,12 @@ for _spec in (
         " dirichlet variants)",
         attacks=("mimic", "alie"), testbed="mnist"),
     ScenarioSpec(
+        "chaos-serve",
+        "the chaos-harness serving cell: RoSDHB vs ALIE under CWTM+NNM,"
+        " f=3 of 13 — pair with a repro.serve.chaos scenario"
+        " (python -m repro.serve --chaos combined)",
+        attacks=("alie",)),
+    ScenarioSpec(
         "transformer-table1",
         "Table-1 cut on a reduced stablelm_3b LM: rosdhb + robust_dgd x"
         " {alie, signflip} x CWTM+NNM, streamed from the prefetched ring"

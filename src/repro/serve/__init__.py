@@ -11,27 +11,59 @@ across participation levels.
 Module map:
   protocol  — wire format (RoundAnnouncement down, ClientUpdate up; byte
               accounting shared with the simulator via repro.core.wire)
+              + the length-prefixed checksummed frame layer
   buffer    — the round buffer (quorum, timeout, staleness policies)
-  server    — ingest thread + queue + batcher loop around the jitted step
+  server    — ingest thread + queue + batcher loop around the jitted step,
+              plus the fault domain (typed ServeTimeout, protocol-fault
+              budget, graceful quorum degradation, liveness watchdog,
+              mid-round crash recovery)
   client    — simulated client pool (honest + byzantine via repro.adversary,
-              straggler/drop/late-arrival injection)
-  metrics   — updates/sec, rounds/sec, p50/p99 round latency, histograms
+              straggler/drop/late-arrival injection) + RetryingClient
+              (backoff + jitter, idempotent resubmission) over transports
+  transport — pluggable frame movers: in-process loopback + real TCP
+  faults    — seeded deterministic fault injection (FaultPlan: delay/drop/
+              duplicate/reorder/corrupt/partition/reset per attempt)
+  chaos     — named chaos scenarios composing fault plans with the stack
+              (run_chaos driver; bench_chaos gates)
+  metrics   — updates/sec, rounds/sec, p50/p99 round latency, histograms,
+              quorum transitions, watchdog + fault-budget events
 
 With full participation and zero timeout the server's parameter trajectory
-matches ``Simulator.rollout`` bit-for-bit (tests/test_serve.py,
-benchmarks/bench_serve.py gate).
+matches ``Simulator.rollout`` bit-for-bit — including over the loopback
+transport's framed path (tests/test_serve.py, benchmarks/bench_serve.py,
+benchmarks/bench_chaos.py gates).
 """
 
 from repro.serve.buffer import RoundBuffer
-from repro.serve.client import ClientBehavior, ClientPool
+from repro.serve.chaos import (
+    CHAOS_REGISTRY, ChaosResult, ChaosScenario, get_chaos, register_chaos,
+    run_chaos,
+)
+from repro.serve.client import (
+    ClientBehavior, ClientGaveUp, ClientPool, RetryingClient, RetryPolicy,
+)
+from repro.serve.faults import (
+    FaultDecision, FaultPlan, FaultSpec, FaultyEndpoint, faulty_endpoints,
+)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.protocol import ClientUpdate, RoundAnnouncement, mask_id
 from repro.serve.server import (
-    ByzantineRobustServer, RoundResult, ServeConfig, run_service,
+    ByzantineRobustServer, FaultBudgetExceeded, RoundResult, ServeConfig,
+    ServeTimeout, run_service,
+)
+from repro.serve.transport import (
+    LoopbackTransport, TcpTransport, TransportError, TransportReset,
+    TransportTimeout, make_transport,
 )
 
 __all__ = [
-    "ByzantineRobustServer", "ClientBehavior", "ClientPool", "ClientUpdate",
-    "RoundAnnouncement", "RoundBuffer", "RoundResult", "ServeConfig",
-    "ServeMetrics", "mask_id", "run_service",
+    "ByzantineRobustServer", "CHAOS_REGISTRY", "ChaosResult",
+    "ChaosScenario", "ClientBehavior", "ClientGaveUp", "ClientPool",
+    "ClientUpdate", "FaultBudgetExceeded", "FaultDecision", "FaultPlan",
+    "FaultSpec", "FaultyEndpoint", "LoopbackTransport", "RetryingClient",
+    "RetryPolicy", "RoundAnnouncement", "RoundBuffer", "RoundResult",
+    "ServeConfig", "ServeMetrics", "ServeTimeout", "TcpTransport",
+    "TransportError", "TransportReset", "TransportTimeout",
+    "faulty_endpoints", "get_chaos", "make_transport", "mask_id",
+    "register_chaos", "run_chaos", "run_service",
 ]

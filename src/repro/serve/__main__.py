@@ -5,6 +5,13 @@ simulated client pool, wired through the adversarial scenario registry.
     PYTHONPATH=src python -m repro.serve --scenario stateless-linear \
         --cell rosdhb/foe/median --drop-prob 0.2 --timeout-ms 50 \
         --staleness-window 2 --stale-policy discount
+    PYTHONPATH=src python -m repro.serve --scenario chaos-serve \
+        --chaos combined --transport loopback --rounds 30
+
+``--chaos NAME`` routes the run through the fault-injected transport
+harness (``repro.serve.chaos``): every frame crosses the selected
+``--transport`` through a seeded fault plan and retry/backoff clients;
+``--list-chaos`` enumerates the scenarios.
 
 Scenario cells with a non-serveable algorithm (dasha: its per-client
 control variates go stale under partial participation) are rejected loudly;
@@ -14,6 +21,7 @@ pick a serveable cell with ``--cell`` or ``--list-cells``.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 from typing import Optional, Sequence
@@ -21,8 +29,10 @@ from typing import Optional, Sequence
 from repro.adversary import registry
 from repro.core import algorithms as alg
 from repro.core.sweep import quadratic_testbed
+from repro.serve import chaos as chaos_mod
 from repro.serve.client import ClientBehavior, ClientPool
 from repro.serve.server import ByzantineRobustServer, ServeConfig, run_service
+from repro.serve.transport import TRANSPORTS
 
 
 def _pick_cell(name: str, cell: Optional[str]):
@@ -73,11 +83,21 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     p.add_argument("--straggle-rounds", type=int, default=1)
     p.add_argument("--checkpoint-every", type=int, default=0)
     p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--chaos", default=None,
+                   help="run through the fault-injected transport harness "
+                        "with this chaos scenario (--list-chaos)")
+    p.add_argument("--transport", default=None, choices=TRANSPORTS,
+                   help="transport for --chaos runs (default: the "
+                        "scenario's own, usually loopback)")
+    p.add_argument("--list-chaos", action="store_true")
     p.add_argument("--out", default=None, help="optional JSON output path")
     args = p.parse_args(argv)
 
     if args.list_scenarios:
         print(registry.describe())
+        return {}
+    if args.list_chaos:
+        print(chaos_mod.describe_chaos())
         return {}
     if args.list_cells:
         for s in registry.expand_scenario(args.scenario):
@@ -90,6 +110,34 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     cfg = scenario.cfg
     loss_fn, params0, batch_fn, _ = quadratic_testbed(cfg.n_workers,
                                                       d=args.d)
+
+    if args.chaos is not None:
+        sc = chaos_mod.get_chaos(args.chaos)
+        if args.transport is not None:
+            sc = dataclasses.replace(sc, transport=args.transport)
+        print(f"[serve] chaos {sc.name!r} over {sc.transport} transport: "
+              f"{scenario.label} n={cfg.n_workers} f={cfg.f}")
+        res = chaos_mod.run_chaos(
+            cfg, params0, batch_fn, loss_fn, sc, args.rounds,
+            seed=args.seed, checkpoint_dir=args.checkpoint_dir)
+        summary = {
+            "scenario": scenario.label, "chaos": sc.name,
+            "transport": sc.transport,
+            "rounds_driven": res.rounds_driven,
+            "restarts": res.restarts,
+            "all_rounds_terminated": res.all_rounds_terminated(),
+            "step_traces": res.step_traces,
+            "injected_faults": res.injected,
+            "client_stats": res.client_stats,
+            "servers": res.summaries,
+        }
+        print(json.dumps(summary, indent=2))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(summary, f, indent=2)
+            print(f"[serve] wrote {args.out}", file=sys.stderr)
+        return summary
+
     serve = ServeConfig(
         quorum=args.quorum, timeout_s=args.timeout_ms / 1e3,
         staleness_window=args.staleness_window,

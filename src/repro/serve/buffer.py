@@ -63,6 +63,10 @@ class RoundBuffer:
         self.n_clients = n_clients
         self.f = f
         self.quorum = quorum
+        #: the configured quorum; ``quorum`` itself is the EFFECTIVE one —
+        #: graceful degradation may step it down toward the 2f+1 floor
+        #: (never below) and back up, via :meth:`set_quorum`.
+        self.base_quorum = quorum
         self.timeout_s = timeout_s
         self.staleness_window = staleness_window
         self.stale_policy = stale_policy
@@ -101,6 +105,24 @@ class RoundBuffer:
         horizon = self.round_id - self.staleness_window - 1
         self._mask_ids = {r: m for r, m in self._mask_ids.items()
                           if r > horizon}
+
+    def set_quorum(self, quorum: int) -> None:
+        """Step the EFFECTIVE quorum (graceful degradation / recovery).
+        The validated floor is ``2f + 1`` — stepping below it would void
+        the robustness guarantee, so it raises exactly like construction."""
+        if not 1 <= quorum <= self.n_clients:
+            raise ValueError(
+                f"quorum={quorum} outside [1, n_clients={self.n_clients}]")
+        if quorum < 2 * self.f + 1:
+            raise ValueError(
+                f"quorum={quorum} < 2f+1 = {2 * self.f + 1}: the "
+                "degradation floor is the robustness floor")
+        self.quorum = quorum
+
+    def rows(self) -> Dict[int, BufferedUpdate]:
+        """The current (not-yet-drained) row bank — read-only view for
+        mid-round checkpointing."""
+        return dict(self._rows)
 
     # -- ingest ------------------------------------------------------------
 

@@ -14,6 +14,13 @@ full-participation service trajectories are bit-for-bit
 :class:`ClientBehavior` injects the failure modes the closed-world scan
 cannot express: per-round drop probability, probabilistic late arrival,
 and fixed stragglers that are always ``straggle_rounds`` late.
+
+:class:`RetryingClient` is the *transport-hardened* half: it speaks the
+frame protocol over any endpoint (loopback, TCP, fault-injected) with
+exponential backoff + seeded jitter, idempotent resubmission (the server's
+freshest-wins dedup makes retransmission safe), and re-announcement on
+timeout — the client-side discipline that turns injected transport chaos
+into mere latency.
 """
 
 from __future__ import annotations
@@ -28,6 +35,7 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.serve import protocol
+from repro.serve.transport import TransportError
 from repro.utils import tree as T
 
 
@@ -59,6 +67,151 @@ class ScheduledUpdate(NamedTuple):
     update: protocol.ClientUpdate
     deliver_round: int
     drop: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with deterministic (seeded) jitter.
+
+    Attempt ``k`` (0-based) sleeps ``min(base * 2**k, cap) * (1 + jitter
+    * u)`` with ``u ~ U[0, 1)`` drawn from a per-client stream — seeded so
+    a chaos replay backs off identically.
+    """
+
+    max_attempts: int = 5
+    backoff_base_s: float = 0.01
+    backoff_cap_s: float = 0.5
+    jitter: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts={self.max_attempts} < 1")
+        if self.backoff_base_s < 0 or self.backoff_cap_s < 0:
+            raise ValueError("backoff times must be >= 0")
+        if not 0.0 <= self.jitter:
+            raise ValueError(f"jitter={self.jitter} < 0")
+
+    def backoff_s(self, client_id: int, attempt: int,
+                  rng: np.random.Generator) -> float:
+        base = min(self.backoff_base_s * (2.0 ** attempt),
+                   self.backoff_cap_s)
+        return base * (1.0 + self.jitter * float(rng.random()))
+
+
+class ClientGaveUp(RuntimeError):
+    """Every retry attempt failed (transport faults or NACKs)."""
+
+    def __init__(self, message: str, *, client_id: int, op: str,
+                 attempts: int, last_error: Optional[str] = None):
+        super().__init__(message)
+        self.client_id = client_id
+        self.op = op
+        self.attempts = attempts
+        self.last_error = last_error
+
+
+class RetryingClient:
+    """One client's fault-tolerant protocol driver over a transport
+    endpoint.
+
+    * ``fetch_announcement`` retries through transport faults and
+      ``no_round`` NACKs until an announcement for ``round >= min_round``
+      arrives — the *re-announcement on timeout* half of recovery (a
+      client that missed a round just asks again and is told the current
+      one).
+    * ``submit`` retries the SAME update frame until the server acks it.
+      Resubmission is idempotent: duplicate deliveries land in the
+      ``RoundBuffer``'s freshest-wins dedup, and a ``bad_checksum`` NACK
+      (payload corrupted in flight) is repaired by retransmission — the
+      retry re-encodes from the intact local update.
+
+    Sleep is injectable so tests run backoff schedules at time-warp.
+    """
+
+    def __init__(self, endpoint, client_id: int,
+                 policy: Optional[RetryPolicy] = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.endpoint = endpoint
+        self.client_id = client_id
+        self.policy = policy or RetryPolicy()
+        self._sleep = sleep
+        self._rng = np.random.default_rng(
+            (self.policy.seed, int(client_id)))
+        #: observability counters: attempts, retries, and give-ups per op
+        self.stats = {"announce_attempts": 0, "update_attempts": 0,
+                      "retries": 0, "gave_up": 0}
+
+    def _retry(self, op: str, round_id: int, build: Callable[[], bytes],
+               accept: Callable[[int, int, bytes], Optional[Any]]) -> Any:
+        """Run build -> request -> accept with backoff until ``accept``
+        returns non-None or the policy's attempts are exhausted."""
+        p = self.policy
+        last: Optional[str] = None
+        for attempt in range(p.max_attempts):
+            self.stats[f"{op}_attempts"] += 1
+            if attempt > 0:
+                self.stats["retries"] += 1
+                self._sleep(p.backoff_s(self.client_id, attempt - 1,
+                                        self._rng))
+            try:
+                raw = self.endpoint.request(
+                    build(), round_id=round_id, op=op, attempt=attempt)
+                msg_type, sender, payload = protocol.decode_frame(raw)
+            except TransportError as e:
+                last = f"{type(e).__name__}: {e}"
+                continue
+            except protocol.FrameError as e:
+                last = f"corrupt response: {e}"
+                continue
+            out = accept(msg_type, sender, payload)
+            if out is not None:
+                return out
+            last = f"nacked (msg_type={msg_type})"
+        self.stats["gave_up"] += 1
+        raise ClientGaveUp(
+            f"client {self.client_id} gave up on {op} for round "
+            f"{round_id} after {p.max_attempts} attempts "
+            f"(last: {last})", client_id=self.client_id, op=op,
+            attempts=p.max_attempts, last_error=last)
+
+    def fetch_announcement(self, min_round: int = 0
+                           ) -> protocol.RoundAnnouncement:
+        def accept(msg_type, sender, payload):
+            if msg_type != protocol.MSG_ANNOUNCE:
+                return None                  # ACK("no_round") etc: retry
+            ann = protocol.decode_announcement(payload)
+            return ann if ann.round_id >= min_round else None
+
+        return self._retry(
+            "announce", min_round,
+            lambda: protocol.encode_announce_req(min_round, self.client_id),
+            accept)
+
+    def submit(self, update: protocol.ClientUpdate) -> str:
+        """Deliver one update; returns the server's ack status (e.g.
+        ``"queued"``). Raises :class:`ClientGaveUp` when every attempt
+        fails."""
+        def accept(msg_type, sender, payload):
+            if msg_type != protocol.MSG_ACK:
+                return None
+            _, status = protocol.decode_ack(payload)
+            if status == "queued":
+                return status
+            if status.startswith("rejected"):
+                # a validation rejection is not a transport fault: the
+                # update itself is malformed — retrying cannot help
+                raise ValueError(
+                    f"client {self.client_id} update for round "
+                    f"{update.round_id} rejected: {status}")
+            return None                      # bad_checksum/bad_frame: retry
+
+        return self._retry(
+            "update", update.round_id,
+            lambda: protocol.encode_update(update), accept)
+
+    def close(self) -> None:
+        self.endpoint.close()
 
 
 class ClientPool:

@@ -1,16 +1,28 @@
-"""Service metrics: sustained throughput, round latency, participation.
+"""Service metrics: sustained throughput, round latency, participation,
+ingest-classification histograms, quorum transitions, fault events.
 
 The server records one :class:`RoundRecord` per fired round plus a running
-count of ingest decisions; :meth:`ServeMetrics.summary` folds them into the
-numbers ``results/BENCH_serve.json`` reports — sustained updates/sec and
-rounds/sec over the measured span, p50/p99 round latency (round open ->
-parameters applied), and per-round participation + staleness histograms.
+count of ingest decisions (now keyed per round, so the
+``RoundBuffer.add`` classification — duplicate / future / stale_dropped /
+bad_mask / bad_checksum — is observable as per-round histograms, not just
+totals); :meth:`ServeMetrics.summary` folds them into the numbers
+``results/BENCH_serve.json`` and ``results/BENCH_chaos.json`` report —
+sustained updates/sec and rounds/sec over the measured span, p50/p99 round
+latency (round open -> parameters applied), per-round participation +
+staleness + classification histograms, the quorum degradation/recovery
+transition log, and liveness-watchdog + fault-budget events.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: The RoundBuffer.add classifications surfaced as per-round histograms
+#: (a satellite of the chaos PR: previously classified but unobservable).
+DECISION_CLASSES = ("accepted", "replaced", "duplicate", "future",
+                    "stale_dropped", "bad_mask", "bad_client",
+                    "bad_checksum")
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -34,6 +46,29 @@ class RoundRecord:
     latency_s: float               # round open -> params applied
     step_s: float                  # jitted aggregate-and-apply wall time
     payload_bytes: int             # accounted uplink bytes this round
+    quorum: int = 0                # effective quorum when the round fired
+
+
+@dataclasses.dataclass(frozen=True)
+class QuorumTransition:
+    """One graceful-degradation (or recovery) step of the effective
+    quorum, always bounded inside [2f+1 floor, configured quorum]."""
+
+    round_id: int
+    old: int
+    new: int
+    reason: str                    # "degrade" | "recover"
+
+
+@dataclasses.dataclass
+class WatchdogEvent:
+    """The liveness watchdog observed a stalled round."""
+
+    round_id: int
+    open_s: float                  # how long the round had been open
+    buffered: int                  # accepted updates at fire time
+    quorum: int                    # effective quorum it was waiting for
+    resolved: bool = False         # the round did eventually fire
 
 
 class ServeMetrics:
@@ -42,14 +77,44 @@ class ServeMetrics:
     def __init__(self):
         self.rounds: List[RoundRecord] = []
         self.decisions: Dict[str, int] = {}
+        self.round_decisions: Dict[int, Dict[str, int]] = {}
+        self.quorum_transitions: List[QuorumTransition] = []
+        self.watchdog_events: List[WatchdogEvent] = []
+        self.fault_budget_events: List[Dict[str, object]] = []
         self.started_at: float = 0.0
         self.finished_at: float = 0.0
 
-    def observe_decision(self, status: str) -> None:
+    def observe_decision(self, status: str,
+                         round_id: Optional[int] = None) -> None:
         self.decisions[status] = self.decisions.get(status, 0) + 1
+        if round_id is not None:
+            per = self.round_decisions.setdefault(round_id, {})
+            per[status] = per.get(status, 0) + 1
 
     def observe_round(self, rec: RoundRecord) -> None:
         self.rounds.append(rec)
+
+    def observe_quorum_transition(self, round_id: int, old: int, new: int,
+                                  reason: str) -> None:
+        self.quorum_transitions.append(
+            QuorumTransition(round_id, old, new, reason))
+
+    def observe_watchdog(self, round_id: int, open_s: float, buffered: int,
+                         quorum: int) -> WatchdogEvent:
+        ev = WatchdogEvent(round_id, open_s, buffered, quorum)
+        self.watchdog_events.append(ev)
+        return ev
+
+    def resolve_watchdog(self, round_id: int) -> None:
+        for ev in self.watchdog_events:
+            if ev.round_id == round_id:
+                ev.resolved = True
+
+    def observe_fault_budget(self, round_id: int, faulty: Sequence[int],
+                             declared_byzantine: int, f: int) -> None:
+        self.fault_budget_events.append({
+            "round_id": round_id, "protocol_faulty": sorted(faulty),
+            "declared_byzantine": declared_byzantine, "f": f})
 
     def span(self, start: float, end: float) -> None:
         self.started_at, self.finished_at = start, end
@@ -70,6 +135,31 @@ class ServeMetrics:
             for s in r.staleness:
                 h[s] = h.get(s, 0) + 1
         return dict(sorted(h.items()))
+
+    def decision_round_histogram(self, status: str) -> Dict[int, int]:
+        """Rounds keyed by how many ``status`` classifications they saw
+        (zero bucket included, over every round with any decision), e.g.
+        ``{0: 37, 1: 2, 4: 1}`` = 2 rounds saw one duplicate, 1 saw four."""
+        h: Dict[int, int] = {}
+        for per in self.round_decisions.values():
+            k = per.get(status, 0)
+            h[k] = h.get(k, 0) + 1
+        return dict(sorted(h.items()))
+
+    def quorum_histogram(self) -> Dict[int, int]:
+        """rounds keyed by the effective quorum they fired under — the
+        degradation trace in histogram form."""
+        h: Dict[int, int] = {}
+        for r in self.rounds:
+            h[r.quorum] = h.get(r.quorum, 0) + 1
+        return dict(sorted(h.items()))
+
+    def watchdog_summary(self) -> Dict[str, int]:
+        fired = len(self.watchdog_events)
+        unresolved = sum(1 for ev in self.watchdog_events
+                         if not ev.resolved)
+        return {"fired": fired, "resolved": fired - unresolved,
+                "unresolved": unresolved}
 
     def summary(self) -> Dict[str, object]:
         wall = max(self.finished_at - self.started_at, 1e-12)
@@ -94,5 +184,16 @@ class ServeMetrics:
             "staleness_histogram": {
                 str(k): v for k, v in self.staleness_histogram().items()},
             "ingest_decisions": dict(sorted(self.decisions.items())),
+            "decision_round_histograms": {
+                status: {str(k): v for k, v
+                         in self.decision_round_histogram(status).items()}
+                for status in DECISION_CLASSES
+                if status in self.decisions},
+            "quorum_histogram": {
+                str(k): v for k, v in self.quorum_histogram().items()},
+            "quorum_transitions": [
+                dataclasses.asdict(t) for t in self.quorum_transitions],
+            "watchdog": self.watchdog_summary(),
+            "fault_budget_events": list(self.fault_budget_events),
             "uplink_bytes": sum(r.payload_bytes for r in self.rounds),
         }

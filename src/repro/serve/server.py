@@ -28,6 +28,36 @@ bit-for-bit ``Simulator.rollout``'s (tests/test_serve.py).
 ``repro.checkpoint`` is wired in: with ``checkpoint_every > 0`` the server
 periodically persists ``{params, ServerState, key}`` and a fresh server can
 ``restore()`` and continue with identical results under full participation.
+Checkpoints also carry the OPEN round's announcement keys plus the
+in-flight ``RoundBuffer`` rows, so a server killed *mid-round* restores
+into the interrupted round — same announcement (clients' already-sent
+updates still pass mask validation), already-ingested rows re-fed — and
+resumes instead of replaying from the last boundary.
+
+Fault domain (the chaos-hardening layer):
+
+* **typed timeouts** — ``announce``/``wait_round`` raise
+  :class:`ServeTimeout` carrying the round id, effective/base quorum, and
+  buffer classification counts, so a chaos test can assert on *why* a
+  round stalled;
+* **protocol-fault budget** — corrupt/bad-checksum frames reported by the
+  transport binding (``note_protocol_fault``) are tracked per client;
+  a client whose corruption persists past ``fault_tolerance`` frames with
+  no valid update in between is classified *protocol-faulty* and counted
+  against the Byzantine budget ``f``. Once protocol-faulty + declared-
+  Byzantine clients would exceed ``f``, the server rejects loudly
+  (:class:`FaultBudgetExceeded` from ``wait_round``) — the robustness
+  guarantee is void and silence would be a lie;
+* **graceful quorum degradation** — after ``degrade_after`` consecutive
+  wall-clock-fired rounds the effective quorum steps down one client
+  (floor: the validated ``2f + 1``), and after ``recover_after``
+  consecutive quorum-fired rounds it steps back up; every transition is
+  logged and surfaced in ``ServeMetrics.quorum_transitions``;
+* **liveness watchdog** — a round open longer than ``watchdog_s`` with no
+  way to fire records a watchdog event and makes ``announce``/
+  ``wait_round`` fail fast with a ``reason="watchdog"`` ServeTimeout
+  instead of hanging; the event is marked resolved if the round does
+  eventually fire.
 """
 
 from __future__ import annotations
@@ -51,6 +81,42 @@ from repro.serve.metrics import RoundRecord, ServeMetrics
 from repro.utils import tree as T
 
 
+class ServeTimeout(TimeoutError):
+    """A typed round timeout: WHY the wait failed, not just that it did.
+
+    Attributes:
+      round_id: the round being waited on.
+      quorum: the effective quorum at raise time (degradation included).
+      base_quorum: the configured quorum.
+      buffer_count: accepted updates currently buffered.
+      decisions: total ingest-classification counters at raise time.
+      reason: ``"deadline"`` (the caller's wait expired) or
+        ``"watchdog"`` (the liveness watchdog declared the round stalled).
+    """
+
+    def __init__(self, message: str, *, round_id: int, quorum: int,
+                 base_quorum: int, buffer_count: int,
+                 decisions: Dict[str, int], reason: str = "deadline"):
+        super().__init__(message)
+        self.round_id = round_id
+        self.quorum = quorum
+        self.base_quorum = base_quorum
+        self.buffer_count = buffer_count
+        self.decisions = dict(decisions)
+        self.reason = reason
+
+
+class FaultBudgetExceeded(RuntimeError):
+    """Protocol-faulty + declared-Byzantine clients exceed ``f`` — the
+    (f, kappa)-robust aggregation guarantee no longer holds, so the
+    server fails loudly instead of silently serving unguaranteed rounds."""
+
+    def __init__(self, message: str, *, faulty: Tuple[int, ...], f: int):
+        super().__init__(message)
+        self.faulty = faulty
+        self.f = f
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Service-level knobs (the algorithm itself lives in
@@ -68,6 +134,19 @@ class ServeConfig:
       checkpoint_every: persist server state every k fired rounds
         (0 = never).
       checkpoint_dir: where checkpoints go (required if checkpointing).
+      degrade_after: after this many CONSECUTIVE wall-clock-fired rounds,
+        step the effective quorum down one client toward the ``2f + 1``
+        floor (0 = degradation off).
+      recover_after: after this many consecutive quorum-fired rounds at a
+        degraded level, step the effective quorum back up one client
+        toward the configured quorum.
+      watchdog_s: liveness watchdog — a round open this long without
+        firing records a stall event and turns ``announce``/``wait_round``
+        into fast loud :class:`ServeTimeout`(reason="watchdog") failures
+        instead of hangs (0 = watchdog off).
+      fault_tolerance: consecutive corrupt frames (with no valid update in
+        between) after which a client is classified protocol-faulty and
+        counted against the Byzantine budget ``f``.
     """
 
     quorum: Optional[int] = None
@@ -76,6 +155,10 @@ class ServeConfig:
     stale_policy: str = "discount"
     checkpoint_every: int = 0
     checkpoint_dir: Optional[str] = None
+    degrade_after: int = 0
+    recover_after: int = 2
+    watchdog_s: float = 0.0
+    fault_tolerance: int = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +229,19 @@ class ByzantineRobustServer:
         self._ann: Optional[protocol.RoundAnnouncement] = None
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
+        # -- fault domain state -------------------------------------------
+        # graceful quorum degradation counters
+        self._consec_timeout = 0
+        self._consec_quorum = 0
+        # protocol-fault classification (transport-reported corruption)
+        self._fault_counts: Dict[int, int] = {}
+        self._protocol_faulty: set = set()
+        self._fault_budget: Optional[FaultBudgetExceeded] = None
+        # liveness watchdog: the round id whose stall is CURRENTLY declared
+        # (cleared when updates start flowing again), and the last round an
+        # event was recorded for (at most one event per round)
+        self._watchdog_round: Optional[int] = None
+        self._watchdog_fired_round = -1
         self._open_round(time.perf_counter())
 
     # -- round lifecycle (callers hold self._cond unless noted) ------------
@@ -167,6 +263,10 @@ class ByzantineRobustServer:
                               mask_id=self._ann.mask_id)
         else:
             self._buffer.register_mask(self._round_id, self._ann.mask_id)
+        # the liveness clock starts when the round is announced, not when
+        # the buffer opened (the batcher opens the buffer BEFORE the apply,
+        # which can include a multi-second first compile)
+        self._ann_open_t = now
 
     # -- public API --------------------------------------------------------
 
@@ -200,31 +300,80 @@ class ByzantineRobustServer:
                 f"update values shape {values.shape} != "
                 f"[padded_D={self.spec.padded_size}]")
         self._queue.put(update)
+        if self._watchdog_round is not None:
+            # an enqueued update is imminent progress: lift the stall
+            # declaration so waiters wait for the (now likely) fire
+            # instead of failing fast on a recovering round
+            with self._cond:
+                self._watchdog_round = None
+                self._cond.notify_all()
 
-    def announce(self, timeout: float = 60.0) -> protocol.RoundAnnouncement:
+    def _serve_timeout(self, message: str, round_id: int,
+                       reason: str) -> ServeTimeout:
+        """Build a typed timeout from the current buffer/quorum state
+        (caller holds ``self._cond``)."""
+        return ServeTimeout(
+            message, round_id=round_id, quorum=self._buffer.quorum,
+            base_quorum=self._buffer.base_quorum,
+            buffer_count=self._buffer.count,
+            decisions=self.metrics.decisions, reason=reason)
+
+    def announce(self, timeout: float = 60.0,
+                 min_round: int = 0) -> protocol.RoundAnnouncement:
         """The current round's broadcast (blocks through an in-flight
-        apply until the next round is open)."""
+        apply until a round ``>= min_round`` is open)."""
         deadline = time.perf_counter() + timeout
         with self._cond:
             while (self._ann is None
-                   or self._ann.round_id != self._round_id):
+                   or self._ann.round_id != self._round_id
+                   or self._round_id < min_round):
+                if self._watchdog_round == self._round_id:
+                    raise self._serve_timeout(
+                        f"round {self._round_id} stalled (liveness "
+                        f"watchdog): {self._buffer.count}/"
+                        f"{self._buffer.quorum} updates after "
+                        f"{self.serve.watchdog_s}s",
+                        self._round_id, reason="watchdog")
                 rem = deadline - time.perf_counter()
                 if rem <= 0 or not self._cond.wait(timeout=rem):
-                    raise TimeoutError("no open round announcement")
+                    raise self._serve_timeout(
+                        f"no open round announcement >= {min_round} "
+                        f"within {timeout}s (open round {self._round_id}, "
+                        f"{self._buffer.count}/{self._buffer.quorum} "
+                        "buffered)", self._round_id, reason="deadline")
             return self._ann
 
     def wait_round(self, round_id: int, timeout: float = 60.0) -> RoundResult:
-        """Block until ``round_id`` has fired and been applied."""
+        """Block until ``round_id`` has fired and been applied.
+
+        Raises :class:`ServeTimeout` (typed: round id, quorum state,
+        buffer counts, reason) when the wait expires or the liveness
+        watchdog has declared the round stalled, and
+        :class:`FaultBudgetExceeded` once protocol-faulty + declared-
+        Byzantine clients exceed the budget ``f``."""
         deadline = time.perf_counter() + timeout
         with self._cond:
             while round_id not in self._results:
+                if self._fault_budget is not None:
+                    raise self._fault_budget
+                if self._watchdog_round is not None and \
+                        round_id >= self._watchdog_round:
+                    raise self._serve_timeout(
+                        f"round {self._watchdog_round} stalled (liveness "
+                        f"watchdog): {self._buffer.count}/"
+                        f"{self._buffer.quorum} updates buffered after "
+                        f"{self.serve.watchdog_s}s open",
+                        self._watchdog_round, reason="watchdog")
                 rem = deadline - time.perf_counter()
                 if rem <= 0 or not self._cond.wait(timeout=rem):
-                    raise TimeoutError(
+                    raise self._serve_timeout(
                         f"round {round_id} did not fire within {timeout}s "
                         f"(buffer has {self._buffer.count}/"
                         f"{self._buffer.quorum} updates; with timeout_s=0 a "
-                        "round below quorum never fires)")
+                        "round below quorum never fires)",
+                        round_id, reason="deadline")
+            if self._fault_budget is not None:
+                raise self._fault_budget
             return self._results[round_id]
 
     @property
@@ -232,30 +381,141 @@ class ByzantineRobustServer:
         with self._cond:
             return self._round_id
 
+    @property
+    def effective_quorum(self) -> int:
+        """The current (possibly degraded) firing quorum."""
+        with self._cond:
+            return self._buffer.quorum
+
+    # -- protocol-fault budget (called by the transport binding) -----------
+
+    def note_protocol_fault(self, client_id: int) -> None:
+        """A corrupt/bad-checksum frame arrived attributable to
+        ``client_id``. Counted, never crashing: past ``fault_tolerance``
+        consecutive corrupt frames the client is classified
+        protocol-faulty and charged against the Byzantine budget ``f``."""
+        if not 0 <= client_id < self.n:
+            return
+        with self._cond:
+            self.metrics.observe_decision("bad_checksum",
+                                          round_id=self._buffer.round_id)
+            c = self._fault_counts.get(client_id, 0) + 1
+            self._fault_counts[client_id] = c
+            if (c >= self.serve.fault_tolerance
+                    and client_id not in self._protocol_faulty):
+                self._protocol_faulty.add(client_id)
+                self._check_fault_budget()
+            self._cond.notify_all()
+
+    def note_protocol_ok(self, client_id: int) -> None:
+        """A well-formed frame from ``client_id`` — its transport path
+        delivers valid payloads again, so clear its protocol-fault state
+        (transient corruption repaired by retransmission is not
+        Byzantine behaviour)."""
+        with self._cond:
+            self._fault_counts.pop(client_id, None)
+            self._protocol_faulty.discard(client_id)
+
+    @property
+    def protocol_faulty(self) -> Tuple[int, ...]:
+        with self._cond:
+            return tuple(sorted(self._protocol_faulty))
+
+    def _check_fault_budget(self) -> None:
+        """Caller holds ``self._cond``. Declared-Byzantine rows are
+        ``[0, f)`` (the pool convention); the budget breaks when the union
+        with protocol-faulty clients exceeds ``f``."""
+        declared = set(range(self.cfg.f))
+        implicated = declared | self._protocol_faulty
+        if len(implicated) > self.cfg.f and self._fault_budget is None:
+            faulty = tuple(sorted(self._protocol_faulty))
+            self.metrics.observe_fault_budget(
+                self._buffer.round_id, faulty, self.cfg.f, self.cfg.f)
+            print(f"[serve] FAULT BUDGET EXCEEDED at round "
+                  f"{self._buffer.round_id}: protocol-faulty clients "
+                  f"{faulty} + {self.cfg.f} declared byzantine > f="
+                  f"{self.cfg.f} — robustness guarantee void")
+            self._fault_budget = FaultBudgetExceeded(
+                f"protocol-faulty clients {faulty} + {self.cfg.f} "
+                f"declared byzantine exceed the budget f={self.cfg.f}: "
+                "the (f, kappa)-robust aggregation guarantee no longer "
+                "covers this service", faulty=faulty, f=self.cfg.f)
+
     # -- checkpointing -----------------------------------------------------
 
     def _checkpoint_tree(self):
+        """The persisted state: params + ServerState + PRNG carry, PLUS
+        the open round's announcement keys and the in-flight RoundBuffer
+        rows — the mid-round recovery payload. The inflight slabs are
+        statically shaped ``[n, D]``/``[n]`` so ``repro.checkpoint`` can
+        restore into a fresh server's tree."""
+        n, P = self.n, self.spec.padded_size
+        inflight_values = np.zeros((n, P), np.float32)
+        inflight_present = np.zeros((n,), bool)
+        inflight_round = np.full((n,), -1, np.int64)
+        inflight_mask = np.zeros((n,), np.uint64)
+        for cid, row in self._buffer.rows().items():
+            inflight_values[cid] = row.update.values
+            inflight_present[cid] = True
+            inflight_round[cid] = row.update.round_id
+            inflight_mask[cid] = np.uint64(row.update.mask_id)
+        ann = self._ann
         return {"params_flat": self.params_flat,
                 "momentum": self.server_state.momentum,
                 "step": self.server_state.step,
-                "key": self._key}
+                "key": self._key,
+                "ann_round": np.int64(-1 if ann is None else ann.round_id),
+                "ann_mask_key": (np.zeros_like(np.asarray(self._key))
+                                 if ann is None
+                                 else np.asarray(ann.mask_key)),
+                "ann_atk_key": (np.zeros_like(np.asarray(self._key))
+                                if ann is None
+                                else np.asarray(ann.atk_key)),
+                "inflight_values": inflight_values,
+                "inflight_present": inflight_present,
+                "inflight_round": inflight_round,
+                "inflight_mask": inflight_mask}
 
     def save_checkpoint(self, path: Optional[str] = None) -> str:
-        """Persist ``{params, ServerState, key}`` + round metadata via
-        ``repro.checkpoint`` (callable any time the server is paused; the
-        batcher calls it between rounds when ``checkpoint_every`` is set)."""
+        """Persist ``{params, ServerState, key}`` + the open round's
+        announcement keys + in-flight buffer rows via ``repro.checkpoint``
+        (callable any time the server is paused; the batcher calls it
+        between rounds when ``checkpoint_every`` is set)."""
         from repro.checkpoint import save
-        if path is None:
-            path = os.path.join(self.serve.checkpoint_dir or ".",
-                                f"serve_round{self._round_id:06d}")
-        return save(path, self._checkpoint_tree(),
-                    metadata={"algo": self.cfg.name, "d": self.d,
-                              "n_workers": self.n},
-                    step=self._round_id)
+        with self._cond:
+            # drain the ingest queue into the buffer first: those updates
+            # were already ACKed "queued" to their clients, so a durable
+            # snapshot must include them (otherwise a mid-round restore
+            # silently loses acknowledged updates)
+            now = time.perf_counter()
+            while True:
+                try:
+                    u = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                self.metrics.observe_decision(
+                    self._buffer.add(u, now),
+                    round_id=self._buffer.round_id)
+            if path is None:
+                path = os.path.join(self.serve.checkpoint_dir or ".",
+                                    f"serve_round{self._round_id:06d}")
+            return save(path, self._checkpoint_tree(),
+                        metadata={"algo": self.cfg.name, "d": self.d,
+                                  "n_workers": self.n},
+                        step=self._round_id)
 
     def restore(self, path: str) -> int:
         """Load a checkpoint into this (not-yet-started) server and reopen
-        its round. Returns the restored round id."""
+        its round. Returns the restored round id.
+
+        Boundary checkpoints (the ``checkpoint_every`` path) restore the
+        NEXT round by advancing the PRNG chain exactly like the live
+        server. A checkpoint taken mid-round additionally carries the open
+        round's announcement keys and the already-ingested buffer rows, so
+        the restored server *resumes the interrupted round*: the identical
+        announcement is re-broadcast (clients' in-flight updates still
+        pass mask validation) and the saved rows are re-fed through the
+        buffer's classification."""
         from repro.checkpoint import latest_step, restore
         if self._threads:
             raise RuntimeError("restore() before start()")
@@ -268,7 +528,37 @@ class ByzantineRobustServer:
         step = latest_step(path)
         self._round_id = int(step) if step is not None else 0
         self._results = {}
-        self._open_round(time.perf_counter())
+        now = time.perf_counter()
+        if int(tree["ann_round"]) == self._round_id:
+            # mid-round checkpoint: the interrupted round's keys were
+            # already split off the chain — rebroadcast the SAME
+            # announcement instead of splitting again
+            self._ann = protocol.RoundAnnouncement(
+                round_id=self._round_id,
+                params=np.asarray(self.params_flat),
+                mask_key=np.asarray(tree["ann_mask_key"]),
+                atk_key=np.asarray(tree["ann_atk_key"]))
+            self._buffer.open(self._round_id, now,
+                              mask_id=self._ann.mask_id)
+            self._ann_open_t = now
+        else:
+            self._open_round(now)
+        # re-feed the in-flight rows through classification (stale rows
+        # re-register their stored mask ids; current-round rows must match
+        # the regenerated mask — identical by PRNG determinism)
+        present = np.asarray(tree["inflight_present"])
+        for cid in np.nonzero(present)[0]:
+            cid = int(cid)
+            rid = int(tree["inflight_round"][cid])
+            mid = int(tree["inflight_mask"][cid])
+            if rid < self._round_id:
+                self._buffer.register_mask(rid, mid)
+            u = protocol.ClientUpdate(
+                client_id=cid, round_id=rid, mask_id=mid,
+                values=np.asarray(tree["inflight_values"][cid]),
+                payload_bytes=self._per_update_bytes)
+            self.metrics.observe_decision(self._buffer.add(u, now),
+                                          round_id=self._round_id)
         return self._round_id
 
     # -- service loops -----------------------------------------------------
@@ -281,32 +571,106 @@ class ByzantineRobustServer:
                 continue
             with self._cond:
                 status = self._buffer.add(u, time.perf_counter())
-                self.metrics.observe_decision(status)
+                self.metrics.observe_decision(status,
+                                              round_id=self._buffer.round_id)
+                if (status in ("accepted", "replaced")
+                        and self._watchdog_round == self._buffer.round_id):
+                    # progress: updates are flowing again, so the round is
+                    # no longer stalled — stop failing waiters fast (the
+                    # recorded event resolves if/when the round fires)
+                    self._watchdog_round = None
                 self._cond.notify_all()
+
+    def _watchdog_check(self, now: float) -> None:
+        """Caller holds ``self._cond``: declare the open round stalled
+        once it has been open past ``watchdog_s`` (at most once per
+        round). Blocked waiters fail loudly instead of hanging."""
+        wd = self.serve.watchdog_s
+        if (wd > 0 and self._watchdog_round != self._round_id
+                and self._watchdog_fired_round != self._round_id
+                and now - self._ann_open_t >= wd):
+            self._watchdog_round = self._round_id
+            self._watchdog_fired_round = self._round_id
+            open_s = now - self._ann_open_t
+            self.metrics.observe_watchdog(
+                self._round_id, open_s, self._buffer.count,
+                self._buffer.quorum)
+            print(f"[serve] WATCHDOG: round {self._round_id} stalled — "
+                  f"{self._buffer.count}/{self._buffer.quorum} updates "
+                  f"after {open_s:.2f}s open "
+                  f"(timeout_s={self.serve.timeout_s})")
+            self._cond.notify_all()
+
+    def _adjust_quorum(self, fired_by: str, round_id: int) -> None:
+        """Caller holds ``self._cond``. Graceful degradation: K
+        consecutive wall-clock firings step the effective quorum down one
+        client toward the 2f+1 floor; consecutive quorum firings at a
+        degraded level step it back up toward the configured quorum."""
+        if self.serve.degrade_after <= 0:
+            return
+        buf = self._buffer
+        floor = max(2 * self.cfg.f + 1, 1)
+        if fired_by == "timeout":
+            self._consec_timeout += 1
+            self._consec_quorum = 0
+            if (self._consec_timeout >= self.serve.degrade_after
+                    and buf.quorum > floor):
+                old = buf.quorum
+                buf.set_quorum(old - 1)
+                self._consec_timeout = 0
+                self.metrics.observe_quorum_transition(
+                    round_id, old, buf.quorum, "degrade")
+                print(f"[serve] quorum degraded {old} -> {buf.quorum} "
+                      f"after {self.serve.degrade_after} consecutive "
+                      f"timeout-fired rounds (floor 2f+1 = {floor})")
+        else:
+            self._consec_quorum += 1
+            self._consec_timeout = 0
+            if (self._consec_quorum >= self.serve.recover_after
+                    and buf.quorum < buf.base_quorum):
+                old = buf.quorum
+                buf.set_quorum(old + 1)
+                self._consec_quorum = 0
+                self.metrics.observe_quorum_transition(
+                    round_id, old, buf.quorum, "recover")
+                print(f"[serve] quorum recovered {old} -> {buf.quorum} "
+                      f"(configured {buf.base_quorum})")
 
     def _batcher_loop(self) -> None:
         while not self._stop.is_set():
             with self._cond:
                 now = time.perf_counter()
                 if not self._buffer.ready(now):
+                    self._watchdog_check(now)
                     if self._buffer.timeout_s > 0:
                         wait = max(1e-3, min(
                             0.02, self._buffer.opened_at
                             + self._buffer.timeout_s - now))
                     else:
                         wait = 0.05
+                    if self.serve.watchdog_s > 0:
+                        wait = min(wait, max(1e-3, self._ann_open_t
+                                             + self.serve.watchdog_s - now))
                     self._cond.wait(timeout=wait)
                     continue
                 fired_by = self._buffer.fired_by()
+                fired_quorum = self._buffer.quorum
+                if self._watchdog_fired_round == self._round_id:
+                    # the stalled round is firing after all: resolve it
+                    self.metrics.resolve_watchdog(self._round_id)
+                if self._watchdog_round == self._round_id:
+                    self._watchdog_round = None
                 rows = self._buffer.drain()
                 opened_at = self._buffer.opened_at
                 round_id = self._round_id
+                self._adjust_quorum(fired_by, round_id)
                 # advance the round *now* so updates arriving during the
                 # apply are classified against the next round (stale for
                 # this one); the next announcement follows after the apply
                 self._round_id = round_id + 1
                 for _, status in self._buffer.open(self._round_id, now):
-                    self.metrics.observe_decision(status)
+                    self.metrics.observe_decision(status,
+                                                  round_id=self._round_id)
 
             # build the padded step inputs + run the jitted step OUTSIDE
             # the lock (ingest keeps draining while XLA runs)
@@ -338,7 +702,8 @@ class ByzantineRobustServer:
                     round_id=round_id, n_updates=len(rows),
                     fired_by=fired_by, staleness=stale,
                     latency_s=t1 - opened_at, step_s=t1 - t0,
-                    payload_bytes=self._per_update_bytes * len(rows)))
+                    payload_bytes=self._per_update_bytes * len(rows),
+                    quorum=fired_quorum))
                 if (self.serve.checkpoint_every
                         and self._rounds_fired
                         % self.serve.checkpoint_every == 0):

@@ -1,0 +1,285 @@
+"""Chaos-harness tests: scenario registry, quorum degradation/recovery,
+liveness watchdog, mid-round crash recovery, and end-to-end chaos runs."""
+
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sweep import grid_scenarios, quadratic_testbed
+from repro.serve import (
+    CHAOS_REGISTRY, ByzantineRobustServer, ChaosScenario, ClientPool,
+    FaultSpec, RetryPolicy, ServeConfig, ServeTimeout, get_chaos,
+    run_chaos, run_service,
+)
+from repro.serve.chaos import describe_chaos
+
+D = 24
+ROUNDS = 8
+
+
+def _cfg(**kw):
+    kw.setdefault("n_honest", 10)
+    kw.setdefault("f", 3)
+    return grid_scenarios(("rosdhb",), ("alie",), ("cwtm",), **kw)[0].cfg
+
+
+def _testbed(cfg):
+    return quadratic_testbed(cfg.n_workers, d=D)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+
+def test_chaos_registry_contents():
+    for name in ("fault-free", "drop-storm", "dup-flood", "corrupt-burst",
+                 "partition-heal", "reset-storm", "straggler-degrade",
+                 "kill-restart", "combined"):
+        assert name in CHAOS_REGISTRY
+        assert get_chaos(name).name == name
+    assert "drop-storm" in describe_chaos()
+    with pytest.raises(ValueError, match="unknown chaos scenario"):
+        get_chaos("volcano")
+
+
+def test_fault_spec_validates_rates():
+    with pytest.raises(ValueError, match="outside"):
+        FaultSpec(drop=1.5)
+    with pytest.raises(ValueError, match="delay_s"):
+        FaultSpec(delay_s=-1.0)
+    assert not FaultSpec().any_faults()
+    assert FaultSpec(corrupt=0.1).any_faults()
+    assert FaultSpec(partitions=((0, 1, (0,)),)).any_faults()
+
+
+# --------------------------------------------------------------------------
+# end-to-end chaos scenarios (small, fast cuts)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["drop-storm", "dup-flood",
+                                  "corrupt-burst", "reset-storm"])
+def test_chaos_scenarios_serve_through_faults(name):
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    res = run_chaos(cfg, params0, batch_fn, loss_fn, get_chaos(name),
+                    ROUNDS, seed=0)
+    assert res.all_rounds_terminated()
+    assert res.step_traces == [1]
+    assert sum(res.injected.values()) > 0       # chaos actually happened
+    assert all(np.isfinite(res.final_params))
+
+
+def test_kill_restart_resumes_bitwise():
+    """A mid-round crash + checkpoint restore on a clean transport must be
+    invisible: same final parameters as the uncrashed run, one compile per
+    server instance."""
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    base = run_chaos(cfg, params0, batch_fn, loss_fn,
+                     get_chaos("fault-free"), ROUNDS, seed=0)
+    kr = run_chaos(cfg, params0, batch_fn, loss_fn,
+                   get_chaos("kill-restart"), ROUNDS, seed=0)
+    assert kr.restarts == 1
+    assert kr.step_traces == [1, 1]
+    np.testing.assert_array_equal(kr.final_params, base.final_params)
+
+
+def test_combined_scenario_converges_and_terminates():
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, targets = _testbed(cfg)
+    base = run_chaos(cfg, params0, batch_fn, loss_fn,
+                     get_chaos("fault-free"), 12, seed=0)
+    cb = run_chaos(cfg, params0, batch_fn, loss_fn, get_chaos("combined"),
+                   12, seed=0)
+    assert cb.all_rounds_terminated() and cb.restarts == 1
+    assert all(t == 1 for t in cb.step_traces)
+    w0 = base.final_params[:D]
+    w1 = cb.final_params[:D]
+    t = np.asarray(targets)[cfg.f:]
+    l0 = 0.5 * np.mean(np.sum((w0[None] - t) ** 2, axis=1))
+    l1 = 0.5 * np.mean(np.sum((w1[None] - t) ** 2, axis=1))
+    assert abs(l1 - l0) / max(abs(l0), 1e-12) < 0.25  # small-cut tolerance
+
+
+# --------------------------------------------------------------------------
+# graceful quorum degradation
+# --------------------------------------------------------------------------
+
+
+def test_quorum_degrades_and_recovers():
+    """A partition forces wall-clock rounds -> quorum steps down; the heal
+    brings quorum rounds back -> quorum steps back up. Both transitions
+    are logged with bounds [2f+1, configured]."""
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    sc = ChaosScenario(
+        "test-degrade", "partition window drives degradation",
+        faults=FaultSpec(partitions=((1, 4, (9, 10, 11, 12)),)),
+        timeout_s=0.1, staleness_window=2, degrade_after=1,
+        recover_after=1, retry=RetryPolicy(max_attempts=2,
+                                           backoff_base_s=0.0))
+    res = run_chaos(cfg, params0, batch_fn, loss_fn, sc, 8, seed=0)
+    trans = res.summaries[-1]["quorum_transitions"]
+    reasons = [t["reason"] for t in trans]
+    assert "degrade" in reasons and "recover" in reasons
+    for t in trans:
+        assert 2 * cfg.f + 1 <= t["new"] <= cfg.n_workers
+    # the quorum histogram shows rounds fired at more than one level
+    assert len(res.summaries[-1]["quorum_histogram"]) > 1
+    assert res.all_rounds_terminated()
+
+
+def test_degradation_floor_is_2f_plus_1():
+    from repro.serve import RoundBuffer
+    buf = RoundBuffer(n_clients=13, f=3, quorum=8, timeout_s=0.1)
+    buf.set_quorum(7)                       # the floor itself is fine
+    with pytest.raises(ValueError, match="floor"):
+        buf.set_quorum(6)
+    assert buf.base_quorum == 8 and buf.quorum == 7
+
+
+def test_degradation_off_by_default():
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    sc = ChaosScenario(
+        "test-no-degrade", "timeout rounds but degradation off",
+        faults=FaultSpec(partitions=((0, 8, (12,)),)),
+        timeout_s=0.05, staleness_window=2, degrade_after=0,
+        retry=RetryPolicy(max_attempts=2, backoff_base_s=0.0))
+    res = run_chaos(cfg, params0, batch_fn, loss_fn, sc, 4, seed=0)
+    assert res.summaries[-1]["quorum_transitions"] == []
+
+
+# --------------------------------------------------------------------------
+# liveness watchdog
+# --------------------------------------------------------------------------
+
+
+def test_watchdog_fails_stalled_round_loudly():
+    """No updates + no round timeout: without the watchdog this would hang
+    to the caller's full deadline; with it, waiters fail fast and the
+    event is recorded unresolved."""
+    cfg = _cfg()
+    _, params0, _, _ = _testbed(cfg)
+    server = ByzantineRobustServer(
+        cfg, params0, ServeConfig(watchdog_s=0.1), seed=0)
+    server.start()
+    try:
+        t0 = time.perf_counter()
+        with pytest.raises(ServeTimeout) as ei:
+            server.wait_round(0, timeout=30.0)
+        assert time.perf_counter() - t0 < 5.0   # failed fast, not at 30s
+        assert ei.value.reason == "watchdog"
+        wd = server.metrics.watchdog_summary()
+        assert wd["fired"] == 1 and wd["unresolved"] == 1
+    finally:
+        server.stop()
+
+
+def test_watchdog_event_resolves_when_round_fires():
+    """The round stalls past watchdog_s but then completes: the event is
+    marked resolved and serving continues."""
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    server = ByzantineRobustServer(
+        cfg, params0, ServeConfig(watchdog_s=0.15), seed=0)
+    pool = ClientPool(loss_fn, params0, cfg, batch_fn)
+    server.start()
+    try:
+        ann = server.announce(timeout=10.0)
+        time.sleep(0.3)                         # let the watchdog fire
+        for s in pool.round_payloads(ann):
+            server.submit(s.update)
+        res = server.wait_round(0, timeout=10.0)
+        assert res.n_updates == cfg.n_workers
+        wd = server.metrics.watchdog_summary()
+        assert wd == {"fired": 1, "resolved": 1, "unresolved": 0}
+    finally:
+        server.stop()
+
+
+# --------------------------------------------------------------------------
+# mid-round crash recovery (unit level)
+# --------------------------------------------------------------------------
+
+
+def test_mid_round_checkpoint_restores_announcement_and_rows(tmp_path):
+    """A checkpoint taken mid-round carries the open round's announcement
+    keys and buffered rows; restore rebuilds the SAME announcement (no
+    key-chain re-split) and re-feeds the rows."""
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    server = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    pool = ClientPool(loss_fn, params0, cfg, batch_fn)
+    server.start()
+    try:
+        ann = server.announce(timeout=10.0)
+        sched = pool.round_payloads(ann)
+        for s in sched[:5]:
+            server.submit(s.update)
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            with server._cond:
+                if server._buffer.count == 5:
+                    break
+            time.sleep(0.01)
+        path = server.save_checkpoint(str(tmp_path / "midround"))
+    finally:
+        server.stop()
+
+    restored = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=77)
+    assert restored.restore(path) == 0
+    ann2 = restored.announce(timeout=0)  # already open, no wait needed
+    assert ann2.round_id == ann.round_id
+    np.testing.assert_array_equal(ann2.mask_key, ann.mask_key)
+    np.testing.assert_array_equal(ann2.atk_key, ann.atk_key)
+    np.testing.assert_array_equal(ann2.params, ann.params)
+    with restored._cond:
+        assert restored._buffer.count == 5
+    restored.start()
+    try:
+        for s in sched[5:]:
+            restored.submit(s.update)
+        res = restored.wait_round(0, timeout=10.0)
+        assert res.n_updates == cfg.n_workers
+    finally:
+        restored.stop()
+
+
+def test_boundary_checkpoint_still_restores_next_round(tmp_path):
+    """The pre-existing boundary semantics survive the tree extension:
+    checkpoint_every checkpoints restore the NEXT round via the normal
+    key-chain split (covered bit-for-bit by test_serve.py's kill-and-
+    resume test; here we just pin the round arithmetic)."""
+    import glob
+    import os
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    serve = ServeConfig(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    s = ByzantineRobustServer(cfg, params0, serve, seed=0)
+    run_service(s, ClientPool(loss_fn, params0, cfg, batch_fn), 4)
+    ckpt = sorted(glob.glob(os.path.join(str(tmp_path), "*.npz")))[-1]
+    s2 = ByzantineRobustServer(cfg, params0, serve, seed=1)
+    rid = s2.restore(ckpt.replace(".npz", ""))
+    assert rid == 4
+    with s2._cond:
+        assert s2._buffer.count == 0            # boundary: nothing in flight
+        assert s2._ann.round_id == 4
+
+
+# --------------------------------------------------------------------------
+# chaos over TCP (one fast end-to-end cut)
+# --------------------------------------------------------------------------
+
+
+def test_chaos_over_tcp_with_faults():
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    sc = dataclasses.replace(get_chaos("drop-storm"), transport="tcp")
+    res = run_chaos(cfg, params0, batch_fn, loss_fn, sc, 6, seed=0)
+    assert res.all_rounds_terminated()
+    assert res.step_traces == [1]

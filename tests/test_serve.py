@@ -237,6 +237,90 @@ def test_buffer_staleness_and_duplicate_rules():
     assert [(u.client_id, s) for u, s in refed] == [(3, "accepted")]
 
 
+def test_staleness_exactly_at_window_boundary():
+    """k == staleness_window is IN the window (accepted, discounted);
+    k == window + 1 is the first dropped lateness — the boundary is
+    inclusive, pinned here so it can never silently flip."""
+    buf = RoundBuffer(n_clients=13, f=3, quorum=13, timeout_s=0.0,
+                      staleness_window=3, stale_policy="discount")
+    for r in range(8):
+        buf._mask_ids[r] = r
+    buf.open(5, now=0.0, mask_id=5)
+    buf._mask_ids.update({r: r for r in range(8)})
+    at_boundary = ClientUpdate(client_id=1, round_id=2, mask_id=2,
+                               values=np.zeros(4), payload_bytes=1)
+    past_boundary = ClientUpdate(client_id=2, round_id=1, mask_id=1,
+                                 values=np.zeros(4), payload_bytes=1)
+    assert buf.add(at_boundary, 0.0) == "accepted"       # k = 3 = window
+    assert buf.rows()[1].staleness == 3
+    assert buf.add(past_boundary, 0.0) == "stale_dropped"  # k = 4
+
+
+def test_beta_pow_underflow_at_large_staleness():
+    """beta^k in float32 underflows to exactly 0.0 (not NaN/inf) at large
+    k: an absurdly stale update inside an absurdly wide window contributes
+    NOTHING to the aggregate instead of poisoning it. The batcher computes
+    the discount exactly like this (np.float32 beta ** int staleness)."""
+    beta = np.float32(0.9)
+    with np.errstate(under="ignore"):
+        tiny = beta ** 400          # 0.9^400 ~ 5e-19: denormal-ish, finite
+        zero = beta ** 5000         # far below float32 denormal range
+    assert np.isfinite(tiny) and tiny >= 0
+    assert zero == np.float32(0.0) and not np.isnan(zero)
+    # the buffer itself accepts the huge-k update when the window allows
+    buf = RoundBuffer(n_clients=13, f=3, quorum=13, timeout_s=0.0,
+                      staleness_window=5000, stale_policy="discount")
+    buf.open(5000, now=0.0, mask_id=0)
+    buf._mask_ids[0] = 0
+    u = ClientUpdate(client_id=0, round_id=0, mask_id=0,
+                     values=np.ones(4), payload_bytes=1)
+    assert buf.add(u, 0.0) == "accepted"
+    assert buf.rows()[0].staleness == 5000
+
+
+def test_quorum_exactly_2f_plus_1_with_f_clients_silent():
+    """quorum = 2f+1 (the robustness floor) with all f byzantine clients
+    permanently silent: every round still fires BY QUORUM from honest
+    updates alone — the floor is reachable without any byzantine report."""
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    serve = ServeConfig(quorum=2 * cfg.f + 1, timeout_s=0.0)
+    # silent = scheduled beyond any window, with drop policy: never lands
+    beh = ClientBehavior(stragglers=tuple(range(cfg.f)),
+                         straggle_rounds=10_000)
+    server, _, results = _run_serve(cfg, loss_fn, params0, batch_fn, 6,
+                                    serve=serve, behavior=beh)
+    assert len(results) == 6
+    for r in results:
+        assert r.fired_by == "quorum"
+        assert r.n_updates >= 2 * cfg.f + 1
+        assert all(c >= cfg.f for c in r.client_ids)   # honest-only rounds
+    assert server.step_traces == 1
+
+
+def test_round_decision_histograms_surface_classifications():
+    """Satellite: the per-round classification counters (duplicate/stale/
+    future/bad_mask...) show up as histograms in the metrics summary."""
+    cfg = grid_scenarios(n_honest=10, f=3)[0].cfg
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    serve = ServeConfig(quorum=cfg.n_workers - 2, timeout_s=0.05,
+                        staleness_window=2)
+    beh = ClientBehavior(stragglers=(11, 12), straggle_rounds=1)
+    server, _, _ = _run_serve(cfg, loss_fn, params0, batch_fn, 8,
+                              serve=serve, behavior=beh)
+    s = server.metrics.summary()
+    hists = s["decision_round_histograms"]
+    assert "accepted" in hists
+    # every status that was observed at all has a per-round histogram
+    for status in s["ingest_decisions"]:
+        assert status in hists
+        total = sum(k_count * v for k_str, v in hists[status].items()
+                    for k_count in [int(k_str)])
+        assert total == s["ingest_decisions"][status]
+    # each fired round records the quorum it fired under
+    assert sum(s["quorum_histogram"].values()) == s["rounds"]
+
+
 def test_mask_id_is_stable():
     k = jax.random.PRNGKey(7)
     assert mask_id(np.asarray(k)) == mask_id(np.asarray(k))

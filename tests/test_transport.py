@@ -1,0 +1,396 @@
+"""Transport-boundary tests: frame codec roundtrips, checksum
+attribution, loopback/TCP parity with the in-process server, retrying
+clients, deterministic fault plans, and the protocol-fault budget."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sweep import grid_scenarios, quadratic_testbed
+from repro.serve import (
+    ByzantineRobustServer, ClientGaveUp, ClientPool, FaultPlan, FaultSpec,
+    FaultyEndpoint, LoopbackTransport, RetryingClient, RetryPolicy,
+    ServeConfig, ServeTimeout, TcpTransport, TransportReset,
+    TransportTimeout, get_chaos, make_transport, run_chaos, run_service,
+)
+from repro.serve import protocol
+from repro.serve.server import FaultBudgetExceeded
+from repro.serve.transport import ServerBinding
+
+D = 32
+ROUNDS = 8
+
+
+def _cfg(**kw):
+    kw.setdefault("n_honest", 10)
+    kw.setdefault("f", 3)
+    return grid_scenarios(("rosdhb",), ("alie",), ("cwtm",), **kw)[0].cfg
+
+
+def _testbed(cfg):
+    return quadratic_testbed(cfg.n_workers, d=D)
+
+
+# --------------------------------------------------------------------------
+# frame codec
+# --------------------------------------------------------------------------
+
+
+def test_frame_roundtrip_all_message_types():
+    ann = protocol.RoundAnnouncement(
+        round_id=7, params=np.arange(11, dtype=np.float32),
+        mask_key=np.asarray([1, 2], np.uint32),
+        atk_key=np.asarray([3, 4], np.uint32))
+    raw = protocol.encode_announcement(ann)
+    mt, sender, payload = protocol.decode_frame(raw)
+    assert (mt, sender) == (protocol.MSG_ANNOUNCE, protocol.SERVER_SENDER)
+    got = protocol.decode_announcement(payload)
+    assert got.round_id == 7 and got.mask_id == ann.mask_id
+    np.testing.assert_array_equal(got.params, ann.params)  # bit-for-bit
+    np.testing.assert_array_equal(got.mask_key, ann.mask_key)
+    np.testing.assert_array_equal(got.atk_key, ann.atk_key)
+
+    u = protocol.ClientUpdate(
+        client_id=5, round_id=7, mask_id=ann.mask_id,
+        values=np.linspace(-1, 1, 11).astype(np.float32),
+        payload_bytes=123, sent_at=4.5)
+    raw = protocol.encode_update(u)
+    mt, sender, payload = protocol.decode_frame(raw)
+    assert (mt, sender) == (protocol.MSG_UPDATE, 5)
+    got = protocol.decode_update(payload, sender)
+    assert (got.client_id, got.round_id, got.mask_id,
+            got.payload_bytes, got.sent_at) == (5, 7, ann.mask_id, 123, 4.5)
+    np.testing.assert_array_equal(got.values, u.values)
+
+    raw = protocol.encode_announce_req(3, client_id=9)
+    mt, sender, payload = protocol.decode_frame(raw)
+    assert (mt, sender) == (protocol.MSG_ANNOUNCE_REQ, 9)
+    assert protocol.decode_announce_req(payload) == 3
+
+    raw = protocol.encode_ack(11, "queued")
+    mt, _, payload = protocol.decode_frame(raw)
+    assert mt == protocol.MSG_ACK
+    assert protocol.decode_ack(payload) == (11, "queued")
+
+
+def test_corrupt_payload_is_bad_checksum_with_sender():
+    u = protocol.ClientUpdate(client_id=4, round_id=2, mask_id=1,
+                              values=np.ones(8, np.float32),
+                              payload_bytes=32)
+    raw = bytearray(protocol.encode_update(u))
+    raw[protocol.HEADER_SIZE + 9] ^= 0xFF
+    with pytest.raises(protocol.BadChecksum) as ei:
+        protocol.decode_frame(bytes(raw))
+    assert ei.value.sender == 4      # header intact: fault is attributable
+    # a mangled header is NOT attributable — plain FrameError
+    raw2 = bytearray(protocol.encode_update(u))
+    raw2[0] ^= 0xFF
+    with pytest.raises(protocol.FrameError) as ei2:
+        protocol.decode_frame(bytes(raw2))
+    assert not isinstance(ei2.value, protocol.BadChecksum)
+
+
+def test_frame_length_splits_corrupt_payload():
+    """Stream framing must survive payload corruption: the length field
+    lives in the (intact) header, CRC is checked later by the binding."""
+    u = protocol.ClientUpdate(client_id=0, round_id=0, mask_id=0,
+                              values=np.zeros(8, np.float32),
+                              payload_bytes=32)
+    raw = bytearray(protocol.encode_update(u))
+    raw[protocol.HEADER_SIZE] ^= 0xFF
+    assert protocol.frame_length(bytes(raw[:protocol.HEADER_SIZE])) \
+        == len(raw)
+
+
+# --------------------------------------------------------------------------
+# transport parity: the framed path is bit-for-bit the in-process server
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["loopback", "tcp"])
+def test_transport_parity_with_in_process_server(transport):
+    """Fault-free chaos over the real framed transport == run_service on
+    the same seed, bit for bit (the tier-1 loopback smoke; TCP rides the
+    same gate over real sockets)."""
+    import dataclasses
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    server = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    pool = ClientPool(loss_fn, params0, cfg, batch_fn)
+    run_service(server, pool, ROUNDS)
+    chaos = dataclasses.replace(get_chaos("fault-free"),
+                                transport=transport)
+    res = run_chaos(cfg, params0, batch_fn, loss_fn, chaos, ROUNDS, seed=0)
+    np.testing.assert_array_equal(res.final_params,
+                                  np.asarray(server.params_flat))
+    assert res.step_traces == [1]
+    assert res.all_rounds_terminated()
+
+
+def test_tcp_rebind_keeps_port():
+    cfg = _cfg()
+    _, params0, _, _ = _testbed(cfg)
+    s1 = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    t = TcpTransport(s1)
+    addr = t.address
+    ep = t.connect(0)
+    t.unbind()
+    with pytest.raises((TransportReset, TransportTimeout)):
+        ep.request(protocol.encode_announce_req(0, 0))
+    s2 = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    t.bind(s2)
+    assert t.address == addr        # endpoints survive the restart
+    t.close()
+
+
+def test_loopback_unbound_raises_reset():
+    t = LoopbackTransport()
+    ep = t.connect(0)
+    with pytest.raises(TransportReset):
+        ep.request(protocol.encode_announce_req(0, 0))
+
+
+def test_make_transport_unknown_kind():
+    with pytest.raises(ValueError, match="unknown transport"):
+        make_transport("carrier-pigeon")
+
+
+# --------------------------------------------------------------------------
+# retrying clients
+# --------------------------------------------------------------------------
+
+
+class _FlakyEndpoint:
+    """Fails the first k requests, then delegates."""
+
+    def __init__(self, inner, fail_times):
+        self.inner = inner
+        self.fail_times = fail_times
+        self.calls = 0
+
+    def request(self, raw, **ctx):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise TransportTimeout(f"flaky ({self.calls})")
+        return self.inner.request(raw, **ctx)
+
+    def close(self):
+        self.inner.close()
+
+
+def test_retrying_client_survives_transient_faults():
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    server = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    server.start()
+    try:
+        t = LoopbackTransport(server)
+        sleeps = []
+        c = RetryingClient(
+            _FlakyEndpoint(t.connect(3), fail_times=3), 3,
+            RetryPolicy(max_attempts=5, backoff_base_s=0.01),
+            sleep=sleeps.append)
+        ann = c.fetch_announcement(0)
+        assert ann.round_id == 0
+        assert c.stats["retries"] == 3
+        # exponential backoff: each sleep at least doubles the base floor
+        assert len(sleeps) == 3
+        assert sleeps[0] >= 0.01 and sleeps[1] >= 0.02 and sleeps[2] >= 0.04
+    finally:
+        server.stop()
+
+
+def test_retrying_client_gives_up_loudly():
+    t = LoopbackTransport()              # unbound: every request resets
+    c = RetryingClient(t.connect(1), 1,
+                       RetryPolicy(max_attempts=3, backoff_base_s=0.0))
+    with pytest.raises(ClientGaveUp) as ei:
+        c.fetch_announcement(0)
+    assert ei.value.attempts == 3 and ei.value.client_id == 1
+    assert "TransportReset" in ei.value.last_error
+
+
+def test_retrying_client_resubmission_is_idempotent():
+    """Submitting the same update twice (ack lost -> client retried) must
+    land exactly one buffered row."""
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    server = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    server.start()
+    try:
+        t = LoopbackTransport(server)
+        pool = ClientPool(loss_fn, params0, cfg, batch_fn)
+        ann = server.announce(timeout=10.0)
+        sched = pool.round_payloads(ann)
+        c = RetryingClient(t.connect(5), 5, RetryPolicy(max_attempts=2))
+        u = sched[5].update
+        assert c.submit(u) == "queued"
+        assert c.submit(u) == "queued"   # the duplicate is absorbed
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            with server._cond:
+                if server._buffer.count == 1:
+                    break
+            time.sleep(0.01)
+        with server._cond:
+            assert server._buffer.count == 1
+        assert server.metrics.decisions.get("duplicate", 0) == 1
+    finally:
+        server.stop()
+
+
+def test_retry_backoff_is_seeded_deterministic():
+    p = RetryPolicy(seed=42)
+    r1 = np.random.default_rng((42, 7))
+    r2 = np.random.default_rng((42, 7))
+    a = [p.backoff_s(7, k, r1) for k in range(4)]
+    b = [p.backoff_s(7, k, r2) for k in range(4)]
+    assert a == b
+
+
+# --------------------------------------------------------------------------
+# deterministic fault plans
+# --------------------------------------------------------------------------
+
+
+def test_fault_plan_is_replayable_and_order_independent():
+    spec = FaultSpec(drop=0.3, duplicate=0.3, corrupt=0.3, reorder=0.2,
+                     delay=0.2, reset=0.2)
+    p1, p2 = FaultPlan(spec, seed=9), FaultPlan(spec, seed=9)
+    coords = [(c, r, op, a) for c in range(5) for r in range(5)
+              for op in ("announce", "update") for a in range(3)]
+    forward = [p1.decide(*c) for c in coords]
+    backward = [p2.decide(*c) for c in reversed(coords)]
+    assert forward == list(reversed(backward))
+    # a different seed draws a different schedule
+    p3 = FaultPlan(spec, seed=10)
+    assert [p3.decide(*c) for c in coords] != forward
+
+
+def test_fault_plan_corrupt_bytes_deterministic_and_payload_only():
+    plan = FaultPlan(FaultSpec(corrupt=1.0), seed=0)
+    u = protocol.ClientUpdate(client_id=2, round_id=4, mask_id=0,
+                              values=np.ones(16, np.float32),
+                              payload_bytes=64)
+    raw = protocol.encode_update(u)
+    c1 = plan.corrupt_bytes(raw, 2, 4, "update")
+    c2 = plan.corrupt_bytes(raw, 2, 4, "update")
+    assert c1 == c2 and c1 != raw
+    assert c1[:protocol.HEADER_SIZE] == raw[:protocol.HEADER_SIZE]
+    with pytest.raises(protocol.BadChecksum) as ei:
+        protocol.decode_frame(c1)
+    assert ei.value.sender == 2
+
+
+def test_fault_plan_partition_windows():
+    plan = FaultPlan(FaultSpec(partitions=((2, 5, (1, 3)),)), seed=0)
+    assert plan.decide(1, 2, "update").partitioned
+    assert plan.decide(3, 4, "announce").partitioned
+    assert not plan.decide(1, 5, "update").partitioned   # window end
+    assert not plan.decide(2, 3, "update").partitioned   # other client
+    assert plan.decide(1, 1, "update").clean
+
+
+def test_faulty_endpoint_drop_and_reset_surface_as_transport_errors():
+    inner_calls = []
+
+    class _Sink:
+        def request(self, raw, **ctx):
+            inner_calls.append(raw)
+            return protocol.encode_ack(0, "queued")
+
+        def close(self):
+            pass
+
+    ep = FaultyEndpoint(_Sink(), 0, FaultPlan(FaultSpec(drop=1.0)))
+    with pytest.raises(TransportTimeout):
+        ep.request(b"x", round_id=0, op="update", attempt=0)
+    assert not inner_calls and ep.injected["drop"] == 1
+
+    ep = FaultyEndpoint(_Sink(), 0, FaultPlan(FaultSpec(duplicate=1.0)))
+    ep.request(b"x", round_id=0, op="update", attempt=0)
+    assert len(inner_calls) == 2 and ep.injected["duplicate"] == 1
+
+
+# --------------------------------------------------------------------------
+# protocol-fault budget + typed timeouts
+# --------------------------------------------------------------------------
+
+
+def _corrupt_update_frame(cfg, params0, client_id):
+    n_pad = ByzantineRobustServer(cfg, params0).spec.padded_size
+    u = protocol.ClientUpdate(client_id=client_id, round_id=0, mask_id=0,
+                              values=np.zeros(n_pad, np.float32),
+                              payload_bytes=1)
+    raw = bytearray(protocol.encode_update(u))
+    raw[protocol.HEADER_SIZE + 3] ^= 0xFF
+    return bytes(raw)
+
+
+def test_persistent_corruption_breaches_fault_budget():
+    """One HONEST client corrupting past fault_tolerance joins the f
+    declared-Byzantine rows: f+1 implicated > f -> loud rejection."""
+    cfg = _cfg()
+    _, params0, _, _ = _testbed(cfg)
+    server = ByzantineRobustServer(
+        cfg, params0, ServeConfig(fault_tolerance=3), seed=0)
+    server.start()
+    try:
+        binding = ServerBinding(server)
+        bad = _corrupt_update_frame(cfg, params0, client_id=cfg.f + 1)
+        for _ in range(3):
+            _, _, payload = protocol.decode_frame(binding.handle(bad))
+            assert protocol.decode_ack(payload)[1] == "bad_checksum"
+        assert server.protocol_faulty == (cfg.f + 1,)
+        with pytest.raises(FaultBudgetExceeded) as ei:
+            server.wait_round(0, timeout=1.0)
+        assert ei.value.faulty == (cfg.f + 1,) and ei.value.f == cfg.f
+        assert server.metrics.fault_budget_events
+    finally:
+        server.stop()
+
+
+def test_valid_frame_clears_protocol_fault_state():
+    """Transient corruption repaired by retransmission never accumulates:
+    a valid update resets the client's consecutive-fault count."""
+    cfg = _cfg()
+    loss_fn, params0, batch_fn, _ = _testbed(cfg)
+    server = ByzantineRobustServer(
+        cfg, params0, ServeConfig(fault_tolerance=2), seed=0)
+    server.start()
+    try:
+        binding = ServerBinding(server)
+        cid = cfg.f + 2
+        bad = _corrupt_update_frame(cfg, params0, cid)
+        binding.handle(bad)                       # 1 consecutive fault
+        pool = ClientPool(loss_fn, params0, cfg, batch_fn)
+        ann = server.announce(timeout=10.0)
+        good = protocol.encode_update(pool.round_payloads(ann)[cid].update)
+        _, _, payload = protocol.decode_frame(binding.handle(good))
+        assert protocol.decode_ack(payload)[1] == "queued"
+        binding.handle(bad)                       # back to 1, not 2
+        assert server.protocol_faulty == ()
+    finally:
+        server.stop()
+
+
+def test_announce_and_wait_round_raise_typed_serve_timeout():
+    cfg = _cfg()
+    _, params0, _, _ = _testbed(cfg)
+    server = ByzantineRobustServer(cfg, params0, ServeConfig(), seed=0)
+    server.start()
+    try:
+        with pytest.raises(ServeTimeout) as ei:
+            server.wait_round(0, timeout=0.15)
+        e = ei.value
+        assert isinstance(e, TimeoutError)        # old handlers still work
+        assert e.round_id == 0 and e.reason == "deadline"
+        assert e.quorum == cfg.n_workers == e.base_quorum
+        assert e.buffer_count == 0 and isinstance(e.decisions, dict)
+        with pytest.raises(ServeTimeout) as ei2:
+            server.announce(timeout=0.1, min_round=99)
+        assert ei2.value.reason == "deadline"
+    finally:
+        server.stop()
